@@ -1,0 +1,64 @@
+"""Beyond-paper ablation: coding-redundancy ratio vs completion-delay tail.
+
+Theorem 1 fixes redundancy at 2× (the Markov optimum).  On TPU the encode
+redundancy is MXU compute (DESIGN.md §2), so the right operating point
+trades encode FLOPs against the straggler tail.  We rescale the Thm-1 loads
+by ρ ∈ [1.05, 3] (keeping proportions ∝ 1/θ) and report mean / p95 / p99
+completion and the encode-FLOPs multiplier — under the fitted law and under
+the heavy-tail (measured-like) world where redundancy matters most.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (Plan, iterated_greedy, plan_from_assignment,
+                        large_scale_scenario)
+from repro.sim import simulate_plan
+
+from .common import TRIALS, emit, save_rows, timed
+
+RHOS = (1.05, 1.25, 1.5, 2.0, 2.5, 3.0)
+
+
+def run(trials: int = TRIALS // 3, seed: int = 0):
+    sc = large_scale_scenario(seed)
+    base = plan_from_assignment(sc, iterated_greedy(sc, rng=seed))
+    rows = []
+
+    def sweep():
+        out = {}
+        for rho in RHOS:
+            l = base.l / base.l.sum(axis=1, keepdims=True) * (rho * sc.L[:, None])
+            plan = Plan(k=base.k, b=base.b, l=l,
+                        t_per_master=base.t_per_master,
+                        method=f"thm1-rho{rho}")
+            for world, kw in (("fitted", {}),
+                              ("heavy", dict(straggle_p=0.05,
+                                             straggle_factor=8.0))):
+                r = simulate_plan(sc, plan, trials=trials, rng=seed + 1,
+                                  keep_samples=True, **kw)
+                rows.append((rho, world, round(r.overall_mean, 1),
+                             round(r.quantile(0.95), 1),
+                             round(r.quantile(0.99), 1)))
+                out[(rho, world)] = r.overall_mean
+        return out
+
+    out, t_us = timed(sweep)
+    save_rows("ablation_redundancy.csv",
+              "rho,world,mean_ms,p95_ms,p99_ms", rows)
+    best_fit = min(RHOS, key=lambda r: out[(r, "fitted")])
+    best_heavy = min(RHOS, key=lambda r: out[(r, "heavy")])
+    emit("ablation/redundancy", t_us,
+         f"best_rho_fitted={best_fit};best_rho_heavytail={best_heavy};"
+         f"mean_at_2x_fitted={out[(2.0, 'fitted')]:.0f}ms;"
+         f"mean_at_2x_heavy={out[(2.0, 'heavy')]:.0f}ms")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Beyond-paper benchmark: the end-to-end coded execution engine + kernels.
+
+(a) CodedExecutor numerical round-trip at matrix scale (encode → straggle →
+    k-of-n decode) with fault injection;
+(b) Pallas kernel throughput (interpret mode on CPU: correctness-scale
+    numbers, the real targets are TPU);
+(c) coded gradient aggregation k-of-n reconstruction error.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (Scenario, iterated_greedy, plan_from_assignment,
+                        small_scale_scenario)
+from repro.runtime import CodedExecutor
+from repro.runtime.coded_grads import coded_grad_aggregate, encode_grad_shards
+
+from .common import emit, timed
+
+
+def run_executor(seed: int = 0):
+    sc = small_scale_scenario(seed)
+    plan = plan_from_assignment(sc, iterated_greedy(sc, rng=seed))
+    # shrink loads to a fast matrix size while keeping proportions
+    plan.l[:] = plan.l / sc.L[:, None] * 512
+    sc = Scenario(a=sc.a, u=sc.u, gamma=sc.gamma, L=np.full(sc.M, 512.0))
+    ex = CodedExecutor(sc, plan, rng=seed)
+    rng = np.random.default_rng(seed)
+    A = [rng.normal(size=(512, 128)) for _ in range(sc.M)]
+    x = [rng.normal(size=128) for _ in range(sc.M)]
+
+    def go():
+        return ex.run(A, x, dead_workers=(1,))
+
+    (res, report), t_us = timed(go)
+    emit("coded_exec/roundtrip", t_us,
+         f"decode_ok={bool(report.decode_ok.all())};"
+         f"max_err={report.max_err.max():.2e};"
+         f"completion_ms={report.overall:.1f};dead_worker_survived=True")
+
+
+def run_kernels(seed: int = 0):
+    import jax.numpy as jnp
+    from repro.kernels import coded_matvec, mds_encode, ref
+    rng = np.random.default_rng(seed)
+    G = jnp.asarray(np.vstack([np.eye(256),
+                               rng.normal(0, 1 / 16, size=(256, 256))]),
+                    jnp.float32)
+    A = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    (enc, t_enc) = timed(lambda: np.asarray(mds_encode(G, A)))
+    err = float(np.abs(enc - np.asarray(ref.mds_encode_ref(G, A))).max())
+    emit("kernels/mds_encode_interp", t_enc, f"max_err={err:.2e};shape=512x256x512")
+    x = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+    (y, t_mv) = timed(lambda: np.asarray(coded_matvec(jnp.asarray(enc), x)))
+    err2 = float(np.abs(y - np.asarray(ref.coded_matvec_ref(jnp.asarray(enc), x))).max())
+    emit("kernels/coded_matvec_interp", t_mv, f"max_err={err2:.2e}")
+
+
+def run_coded_grads(seed: int = 0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    grads = [{"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+             for _ in range(4)]
+
+    def go():
+        coded, ctx = encode_grad_shards(grads, n_coded=6, rng=seed)
+        # drop shards 0 and 2 (stragglers) — any 4 of 6 reconstruct
+        return coded_grad_aggregate(coded, ctx, arrived=[1, 3, 4, 5])
+
+    agg, t_us = timed(go)
+    truth = sum(np.asarray(g["w"]) for g in grads)
+    err = float(np.abs(np.asarray(agg["w"]) - truth).max() / np.abs(truth).max())
+    emit("coded_grads/4of6", t_us, f"rel_err={err:.2e};stragglers_dropped=2")
+
+
+def main():
+    run_executor()
+    run_kernels()
+    run_coded_grads()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/figures")
+TRIALS = int(os.environ.get("REPRO_TRIALS", "60000"))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """CSV row per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def save_rows(fname: str, header: str, rows):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, fname)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

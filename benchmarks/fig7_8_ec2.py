@@ -1,0 +1,88 @@
+"""Paper Fig. 7 & 8 — EC2-measured delay distributions and the 4-master /
+50-worker evaluation on them.
+
+Fig. 7: we regenerate 'measured' samples from the paper's fitted t2.micro /
+c5.large shifted exponentials, then re-fit with our estimator — round-trip
+parameter recovery validates the fitting path.  Fig. 8: 40 t2.micro + 10
+c5.large workers, computation-delay dominant; paper reports up to 82% / 30%
+delay reduction vs uncoded / coded.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (coded_uniform, fractional_greedy, iterated_greedy,
+                        plan_from_assignment, sca_enhance_plan,
+                        uncoded_uniform)
+from repro.sim import simulate_plan
+from repro.sim.cluster import (EC2_C5_LARGE, EC2_T2_MICRO, ec2_cluster,
+                               fit_shifted_exponential,
+                               sample_shifted_exponential)
+
+from .common import TRIALS, emit, save_rows, timed
+
+
+def run_fig7(n: int = 200_000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    errs = []
+    for name, spec in (("t2.micro", EC2_T2_MICRO), ("c5.large", EC2_C5_LARGE)):
+        samples = sample_shifted_exponential(rng, n, spec["a"], spec["u"])
+        (a_hat, u_hat), t_us = timed(fit_shifted_exponential, samples)
+        rows.append((name, spec["a"], round(a_hat, 4), spec["u"],
+                     round(u_hat, 4)))
+        errs.append(abs(a_hat - spec["a"]) / spec["a"])
+        errs.append(abs(u_hat - spec["u"]) / spec["u"])
+    save_rows("fig7_ec2_fit.csv", "instance,a_true,a_fit,u_true,u_fit", rows)
+    emit("fig7/ec2_fit", t_us, f"max_param_err={max(errs):.3%}")
+
+
+def run_fig8(trials: int = TRIALS, seed: int = 0):
+    profile = ec2_cluster(N=50, n_fast=10, rng=seed)
+    sc = profile.scenario(M=4, L=1e4)
+
+    def build():
+        k_it = iterated_greedy(sc, mode="comp_exact", rng=seed)
+        k_s = None
+        from repro.core import simple_greedy
+        k_s = simple_greedy(sc, mode="comp_exact")
+        dedi_it = plan_from_assignment(sc, k_it, mode="comp_exact",
+                                       method="dedi-iter")
+        dedi_s = plan_from_assignment(sc, k_s, mode="comp_exact",
+                                      method="dedi-simple")
+        frac = fractional_greedy(sc, init=k_it, loads="comp_exact")
+        return {"uncoded": uncoded_uniform(sc), "coded": coded_uniform(sc),
+                "dedi-simple": dedi_s, "dedi-iter": dedi_it, "frac": frac}
+
+    plans, t_us = timed(build)
+    means, means_m, rows = {}, {}, []
+    for name, plan in plans.items():
+        # fitted-distribution world (planning model == simulation model)
+        r = simulate_plan(sc, plan, trials=trials, rng=seed + 1)
+        # measured-like world: burstable instances throttle ~5% of tasks ×8
+        # (the heavy tail the paper's measured traces contain and the fitted
+        # shifted exponential misses — see sim.montecarlo docstring)
+        rm = simulate_plan(sc, plan, trials=trials, rng=seed + 1,
+                           straggle_p=0.05, straggle_factor=8.0)
+        means[name], means_m[name] = r.overall_mean, rm.overall_mean
+        rows.append((name, round(r.overall_mean, 3), round(rm.overall_mean, 3)))
+    save_rows("fig8_ec2_eval.csv", "method,fitted_mc_ms,measured_like_mc_ms",
+              rows)
+    best = min(means["dedi-iter"], means["frac"])
+    best_m = min(means_m["dedi-iter"], means_m["frac"])
+    emit("fig8/ec2_eval", t_us,
+         f"vs_uncoded={1 - best / means['uncoded']:.1%};"
+         f"vs_coded={1 - best / means['coded']:.1%};"
+         f"measured_vs_uncoded={1 - best_m / means_m['uncoded']:.1%};"
+         f"measured_vs_coded={1 - best_m / means_m['coded']:.1%};"
+         f"iter_beats_simple={means['dedi-iter'] <= means['dedi-simple'] * 1.02}")
+    return means
+
+
+def main():
+    run_fig7()
+    run_fig8()
+
+
+if __name__ == "__main__":
+    main()

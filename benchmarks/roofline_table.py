@@ -1,0 +1,108 @@
+"""Build the §Roofline table from the dry-run JSONs + the analytic estimator.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir results/dryrun]
+
+Emits a markdown table (stdout + results/roofline_table.md): per (arch ×
+shape × mesh) the three analytic roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO ratios, per-device memory, and compile times.  Compiled
+cost_analysis numbers are shown per-device as a cross-check (they undercount
+loop bodies — see launch/analytic.py).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict
+
+from repro.configs import get_config
+from repro.launch.analytic import MeshDesc, estimate
+from repro.launch.roofline import HW, model_flops
+from repro.models import shape_cell
+
+MESHES = {"pod16x16": MeshDesc(dp=16, tp=16),
+          "pod2x16x16": MeshDesc(dp=32, tp=16)}
+
+
+def load_records(d: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def enrich(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return rec
+    cfg = get_config(rec["arch"])
+    cell = shape_cell(rec["cell"])
+    mesh = MESHES[rec["mesh"]]
+    est = estimate(cfg, cell, mesh, n_micro=rec.get("microbatches", 1),
+                   fsdp=rec.get("fsdp", True),
+                   ep_full=rec.get("ep_full", False),
+                   acc_dtype=rec.get("acc_dtype", "float32"),
+                   remat_policy=rec.get("remat_policy", "full"),
+                   a2a_fp8=rec.get("a2a_fp8", False))
+    terms = est.terms()
+    dominant = max(terms, key=terms.get)
+    t_total = sum(terms.values())        # serial upper bound
+    t_peak = model_flops(cfg, cell) / (mesh.chips * HW["peak_flops"])
+    rec.update(
+        a_flops=est.flops, a_hbm=est.hbm_bytes, a_ici=est.ici_bytes,
+        a_t_compute=terms["compute"], a_t_memory=terms["memory"],
+        a_t_collective=terms["collective"], a_bottleneck=dominant,
+        a_roofline_frac=t_peak / max(t_total, 1e-30),
+        a_mfu_bound=t_peak / max(max(terms.values()), 1e-30),
+    )
+    return rec
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.1f}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline_table.md")
+    args = ap.parse_args(argv)
+
+    rows = []
+    skips = []
+    for rec in load_records(args.dir):
+        if rec.get("status") == "skip":
+            skips.append(rec)
+            continue
+        rows.append(enrich(rec))
+
+    rows.sort(key=lambda r: (r["arch"], r["cell"], r["mesh"]))
+    hdr = ("| arch | cell | mesh | compute ms | memory ms | collective ms | "
+           "bottleneck | roofline frac | useful/HLO | temp GiB | compile s |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        temp = r.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} "
+            f"| {fmt_ms(r['a_t_compute'])} | {fmt_ms(r['a_t_memory'])} "
+            f"| {fmt_ms(r['a_t_collective'])} | {r['a_bottleneck']} "
+            f"| {r['a_roofline_frac']:.3f} | {r['useful_ratio']:.2f} "
+            f"| {temp:.1f} | {r.get('compile_s', 0):.0f} |")
+    for s in skips:
+        lines.append(f"| {s['arch']} | {s['cell']} | {s['mesh']} | — | — | — "
+                     f"| skipped | — | — | — | — |")
+
+    text = "\n".join(lines)
+    print(text)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text + "\n")
+    n_ok = len(rows)
+    print(f"\n{n_ok} compiled cells, {len(skips)} documented skips "
+          f"→ {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~1M-param llama-family model for a few hundred
+steps with the full operational stack — deterministic data pipeline, AdamW,
+checkpoint every 100 steps, a mid-run simulated preemption + restart, and
+MDS-coded gradient aggregation surviving dropped shards.
+
+    PYTHONPATH=src python examples/coded_training.py
+"""
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import TokenStream
+from repro.runtime.coded_grads import coded_grad_aggregate, encode_grad_shards
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+
+CKPT = "/tmp/repro_example_ckpt"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_smoke_config("llama3.2-1b")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=3)
+    loop_cfg = TrainLoopConfig(total_steps=300, log_every=50, ckpt_every=100,
+                               ckpt_dir=CKPT, n_microbatches=2, lr_peak=3e-3)
+
+    # ---- phase 1: train 150 steps, then "preempt" -----------------------
+    loop = TrainLoop(cfg, loop_cfg, stream, rng_seed=0)
+    losses = []
+    while loop.step < 150:
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(loop.step).items()}
+        loop.params, loop.opt_state, m = loop._train_step(
+            loop.params, loop.opt_state, batch)
+        loop.step += 1
+        if loop.step % 50 == 0:
+            losses.append(float(m["loss"]))
+            print(f"[phase1] step {loop.step} loss {losses[-1]:.4f}")
+        if loop.step % loop_cfg.ckpt_every == 0:
+            loop.save()
+    print("[phase1] simulating preemption (process state discarded)")
+
+    # ---- phase 2: fresh object, restore, continue -----------------------
+    loop2 = TrainLoop(cfg, loop_cfg, stream, rng_seed=999)  # wrong seed on purpose
+    assert loop2.try_restore(), "restore failed"
+    print(f"[phase2] restored at step {loop2.step} (from checkpoint)")
+    assert loop2.step == 100                                # last ckpt
+    hist = loop2.run(callback=lambda s, m: print(
+        f"[phase2] step {s} loss {m['loss']:.4f}"))
+    final_loss = hist[-1][1]["loss"]
+    assert final_loss < losses[0], (final_loss, losses[0])
+    print(f"[phase2] loss improved {losses[0]:.4f} → {final_loss:.4f} ✓")
+
+    # ---- coded gradient aggregation under stragglers ---------------------
+    print("[coded-grads] 4 DP groups → 6 coded shards, 2 dropped:")
+    rng = np.random.default_rng(0)
+    grads = [{"w": jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)}
+             for _ in range(4)]
+    coded, ctx = encode_grad_shards(grads, n_coded=6, rng=1)
+    agg = coded_grad_aggregate(coded, ctx, arrived=[0, 2, 4, 5])
+    truth = np.sum([np.asarray(g["w"]) for g in grads], axis=0)
+    err = float(np.abs(np.asarray(agg["w"]) - truth).max())
+    print(f"[coded-grads] reconstruction max err {err:.2e} ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Heterogeneous-fleet scenario planner + small-model serving demo.
+
+1. Plans a 2-job ("masters") inference fleet over mixed pod groups with the
+   paper's algorithms: dedicated vs fractional assignment of pod groups to
+   jobs, Theorem-1 loads, Monte-Carlo completion estimates, elastic re-plan
+   after a pod failure.
+2. Serves a reduced gemma3 with batched prefill + decode to show the serving
+   path end-to-end (5:1 sliding/global attention, ring KV caches).
+
+    PYTHONPATH=src python examples/heterogeneous_serving.py
+"""
+import numpy as np
+
+from repro.core import (fractional_greedy, iterated_greedy,
+                        plan_from_assignment)
+from repro.parallel.hetero import hetero_split, replan_on_failure
+from repro.sim import simulate_plan
+from repro.sim.cluster import tpu_pod_cluster
+
+
+def plan_fleet():
+    profile = tpu_pod_cluster(n_pods=12, degraded=(2, 7))
+    sc = profile.scenario(M=2, L=5e4)
+    print(f"fleet: {profile.N} pod groups (2 degraded), 2 jobs")
+
+    k = iterated_greedy(sc, rng=0)
+    dedi = plan_from_assignment(sc, k)
+    frac = fractional_greedy(sc, init=k)
+    for name, plan in (("dedicated", dedi), ("fractional", frac)):
+        r = simulate_plan(sc, plan, trials=10_000, rng=1)
+        print(f"  {name:<11} predicted {plan.t:8.1f}  MC mean "
+              f"{r.overall_mean:8.1f}")
+
+    split = hetero_split(profile, global_batch=4096)
+    print(f"  Thm-1 batch split over groups: {split.tolist()}")
+    survivors, resplit = replan_on_failure(profile, 4096, failed=[2])
+    print(f"  after losing group 2 → re-split: {resplit.tolist()}")
+
+
+def serve_demo():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import (decode_step, init_cache_shapes, init_model,
+                              prefill)
+    cfg = get_smoke_config("gemma3-12b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, P, G = 4, 24, 12
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          init_cache_shapes(cfg, B, P + G))
+    logits, caches = prefill(params, {"tokens": toks}, caches, cfg=cfg)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    for i in range(G - 1):
+        logits, caches = decode_step(params, tok,
+                                     jnp.full((B,), P + i, jnp.int32),
+                                     caches, cfg=cfg)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+    gen = np.concatenate([np.asarray(t) for t in outs], 1)
+    assert not np.isnan(gen).any()
+    print(f"served {B} requests × {gen.shape[1]} tokens "
+          f"(sliding+global KV rings) ✓  sample: {gen[0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    plan_fleet()
+    serve_demo()

@@ -1,0 +1,59 @@
+"""Quickstart: the paper's full workflow in ~60 lines.
+
+Builds the paper's large-scale scenario (4 masters, 50 heterogeneous
+workers, γ = 2u), runs every proposed algorithm, Monte-Carlos the completion
+delays, then executes one realization end-to-end through the MDS-coded
+pipeline with a straggler injected — and verifies the decoded results
+numerically.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (coded_uniform, fractional_greedy, iterated_greedy,
+                        plan_from_assignment, sca_enhance_plan,
+                        large_scale_scenario, uncoded_uniform, Scenario)
+from repro.runtime import CodedExecutor
+from repro.sim import simulate_plan
+
+
+def main():
+    sc = large_scale_scenario(0)
+    print(f"scenario: M={sc.M} masters, N={sc.N} workers, L={sc.L[0]:.0f} "
+          f"rows each, γ=2u")
+
+    k_iter = iterated_greedy(sc, rng=0)
+    plans = {
+        "uncoded uniform  ": uncoded_uniform(sc),
+        "coded uniform [5]": coded_uniform(sc),
+        "dedicated (Alg 1)": plan_from_assignment(sc, k_iter),
+        "fractional (Alg 4)": fractional_greedy(sc, init=k_iter),
+    }
+    plans["dedicated + SCA  "] = sca_enhance_plan(sc, plans["dedicated (Alg 1)"])
+
+    print(f"\n{'policy':<20} {'MC mean delay':>14}")
+    for name, plan in plans.items():
+        r = simulate_plan(sc, plan, trials=20_000, rng=1)
+        print(f"{name:<20} {r.overall_mean:>11.1f} ms")
+
+    # --- one realization through the real coded pipeline ----------------
+    plan = plans["dedicated + SCA  "]
+    plan.l[:] = plan.l / sc.L[:, None] * 512          # test-size matrices
+    sc_small = Scenario(a=sc.a, u=sc.u, gamma=sc.gamma,
+                        L=np.full(sc.M, 512.0))
+    rng = np.random.default_rng(0)
+    A = [rng.normal(size=(512, 64)) for _ in range(sc.M)]
+    x = [rng.normal(size=64) for _ in range(sc.M)]
+    ex = CodedExecutor(sc_small, plan, rng=2)
+    results, report = ex.run(A, x, dead_workers=(7,))
+    print(f"\ncoded execution with worker 7 dead:")
+    print(f"  completion {report.overall:.1f} ms, decode_ok="
+          f"{bool(report.decode_ok.all())}, max |err| "
+          f"{report.max_err.max():.2e}")
+    for m in range(sc.M):
+        assert np.allclose(results[m], A[m] @ x[m], rtol=1e-5)
+    print("  all masters recovered A·x exactly from the straggler prefix ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Sharded, atomic checkpointing."""
+from .manager import CheckpointManager  # noqa: F401

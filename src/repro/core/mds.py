@@ -1,0 +1,95 @@
+"""Real-valued MDS coding for distributed matrix multiplication (paper §II).
+
+The paper encodes A_m row-wise with an (L̃, L) MDS code; the master recovers
+A_m x_m from the inner products of **any** L coded rows.  Over the reals a
+random Gaussian generator is MDS with probability 1; we default to the
+*systematic* variant [I; R] so the fast path (no stragglers) is decode-free.
+
+Shapes:  A (L, S),  G (L̃, L),  Ã = G A (L̃, S),  y = Ã x (L̃,),
+recover A x from any L entries of y via the corresponding rows of G.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "make_generator",
+    "encode",
+    "split_loads",
+    "decode",
+    "decode_ls",
+    "integer_loads",
+]
+
+
+def make_generator(L: int, L_tilde: int, *, kind: str = "systematic",
+                   rng: np.random.Generator | int = 0,
+                   dtype=np.float32) -> np.ndarray:
+    """Build an (L̃, L) real MDS generator matrix.
+
+    kind="systematic": G = [I; R], R ~ N(0, 1/L) — decode-free when the first
+    L rows arrive.  kind="gaussian": fully random (used by property tests).
+    """
+    if L_tilde < L:
+        raise ValueError("L_tilde must be >= L")
+    rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
+    if kind == "systematic":
+        R = rng.normal(0.0, 1.0 / np.sqrt(L), size=(L_tilde - L, L))
+        G = np.concatenate([np.eye(L), R], axis=0)
+    elif kind == "gaussian":
+        G = rng.normal(0.0, 1.0 / np.sqrt(L), size=(L_tilde, L))
+    else:
+        raise ValueError(f"unknown generator kind {kind!r}")
+    return G.astype(dtype)
+
+
+def encode(G: np.ndarray, A: np.ndarray) -> np.ndarray:
+    """Ã = G A  (row-wise MDS encoding)."""
+    return G @ A
+
+
+def integer_loads(l: np.ndarray, L: float) -> np.ndarray:
+    """Round real loads to integers, preserving Σl ≥ ceil(required).
+
+    The paper drops integrality (7c); real deployments need integers.  We
+    ceil every positive load — the redundancy only grows, recovery is safe.
+    """
+    l = np.asarray(l, dtype=np.float64)
+    return np.where(l > 0, np.ceil(l - 1e-9), 0.0).astype(np.int64)
+
+
+def split_loads(L_tilde: int, loads: Sequence[int]) -> Tuple[np.ndarray, ...]:
+    """Partition row indices 0..L̃-1 into per-node contiguous slices."""
+    loads = np.asarray(loads, dtype=np.int64)
+    if loads.sum() != L_tilde:
+        raise ValueError("loads must sum to L_tilde")
+    edges = np.concatenate([[0], np.cumsum(loads)])
+    return tuple(np.arange(edges[i], edges[i + 1]) for i in range(len(loads)))
+
+
+def decode(G: np.ndarray, rows: np.ndarray, y_rows: np.ndarray) -> np.ndarray:
+    """Recover A x (or A B) from exactly-L received coded results.
+
+    ``rows`` are the indices of the received coded rows (len == L),
+    ``y_rows`` the received results, shape (L,) or (L, C).
+    """
+    L = G.shape[1]
+    rows = np.asarray(rows)
+    if rows.size != L:
+        raise ValueError(f"decode needs exactly L={L} rows, got {rows.size}")
+    Gs = G[rows].astype(np.float64)
+    return np.linalg.solve(Gs, np.asarray(y_rows, dtype=np.float64))
+
+
+def decode_ls(G: np.ndarray, rows: np.ndarray, y_rows: np.ndarray) -> np.ndarray:
+    """Least-squares decode from ≥ L received rows (overdetermined: averages
+    out numerical noise; the robust path for float32 pipelines)."""
+    L = G.shape[1]
+    rows = np.asarray(rows)
+    if rows.size < L:
+        raise ValueError(f"need >= L={L} rows, got {rows.size}")
+    Gs = G[rows].astype(np.float64)
+    sol, *_ = np.linalg.lstsq(Gs, np.asarray(y_rows, dtype=np.float64), rcond=None)
+    return sol

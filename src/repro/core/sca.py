@@ -1,0 +1,238 @@
+"""SCA-enhanced load allocation (paper §III-D, Algorithm 3).
+
+The non-convex recovery constraint of P3,
+
+    L_m - E[X_m(t)] <= 0,
+    E[X_m(t)] = Σ_n l_n · P[T_n <= t],
+
+has a difference-of-convex structure (paper eq. (20)):
+
+    L_m - E[X_m] = L_m - Σ_{n∈Ω} l_n + h0(l_0,t) + Σ_{n∈Ω} (h+_n - h-_n),
+
+with, for p = max(γ̂, û), q = min(γ̂, û), d = p - q and effective rates
+γ̂ = b·γ, û = k·u, â = a/k (dedicated: k = b = 1):
+
+    h+_n(l,t) = p·l·e^{-q(t/l - â)} / d      (convex)
+    h-_n(l,t) = q·l·e^{-p(t/l - â)} / d      (convex)
+    h0(l,t)   = -l·(1 - e^{-u0(t/l - a0)})   (convex; paper Appendix B)
+
+Linearizing h- at the current point z gives the convex restriction P(z)
+(eq. (22)); Algorithm 3 iterates  z ← z + γ_r (w* - z),
+γ_{r+1} = γ_r(1 - α γ_r), from the Theorem-1 feasible point.
+
+P(z) is solved exactly by bisection on t; for fixed t the constraint
+residual is *separable* in the per-node loads, and each 1-D convex piece is
+minimized by golden-section search.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import delays
+from .allocation import markov_loads
+from .problem import Plan, Scenario, theta_dedicated, theta_fractional
+
+__all__ = ["sca_enhance_master", "sca_enhance_plan"]
+
+_GOLD = 0.5 * (3.0 - np.sqrt(5.0))  # 0.381966...
+
+
+@dataclasses.dataclass
+class _MasterInst:
+    """Effective single-master instance: local node + participating workers."""
+    L: float
+    a0: float
+    u0: float
+    a_hat: np.ndarray    # (W,) effective shifts of the workers
+    p: np.ndarray        # (W,) max(γ̂, û)
+    q: np.ndarray        # (W,) min(γ̂, û)
+
+    @property
+    def d(self) -> np.ndarray:
+        return self.p - self.q
+
+
+def _build_instance(sc: Scenario, m: int, k: np.ndarray, b: np.ndarray,
+                    workers: np.ndarray) -> _MasterInst:
+    g_hat = b[m, workers] * sc.gamma[m, workers]
+    u_hat = k[m, workers] * sc.u[m, workers]
+    a_hat = sc.a[m, workers] / k[m, workers]
+    # Perturb the resonant case γ̂ == û (paper handles it by eq. (4); an
+    # ε-perturbation keeps the DC decomposition well-defined).
+    same = np.isclose(g_hat, u_hat, rtol=1e-9)
+    g_hat = np.where(same, g_hat * (1.0 + 1e-6), g_hat)
+    return _MasterInst(
+        L=float(sc.L[m]), a0=float(sc.a[m, 0]), u0=float(sc.u[m, 0]),
+        a_hat=a_hat, p=np.maximum(g_hat, u_hat), q=np.minimum(g_hat, u_hat))
+
+
+# -- convex pieces and gradients -------------------------------------------
+
+def _h_plus(inst: _MasterInst, l, t):
+    l = np.maximum(l, 1e-300)
+    return inst.p * l * np.exp(-inst.q * (t / l - inst.a_hat)) / inst.d
+
+
+def _h_minus(inst: _MasterInst, l, t):
+    l = np.maximum(l, 1e-300)
+    return inst.q * l * np.exp(-inst.p * (t / l - inst.a_hat)) / inst.d
+
+
+def _h_minus_grad(inst: _MasterInst, l, t) -> Tuple[np.ndarray, np.ndarray]:
+    """(∂h-/∂l, ∂h-/∂t) at (l, t), elementwise over workers."""
+    l = np.maximum(l, 1e-300)
+    e = np.exp(-inst.p * (t / l - inst.a_hat))
+    gl = inst.q / inst.d * e * (1.0 + inst.p * t / l)
+    gt = -inst.q * inst.p / inst.d * e
+    return gl, gt
+
+
+def _h0(inst: _MasterInst, l0, t):
+    l0 = np.maximum(l0, 1e-300)
+    return -l0 * (1.0 - np.exp(-inst.u0 * (t / l0 - inst.a0)))
+
+
+def _true_EX(inst: _MasterInst, l0, l, t):
+    """Exact E[X_m(t)] for the instance (oracle for feasibility checks)."""
+    return (-_h0(inst, l0, t)
+            + np.sum(l - (_h_plus(inst, l, t) - _h_minus(inst, l, t))))
+
+
+# -- P(z) subproblem ---------------------------------------------------------
+
+def _golden_min(f, lo: np.ndarray, hi: np.ndarray, iters: int = 52):
+    """Vectorised golden-section minimization of elementwise-convex f."""
+    lo = lo.astype(np.float64).copy()
+    hi = hi.astype(np.float64).copy()
+    x1 = lo + _GOLD * (hi - lo)
+    x2 = hi - _GOLD * (hi - lo)
+    f1, f2 = f(x1), f(x2)
+    for _ in range(iters):
+        take_left = f1 < f2
+        hi = np.where(take_left, x2, hi)
+        lo = np.where(take_left, lo, x1)
+        x1n = lo + _GOLD * (hi - lo)
+        x2n = hi - _GOLD * (hi - lo)
+        # recompute both (cheap, keeps the vectorised logic branch-free)
+        x1, x2 = x1n, x2n
+        f1, f2 = f(x1), f(x2)
+    x = 0.5 * (lo + hi)
+    return x, f(x)
+
+
+def _solve_subproblem(inst: _MasterInst, z_l0: float, z_l: np.ndarray,
+                      z_t: float, *, bisect_iters: int = 44,
+                      l_cap_scale: float = 8.0):
+    """Solve P(z): min t s.t. the linearized constraint holds, l >= 0.
+
+    Returns (l0, l, t).  Assumes (z_l0, z_l, z_t) is P3-feasible, hence
+    P(z)-feasible (the linearization is exact at z).
+    """
+    gl, gt = _h_minus_grad(inst, z_l, z_t)
+    # Constant of the linearization: -Σ[h-(z) - gl·z_l] - (Σ gt)·(t - z_t)
+    c_lin = np.sum(_h_minus(inst, z_l, z_t) - gl * z_l)
+    gts = np.sum(gt)
+    l_cap = l_cap_scale * inst.L
+
+    def min_residual(t: float):
+        """min over l >= 0 of the constraint residual G(l, t)."""
+        # local node: minimize h0(l0, t)
+        l0, h0v = _golden_min(lambda x: _h0(inst, x, t),
+                              np.array([0.0]), np.array([l_cap]))
+        # worker nodes: minimize h+(l,t) - (1 + gl)·l
+        def psi(l):
+            return _h_plus(inst, l, t) - (1.0 + gl) * l
+        lw, psiv = _golden_min(psi, np.zeros_like(inst.p),
+                               np.full_like(inst.p, l_cap))
+        resid = (inst.L + h0v[0] + np.sum(psiv)
+                 - c_lin - gts * (t - z_t))
+        return resid, float(l0[0]), lw
+
+    # Bisection on t over [0, z_t]; predicate = feasible (residual <= 0).
+    t_hi = z_t
+    r_hi, l0_hi, lw_hi = min_residual(t_hi)
+    if r_hi > 1e-9 * inst.L:
+        # z not recognized feasible under numerics; return z unchanged.
+        return z_l0, z_l.copy(), z_t
+    t_lo = 0.0
+    best = (l0_hi, lw_hi, t_hi)
+    for _ in range(bisect_iters):
+        t_mid = 0.5 * (t_lo + t_hi)
+        r, l0m, lwm = min_residual(t_mid)
+        if r <= 0.0:
+            t_hi = t_mid
+            best = (l0m, lwm, t_mid)
+        else:
+            t_lo = t_mid
+    return best[0], best[1], best[2]
+
+
+# -- Algorithm 3 -------------------------------------------------------------
+
+def sca_enhance_master(sc: Scenario, m: int, k: np.ndarray, b: np.ndarray,
+                       l_init: np.ndarray, t_init: float, *,
+                       alpha: float = 0.995, gamma0: float = 1.0,
+                       max_iters: int = 12, rtol: float = 1e-7,
+                       ) -> Tuple[np.ndarray, float]:
+    """Run Algorithm 3 for one master.  Returns (l_row, t) with l_row of
+    length N+1 (column 0 local)."""
+    workers = np.nonzero(l_init[1:] > 0)[0] + 1
+    if workers.size == 0:
+        return l_init.copy(), t_init
+    inst = _build_instance(sc, m, k, b, workers)
+
+    z_l0 = float(l_init[0])
+    z_l = l_init[workers].astype(np.float64).copy()
+    z_t = float(t_init)
+
+    gam = gamma0
+    for _ in range(max_iters):
+        w_l0, w_l, w_t = _solve_subproblem(inst, z_l0, z_l, z_t)
+        new_l0 = z_l0 + gam * (w_l0 - z_l0)
+        new_l = z_l + gam * (w_l - z_l)
+        new_t = z_t + gam * (w_t - z_t)
+        moved = abs(new_t - z_t) > rtol * max(z_t, 1e-300)
+        z_l0, z_l, z_t = new_l0, new_l, new_t
+        gam = gam * (1.0 - alpha * gam)
+        gam = max(gam, 1e-4)
+        if not moved:
+            break
+
+    # Tighten t to the exact feasibility boundary at the final loads.
+    lo, hi = 0.0, z_t * 2.0
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if _true_EX(inst, z_l0, z_l, mid) >= inst.L:
+            hi = mid
+        else:
+            lo = mid
+    z_t = hi
+
+    out = np.zeros_like(l_init)
+    out[0] = z_l0
+    out[workers] = z_l
+    return out, float(z_t)
+
+
+def sca_enhance_plan(sc: Scenario, plan: Plan, *, alpha: float = 0.995,
+                     max_iters: int = 60) -> Plan:
+    """Apply Algorithm 3 to every master of a plan (dedicated or fractional).
+
+    Fractional plans are handled by the paper's remark at the end of §IV-B:
+    substitute γ → bγ, u → ku, a → a/k inside the DC pieces (done by
+    ``_build_instance``).
+    """
+    l_new = plan.l.copy()
+    t_new = plan.t_per_master.copy()
+    for m in range(sc.M):
+        l_row, t_m = sca_enhance_master(
+            sc, m, plan.k, plan.b, plan.l[m], float(plan.t_per_master[m]),
+            alpha=alpha, max_iters=max_iters)
+        if t_m <= t_new[m]:
+            l_new[m] = l_row
+            t_new[m] = t_m
+    return Plan(k=plan.k.copy(), b=plan.b.copy(), l=l_new,
+                t_per_master=t_new, method=plan.method + "+sca")

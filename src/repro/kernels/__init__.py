@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* ``matmul``       — shared VMEM-tiled matmul engine
+* ``mds_encode``   — Ã = G·A master-side encoding (systematic fast path)
+* ``coded_matvec`` — per-worker Ã_n·x products
+* ``wkv6``         — chunk-parallel RWKV-6 recurrence (TPU adaptation)
+
+Each kernel has a pure-jnp oracle in ``ref.py``; tests sweep shapes/dtypes in
+interpret mode and assert allclose.
+"""
+from . import ref  # noqa: F401
+from .ops import coded_matvec, matmul, mds_encode, wkv6  # noqa: F401

@@ -1,0 +1,21 @@
+"""MDS encoding kernel: Ã = G @ A (paper §II, the master-side hot spot).
+
+The generator is (L̃, L) with L̃ ≈ 2L under Theorem-1 loads, so encoding is
+a skinny-times-wide matmul over the task matrix.  Systematic generators make
+the top L rows an identity — the wrapper in ops.py skips them and only runs
+the kernel over the parity rows, which halves encode FLOPs for the default
+redundancy (a beyond-paper optimization recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .matmul import DEFAULT_BLOCK, matmul_pallas
+
+__all__ = ["mds_encode_pallas"]
+
+
+def mds_encode_pallas(g: jnp.ndarray, a: jnp.ndarray,
+                      block=DEFAULT_BLOCK, interpret: bool = False) -> jnp.ndarray:
+    """Ã = G @ A with VMEM-tiled accumulation (see matmul.py)."""
+    return matmul_pallas(g, a, block=block, interpret=interpret)

@@ -1,0 +1,93 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle shape padding to MXU-aligned blocks, (S,) vs (S,B) vector
+conventions, systematic-generator fast paths, and the interpret switch
+(interpret=True on CPU so the kernels run everywhere; real lowering on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .coded_matvec import coded_matvec_pallas
+from .matmul import matmul_pallas
+from .mds_encode import mds_encode_pallas
+from .wkv6 import wkv6_pallas
+
+__all__ = ["matmul", "mds_encode", "coded_matvec", "wkv6",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, block=(128, 128, 128),
+           interpret: bool | None = None) -> jnp.ndarray:
+    """C = A @ B, padding both operands up to the block grid."""
+    interpret = default_interpret() if interpret is None else interpret
+    M, K = a.shape
+    N = b.shape[1]
+    bm, bn, bk = block
+    ap = _pad_to(_pad_to(a, 0, bm), 1, bk)
+    bp = _pad_to(_pad_to(b, 0, bk), 1, bn)
+    out = matmul_pallas(ap, bp, block=block, interpret=interpret)
+    return out[:M, :N]
+
+
+def mds_encode(g: jnp.ndarray, a: jnp.ndarray, *, systematic: bool = True,
+               block=(128, 128, 128),
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Ã = G @ A.  With ``systematic`` the identity prefix is copied through
+    and only the parity rows hit the MXU (halves encode FLOPs at the default
+    2× redundancy)."""
+    interpret = default_interpret() if interpret is None else interpret
+    L = g.shape[1]
+    if systematic and g.shape[0] > L:
+        parity = matmul(g[L:], a, block=block, interpret=interpret)
+        return jnp.concatenate([a.astype(parity.dtype), parity], axis=0)
+    return matmul(g, a, block=block, interpret=interpret)
+
+
+def coded_matvec(a_tilde: jnp.ndarray, x: jnp.ndarray, *,
+                 block_rows: int = 128, block_k: int = 128,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """y = Ã @ x for x (S,) or (S, B); pads rows/contraction, keeps B whole."""
+    interpret = default_interpret() if interpret is None else interpret
+    squeeze = x.ndim == 1
+    xm = x[:, None] if squeeze else x
+    L, S = a_tilde.shape
+    ap = _pad_to(_pad_to(a_tilde, 0, block_rows), 1, block_k)
+    xp = _pad_to(xm, 0, block_k)
+    y = coded_matvec_pallas(ap, xp, block_rows=block_rows, block_k=block_k,
+                            interpret=interpret)[:L]
+    return y[:, 0] if squeeze else y
+
+
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+         u: jnp.ndarray, *, chunk: int = 64,
+         interpret: bool | None = None) -> jnp.ndarray:
+    """Batched chunk-parallel WKV6.  r,k,w (BH,T,K), v (BH,T,V), u (K,)."""
+    interpret = default_interpret() if interpret is None else interpret
+    BH, T, K = r.shape
+    if T % chunk:
+        pad = chunk - T % chunk
+        r = _pad_to(r, 1, chunk)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    out = wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return out[:, :T]

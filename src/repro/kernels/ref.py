@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (interpret=True on
+CPU, real lowering on TPU).  Keep them boring.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "mds_encode_ref", "coded_matvec_ref", "wkv6_chunk_ref"]
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with float32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def mds_encode_ref(g: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Ã = G @ A — row-wise MDS encoding (paper §II)."""
+    return jnp.dot(g, a, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def coded_matvec_ref(a_tilde: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y = Ã @ x for x of shape (S,) or (S, B)."""
+    squeeze = x.ndim == 1
+    xm = x[:, None] if squeeze else x
+    y = jnp.dot(a_tilde, xm, preferred_element_type=jnp.float32).astype(x.dtype)
+    return y[:, 0] if squeeze else y
+
+
+def wkv6_chunk_ref(r, k, v, w, u):
+    """Chunked RWKV-6 WKV oracle (sequential over time, O(T) state).
+
+    r,k,w: (T, K)  v: (T, V)  u: (K,)   state: (K, V)
+    out_t = (diag(r_t) @ (S + u ⊗ k_t ⊙ v_t-outer)) summed over K:
+        o_t = rᵀ_t (S_t + (u ⊙ k_t) v_tᵀ),   S_{t+1} = diag(w_t) S_t + k_t v_tᵀ
+    """
+    import jax
+
+    T, K = k.shape
+    V = v.shape[1]
+    S0 = jnp.zeros((K, V), dtype=jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[:, None] * v_t[None, :]
+        o = ((S + u[:, None] * kv) * r_t[:, None]).sum(axis=0)
+        S_new = w_t[:, None] * S + kv
+        return S_new, o
+
+    _, o = jax.lax.scan(step, S0, (r.astype(jnp.float32), k.astype(jnp.float32),
+                                   v.astype(jnp.float32), w.astype(jnp.float32)))
+    return o.astype(v.dtype)

@@ -1,0 +1,100 @@
+"""Chunked RWKV-6 WKV Pallas kernel (TPU adaptation of the Finch recurrence).
+
+The GPU reference implementation of RWKV-6 is a per-timestep CUDA recurrence
+(one thread per channel).  That shape is hostile to the MXU, so we use the
+chunk-parallel form (DESIGN.md §Hardware-adaptation): split time into chunks
+of C steps; within a chunk the data-dependent diagonal decay telescopes into
+
+    P[t, s] = (r_t ⊙ e^{lc_t})ᵀ (k_s ⊙ e^{-lc_{s+1}}),   lc = cumsum(log w),
+
+so the intra-chunk part is two dense matmuls (MXU work), and the cross-chunk
+part carries a (K, V) state in VMEM scratch across the sequential TPU grid.
+
+Grid: (BH, T/C) — chunk index innermost, so the state scratch persists
+across the chunks of one (batch·head) and resets when a new head starts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv6_pallas"]
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                 chunk: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _reset():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)            # (C, K)
+    k = k_ref[0].astype(jnp.float32)            # (C, K)
+    v = v_ref[0].astype(jnp.float32)            # (C, V)
+    w = w_ref[0].astype(jnp.float32)            # (C, K), decay in (0, 1)
+    u = u_ref[...].astype(jnp.float32)          # (1, K) bonus
+
+    lw = jnp.log(jnp.maximum(w, 1e-12))
+    lc = jnp.cumsum(lw, axis=0)                  # lc_t = Σ_{τ<=t} log w_τ
+    lc_prev = lc - lw                            # Σ_{τ<t} log w_τ
+
+    r_dec = r * jnp.exp(lc_prev)                 # r_t ⊙ e^{lc_{t-1}}
+    k_grow = k * jnp.exp(-lc)                    # k_s ⊙ e^{-lc_s}
+
+    # Intra-chunk: strict-causal pairwise decays, then one (C,C)@(C,V) matmul.
+    p = jnp.dot(r_dec, k_grow.T, preferred_element_type=jnp.float32)  # (C, C)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    p = jnp.where(t_idx > s_idx, p, 0.0)
+    o = jnp.dot(p, v, preferred_element_type=jnp.float32)            # (C, V)
+
+    # Same-timestep bonus path: o_t += (r_t ⊙ u ⊙ k_t) summed · v_t.
+    bonus = jnp.sum(r * u * k, axis=1, keepdims=True)                # (C, 1)
+    o = o + bonus * v
+
+    # Cross-chunk carry: o_t += (r_t ⊙ e^{lc_{t-1}})ᵀ S_in.
+    o = o + jnp.dot(r_dec, s_ref[...], preferred_element_type=jnp.float32)
+
+    # State update: S_out = e^{lc_C} ⊙ S_in + Σ_s (k_s e^{lc_C - lc_s}) v_sᵀ.
+    lc_last = lc[-1]                                                  # (K,)
+    k_carry = k * jnp.exp(lc_last[None, :] - lc)                      # (C, K)
+    s_ref[...] = (jnp.exp(lc_last)[:, None] * s_ref[...]
+                  + jnp.dot(k_carry.T, v, preferred_element_type=jnp.float32))
+
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                w: jnp.ndarray, u: jnp.ndarray, chunk: int = 64,
+                interpret: bool = False) -> jnp.ndarray:
+    """Batched WKV6.  r,k,w: (BH, T, K), v: (BH, T, V), u: (K,) → (BH, T, V).
+
+    T % chunk == 0 required (ops.py pads).  float32 accumulation throughout;
+    per-chunk log-space telescoping keeps the decay products stable for the
+    chunk sizes used on TPU (64/128).
+    """
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+    u2 = u.reshape(1, K)
+
+    return pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K), lambda b, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, V), v.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u2)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first init.
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+# extract memory / cost / roofline terms — no device buffers are ever
+# allocated (ShapeDtypeStruct in, compiled artifact out).
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+#   python -m repro.launch.dryrun --arch all --shape all --mesh both \
+#       --out results/dryrun
+# Each invocation compiles in-process; --subprocess isolates every cell in a
+# fresh interpreter (recommended for the full sweep on small hosts).
+# (no `from __future__ import annotations` here: os.environ must be line 2.)
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_from_compiled
+from repro.launch.specs import input_specs, input_shardings, microbatches_for
+from repro.launch.steps import (build_decode_fn, build_prefill_fn,
+                                build_train_fn, model_state_shapes)
+from repro.models import ModelCtx, SHAPE_CELLS, shape_cell
+from repro.parallel.sharding import (batch_sharding, opt_state_shardings,
+                                     param_shardings)
+
+SKIP = "skip"
+
+
+def should_skip(cfg, cell) -> Optional[str]:
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: 500k dense KV per layer is not "
+                "sub-quadratic; skipped per brief (DESIGN.md §4)")
+    return None
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             fsdp: bool = True, microbatches: Optional[int] = None,
+             opt_state_dtype: str = "bfloat16",
+             ep_full: bool = False, acc_dtype: str = "float32",
+             a2a_fp8: bool = False, optimizer: str = "adamw",
+             remat_policy: str = "full",
+             save_dir: Optional[str] = None, verbose: bool = True,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    cell = shape_cell(shape)
+    mesh_desc = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+
+    reason = should_skip(cfg, cell)
+    if reason:
+        rec = {"arch": cfg.name, "cell": cell.name, "mesh": mesh_desc,
+               "status": SKIP, "reason": reason}
+        _save(rec, save_dir, cfg.name, cell.name, mesh_desc)
+        if verbose:
+            print(f"[dryrun] SKIP {cfg.name} × {cell.name} × {mesh_desc}: "
+                  f"{reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    ctx = ModelCtx(mesh=mesh, model_axis="model", ep_full=ep_full,
+                   remat_policy=remat_policy, a2a_fp8=a2a_fp8)
+
+    specs = input_specs(cfg, cell)
+    in_shard = input_shardings(specs, mesh, cell)
+    p_shapes, o_shapes = model_state_shapes(
+        cfg, opt_state_dtype=opt_state_dtype, optimizer=optimizer)
+    p_shard = param_shardings(p_shapes, mesh, fsdp=fsdp,
+                              moe_full_ep=ep_full)
+    o_shard = opt_state_shardings(o_shapes, p_shard)
+
+    with mesh:
+        if cell.kind == "train":
+            n_micro = microbatches_for(cfg, cell, mesh, microbatches)
+            fn = build_train_fn(cfg, ctx, n_micro,
+                                opt_state_dtype=opt_state_dtype,
+                                acc_dtype=acc_dtype, optimizer=optimizer)
+            batch = {k: v for k, v in specs.items()}
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, o_shard,
+                              {k: in_shard[k] for k in batch}),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(p_shapes, o_shapes, batch)
+        elif cell.kind == "prefill":
+            fn = build_prefill_fn(cfg, ctx)
+            batch = {k: v for k, v in specs.items() if k != "caches"}
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard,
+                              {k: in_shard[k] for k in batch},
+                              in_shard["caches"]),
+                donate_argnums=(2,))
+            lowered = jitted.lower(p_shapes, batch, specs["caches"])
+        else:  # decode
+            fn = build_decode_fn(cfg, ctx)
+            args = [p_shapes, specs["tokens"], specs["pos"], specs["caches"]]
+            shards = [p_shard, in_shard["tokens"], in_shard["pos"],
+                      in_shard["caches"]]
+            if "enc_out" in specs:
+                args.append(specs["enc_out"])
+                shards.append(in_shard["enc_out"])
+            jitted = jax.jit(fn, in_shardings=tuple(shards),
+                             donate_argnums=(3,))
+            lowered = jitted.lower(*args)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rep = roofline_from_compiled(compiled, cfg, cell, mesh_desc, n_chips)
+    rec = rep.to_json()
+    rec.update(status="ok", tag=tag, ep_full=ep_full, a2a_fp8=a2a_fp8,
+               optimizer=optimizer,
+               acc_dtype=acc_dtype, remat_policy=remat_policy,
+               lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1),
+               n_chips=n_chips, fsdp=fsdp,
+               microbatches=microbatches_for(cfg, cell, mesh, microbatches)
+               if cell.kind == "train" else 1,
+               param_count=cfg.param_count(),
+               active_param_count=cfg.active_param_count())
+    if verbose:
+        ma = rec["memory_analysis"]
+        print(f"[dryrun] OK {cfg.name} × {cell.name} × {mesh_desc} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: "
+              + ", ".join(f"{k.split('_')[0]}={v/2**30:.2f}GiB"
+                          for k, v in ma.items() if v))
+        print(f"  cost: {rec['flops_per_device']:.3e} FLOPs/dev, "
+              f"{rec['bytes_per_device']:.3e} B/dev, "
+              f"coll {rec['coll_bytes_per_device']:.3e} B/dev")
+        print(f"  roofline: compute {rec['t_compute']*1e3:.2f}ms, memory "
+              f"{rec['t_memory']*1e3:.2f}ms, collective "
+              f"{rec['t_collective']*1e3:.2f}ms → {rec['bottleneck']}-bound; "
+              f"useful-FLOP ratio {rec['useful_ratio']:.3f}")
+    _save(rec, save_dir, cfg.name, cell.name, mesh_desc)
+    return rec
+
+
+def _save(rec: dict, save_dir: Optional[str], arch: str, cell: str,
+          mesh: str):
+    if not save_dir:
+        return
+    os.makedirs(save_dir, exist_ok=True)
+    safe = arch.replace("/", "_").replace(".", "_")
+    tag = rec.get("tag") or ""
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(save_dir, f"{safe}__{cell}__{mesh}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--opt-state-dtype", default="bfloat16")
+    ap.add_argument("--ep-full", action="store_true")
+    ap.add_argument("--acc-dtype", default="float32")
+    ap.add_argument("--remat-policy", default="full")
+    ap.add_argument("--a2a-fp8", action="store_true")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="isolate each cell in a fresh interpreter")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = [c.name for c in SHAPE_CELLS] if args.shape == "all" \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.subprocess:
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--mesh", "multi" if mp else "single",
+                           "--out", args.out]
+                    if args.no_fsdp:
+                        cmd.append("--no-fsdp")
+                    if args.microbatches:
+                        cmd += ["--microbatches", str(args.microbatches)]
+                    r = subprocess.run(cmd)
+                    if r.returncode:
+                        failures.append((arch, shape, mp))
+                    continue
+                try:
+                    run_cell(arch, shape, mp, fsdp=not args.no_fsdp,
+                             microbatches=args.microbatches,
+                             opt_state_dtype=args.opt_state_dtype,
+                             ep_full=args.ep_full, acc_dtype=args.acc_dtype,
+                             a2a_fp8=args.a2a_fp8, optimizer=args.optimizer,
+                             remat_policy=args.remat_policy, tag=args.tag,
+                             save_dir=args.out)
+                except Exception:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp))
+    if failures:
+        print("FAILED cells:", failures)
+        return 1
+    print("all requested cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,148 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute   = per_device_FLOPs / 197e12         (bf16 MXU peak)
+    memory    = per_device_bytes / 819e9           (HBM bandwidth)
+    collective= per_device_collective_bytes / 50e9 (ICI per-link)
+
+``cost_analysis()`` yields per-device FLOPs / bytes of the SPMD-partitioned
+module.  Collective bytes are NOT in cost_analysis: we parse the compiled
+HLO text and sum the output-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction (output shapes
+in post-partitioning HLO are per-device, which is the unit the term wants;
+all-reduce is counted 2× for the ring's reduce+broadcast phases).
+
+MODEL_FLOPS uses 6·N·D (dense) or 6·N_active·D (MoE) with D = tokens per
+step; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..models import ArchConfig, ShapeCell
+
+__all__ = ["HW", "roofline_from_compiled", "model_flops", "RooflineReport"]
+
+# TPU v5e
+HW = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf](?:8|16|32|64)|bf16|f16|c64|c128)"
+                       r"\[([0-9,]*)\]")
+
+
+def _bytes_of_shape(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (output-shape sum)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # instruction lines look like: "%x = bf16[8,128]{1,0} all-gather(..."
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        opm = re.search(r"\b([a-z0-9-]+)\(", rhs)
+        if not opm or opm.group(1) not in _COLLECTIVES:
+            continue
+        kind = opm.group(1)
+        # output shape(s) appear before the op name
+        head = rhs[:opm.start()]
+        total = sum(_bytes_of_shape(m) for m in _SHAPE_RE.finditer(head))
+        if kind == "all-reduce":
+            total *= 2                     # ring: reduce-scatter + all-gather
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    cell: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_total: float
+    useful_ratio: float               # MODEL_FLOPS / (HLO_FLOPs × chips)
+    bottleneck: str
+    memory_analysis: Dict[str, float]
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """6·N·D with N = active params, D = tokens processed by the step."""
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens          # forward only
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch
+
+
+def roofline_from_compiled(compiled, cfg: ArchConfig, cell: ShapeCell,
+                           mesh_desc: str, n_chips: int) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    coll_total = float(sum(coll.values()))
+
+    t_c = flops / HW["peak_flops"]
+    t_m = byts / HW["hbm_bw"]
+    t_x = coll_total / HW["ici_bw"]
+    mf = model_flops(cfg, cell)
+    useful = mf / max(flops * n_chips, 1.0)
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes"):
+            mem[key] = float(getattr(ma, key, 0))
+    except Exception:
+        pass
+
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    return RooflineReport(
+        arch=cfg.name, cell=cell.name, mesh=mesh_desc,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=coll_total, coll_breakdown=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        model_flops_total=mf, useful_ratio=useful,
+        bottleneck=max(terms, key=terms.get),
+        memory_analysis=mem)

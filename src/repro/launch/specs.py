@@ -1,0 +1,98 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(arch × shape) cell — weak-type-correct, shardable, zero allocation.
+
+Modality frontends are stubs per the brief: ``enc_feats`` (audio frames) and
+``patch_feats`` (vision patches) arrive as precomputed embeddings.  For the
+VLM the text length is reduced so patches + text == the cell's seq_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import ArchConfig, ShapeCell, init_cache_shapes
+from ..parallel.sharding import batch_sharding, cache_shardings, data_axes_of
+
+__all__ = ["input_specs", "input_shardings", "microbatches_for"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Model inputs for one cell.  Keys depend on cell.kind:
+
+    train:   tokens, labels (+ modality feats)
+    prefill: tokens (+ modality feats), caches
+    decode:  tokens (B,1), pos (B,), caches (+ enc_out for enc-dec)
+    """
+    B, T = cell.global_batch, cell.seq_len
+    out: Dict[str, Any] = {}
+    text_T = T
+    if cfg.frontend == "vision":
+        text_T = T - cfg.frontend_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if cell.kind == "train":
+        out["tokens"] = _sds((B, text_T), jnp.int32)
+        out["labels"] = _sds((B, text_T), jnp.int32)
+        if cfg.enc_dec:
+            out["enc_feats"] = _sds((B, cfg.frontend_len, cfg.frontend_dim), dt)
+        if cfg.frontend == "vision":
+            out["patch_feats"] = _sds((B, cfg.frontend_len, cfg.frontend_dim), dt)
+    elif cell.kind == "prefill":
+        out["tokens"] = _sds((B, text_T), jnp.int32)
+        if cfg.enc_dec:
+            out["enc_feats"] = _sds((B, cfg.frontend_len, cfg.frontend_dim), dt)
+        if cfg.frontend == "vision":
+            out["patch_feats"] = _sds((B, cfg.frontend_len, cfg.frontend_dim), dt)
+        out["caches"] = init_cache_shapes(cfg, B, T)
+    elif cell.kind == "decode":
+        out["tokens"] = _sds((B, 1), jnp.int32)
+        out["pos"] = _sds((B,), jnp.int32)
+        out["caches"] = init_cache_shapes(cfg, B, T)
+        if cfg.enc_dec:
+            out["enc_out"] = _sds((B, cfg.frontend_len, cfg.d_model), dt)
+    else:
+        raise ValueError(cell.kind)
+    return out
+
+
+def input_shardings(specs: Dict[str, Any], mesh: Mesh, cell: ShapeCell,
+                    ) -> Dict[str, Any]:
+    """NamedSharding tree matching ``input_specs`` output."""
+    B = cell.global_batch
+    out: Dict[str, Any] = {}
+    for k, v in specs.items():
+        if k == "caches":
+            out[k] = cache_shardings(v, mesh, B)
+        else:
+            out[k] = batch_sharding(mesh, v.shape)
+    return out
+
+
+# Per-arch microbatch counts for the train cells (memory-term lever; the
+# global batch must stay divisible by dp × n_micro).
+_BIG = {"deepseek-v3-671b", "jamba-1.5-large-398b", "dbrx-132b"}
+
+
+def microbatches_for(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh,
+                     override: Optional[int] = None) -> int:
+    if cell.kind != "train":
+        return 1
+    if override is not None:
+        return override
+    daxes = data_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes]))
+    cap = max(1, cell.global_batch // dp)      # ≥1 sequence per shard
+    want = 16 if cfg.name in _BIG else 8
+    n = min(want, cap)
+    while cell.global_batch % (dp * n):
+        n -= 1
+    return max(n, 1)

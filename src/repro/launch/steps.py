@@ -1,0 +1,56 @@
+"""Jittable step factories shared by the dry-run and the real launchers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ArchConfig, ModelCtx, decode_step, init_model, prefill
+from ..optim import adamw_init
+from ..runtime.train_loop import make_train_step
+from ..parallel.sharding import param_shardings, opt_state_shardings
+
+__all__ = ["build_train_fn", "build_prefill_fn", "build_decode_fn",
+           "model_state_shapes"]
+
+
+def model_state_shapes(cfg: ArchConfig, *, opt_state_dtype: Optional[str],
+                       optimizer: str = "adamw"):
+    """(params, opt_state) as ShapeDtypeStructs — no allocation."""
+    from ..optim import adafactor_init
+    p_shapes = jax.eval_shape(lambda k: init_model(k, cfg),
+                              jax.random.PRNGKey(0))
+    if optimizer == "adafactor":
+        o_shapes = jax.eval_shape(lambda: adafactor_init(p_shapes))
+    else:
+        o_shapes = jax.eval_shape(
+            lambda: adamw_init(p_shapes, state_dtype=opt_state_dtype))
+    return p_shapes, o_shapes
+
+
+def build_train_fn(cfg: ArchConfig, ctx: ModelCtx, n_microbatches: int,
+                   opt_state_dtype: Optional[str] = "bfloat16",
+                   acc_dtype: str = "float32",
+                   optimizer: str = "adamw") -> Callable:
+    step = make_train_step(cfg, ctx=ctx, n_microbatches=n_microbatches,
+                           opt_state_dtype=opt_state_dtype,
+                           acc_dtype=acc_dtype, optimizer=optimizer)
+
+    def train_fn(params, opt_state, batch):
+        return step(params, opt_state, batch)
+    return train_fn
+
+
+def build_prefill_fn(cfg: ArchConfig, ctx: ModelCtx) -> Callable:
+    def prefill_fn(params, batch, caches):
+        return prefill(params, batch, caches, cfg=cfg, ctx=ctx)
+    return prefill_fn
+
+
+def build_decode_fn(cfg: ArchConfig, ctx: ModelCtx) -> Callable:
+    def decode_fn(params, tokens, pos, caches, enc_out=None):
+        return decode_step(params, tokens, pos, caches, cfg=cfg, ctx=ctx,
+                           enc_out=enc_out)
+    return decode_fn

@@ -1,0 +1,5 @@
+"""Model zoo: composable JAX LM stacks covering the ten assigned archs."""
+from .config import (ArchConfig, LayerSpec, MLAConfig, MambaConfig, MoEConfig,
+                     SHAPE_CELLS, ShapeCell, shape_cell)  # noqa: F401
+from .lm import (ModelCtx, decode_step, init_cache_shapes, init_model,
+                 model_fwd, padded_vocab, prefill)  # noqa: F401

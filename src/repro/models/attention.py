@@ -1,0 +1,371 @@
+"""Attention layers: GQA (with sliding-window), MLA (DeepSeek-V3), and
+cross-attention — all built on a blockwise "flash" softmax that keeps the
+compiled memory footprint bounded (no (T, T) score materialization).
+
+Blocking scheme: the query axis is unrolled into static blocks; for each
+query block the KV axis is scanned with a *static* upper bound (causal: only
+blocks j ≤ i; sliding window: only the last ⌈W/bk⌉+1 blocks), so the
+compiled FLOPs match the true masked work instead of the dense rectangle —
+this is the TPU analogue of flash-attention's tile skipping.
+
+Params are plain nested dicts; shapes use (B, T, H, D) layouts internally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, MLAConfig
+
+__all__ = [
+    "init_gqa", "apply_gqa", "init_mla", "apply_mla",
+    "init_cross", "apply_cross", "rope", "flash_attention",
+]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, base: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (B, T, H, D) with even D; positions: (B, T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, T, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash) attention
+# ---------------------------------------------------------------------------
+
+def _attn_block(q, k, v, q_pos, k_pos, *, causal, window, kv_valid, scale):
+    """One (q-block, kv-block) tile.  q: (B,Hkv,G,bq,D), k/v: (B,Hkv,bk,D).
+
+    Returns the tile's (scores_max, exp_scores @ v, exp_scores sum) pieces
+    for online-softmax accumulation.
+    """
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    if kv_valid is not None:
+        mask &= kp < kv_valid
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    return s
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, kv_valid: Optional[jnp.ndarray] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """Blockwise softmax attention.
+
+    q: (B, Tq, Hq, D); k, v: (B, Tk, Hkv, Dk/Dv).  Hq % Hkv == 0 (GQA).
+    ``q_offset`` is the absolute position of q[0] (prefill continuation /
+    decode).  ``kv_valid`` masks a padded KV cache (scalar or (B,)).
+    Returns (B, Tq, Hq, Dv).
+    """
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    # (B, Hkv, G, T, D) layouts
+    qh = q.reshape(B, Tq, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    nq = -(-Tq // bq)
+    nk = -(-Tk // bk)
+    pad_q = nq * bq - Tq
+    pad_k = nk * bk - Tk
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        kv_valid = jnp.minimum(
+            jnp.asarray(Tk if kv_valid is None else kv_valid), Tk)
+
+    out_blocks = []
+    for i in range(nq):
+        q_blk = qh[:, :, :, i * bq:(i + 1) * bq]
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+
+        # static kv-block range for this q block (exact masked work)
+        if causal:
+            j_hi = min(nk, (q_offset + (i + 1) * bq + bk - 1) // bk)
+        else:
+            j_hi = nk
+        if window is not None:
+            j_lo = max(0, (q_offset + i * bq - window) // bk)
+        else:
+            j_lo = 0
+        n_steps = max(j_hi - j_lo, 1)
+
+        def step(carry, j):
+            m, num, den = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(kh, j * bk, bk, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(vh, j * bk, bk, axis=2)
+            k_pos = j * bk + jnp.arange(bk)
+            s = _attn_block(q_blk, k_blk, v_blk, q_pos, k_pos, causal=causal,
+                            window=window, kv_valid=kv_valid, scale=scale)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            num = num * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk,
+                preferred_element_type=jnp.float32)
+            den = den * corr + p.sum(axis=-1)
+            return (m_new, num, den), None
+
+        m0 = jnp.full((B, Hkv, G, bq), -jnp.inf, dtype=jnp.float32)
+        num0 = jnp.zeros((B, Hkv, G, bq, Dv), dtype=jnp.float32)
+        den0 = jnp.zeros((B, Hkv, G, bq), dtype=jnp.float32)
+        (m, num, den), _ = jax.lax.scan(
+            step, (m0, num0, den0), j_lo + jnp.arange(n_steps))
+        out_blocks.append(num / jnp.maximum(den, 1e-30)[..., None])
+
+    out = jnp.concatenate(out_blocks, axis=3) if nq > 1 else out_blocks[0]
+    out = out[:, :, :, :Tq]                                  # strip q padding
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, Dv).astype(q.dtype)
+
+
+def _decode_attention(q, k_cache, v_cache, kv_valid, *, window=None,
+                      scale=None):
+    """Single-token attention over a (possibly padded) KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, S, Hkv, D).  kv_valid: (B,) or scalar
+    count of valid cache slots (the new token's K/V already written).
+    """
+    B, _, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    kp = jnp.arange(S)
+    valid = kp[None, :] < jnp.reshape(jnp.asarray(kv_valid), (-1, 1))
+    if window is not None:
+        valid &= kp[None, :] > jnp.reshape(jnp.asarray(kv_valid), (-1, 1)) - window
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+def init_gqa(rng, cfg: ArchConfig, dtype) -> dict:
+    d, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(Hq * Dh)
+    return {
+        "wq": jax.random.normal(k1, (d, Hq, Dh), dtype) * s,
+        "wk": jax.random.normal(k2, (d, Hkv, Dh), dtype) * s,
+        "wv": jax.random.normal(k3, (d, Hkv, Dh), dtype) * s,
+        "wo": jax.random.normal(k4, (Hq, Dh, d), dtype) * so,
+    }
+
+
+def apply_gqa(params: dict, x: jnp.ndarray, *, cfg: ArchConfig,
+              window: Optional[int] = None, rope_base: float = 10_000.0,
+              positions: Optional[jnp.ndarray] = None,
+              cache: Optional[dict] = None,
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B, T, d).  Training/prefill when cache is None or being filled;
+    decode (T == 1) when ``cache`` has 'k','v','len'."""
+    B, T, d = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q = jnp.einsum("btd,dhx->bthx", x, params["wq"])
+    k = jnp.einsum("btd,dhx->bthx", x, params["wk"])
+    v = jnp.einsum("btd,dhx->bthx", x, params["wv"])
+    q = rope(q, positions, rope_base)
+    k = rope(k, positions, rope_base)
+
+    if cache is None:
+        o = flash_attention(q, k, v, causal=True, window=window)
+        new_cache = None
+    elif T > 1:
+        # prefill: attend over the fresh K/V, then fill the cache
+        o = flash_attention(q, k, v, causal=True, window=window)
+        S = cache["k"].shape[1]
+        if T >= S:
+            # ring smaller than prompt → keep the tail, aligned so that
+            # token p sits in slot p % S (decode continues the same ring)
+            shift = (T - S) % S
+            k_cache = jnp.roll(k[:, -S:], shift, axis=1)
+            v_cache = jnp.roll(v[:, -S:], shift, axis=1)
+        else:
+            k_cache = jax.vmap(lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, 0, 0))(
+                cache["k"], k)
+            v_cache = jax.vmap(lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, 0, 0))(
+                cache["v"], v)
+        kv_valid = jnp.minimum(positions[:, -1] + 1, S)
+        new_cache = {"k": k_cache, "v": v_cache, "len": kv_valid}
+    else:
+        slot = positions[:, 0] % cache["k"].shape[1]   # ring for windowed
+        k_cache = jax.vmap(lambda c, kk, s: jax.lax.dynamic_update_slice_in_dim(c, kk, s, 0))(
+            cache["k"], k, slot)
+        v_cache = jax.vmap(lambda c, vv, s: jax.lax.dynamic_update_slice_in_dim(c, vv, s, 0))(
+            cache["v"], v, slot)
+        kv_valid = jnp.minimum(positions[:, -1] + 1, k_cache.shape[1])
+        o = _decode_attention(q, k_cache, v_cache, kv_valid,
+                              window=None)  # window handled by ring size
+        new_cache = {"k": k_cache, "v": v_cache, "len": kv_valid}
+    out = jnp.einsum("bthx,hxd->btd", o, params["wo"])
+    return out, new_cache
+
+
+def gqa_cache_spec(cfg: ArchConfig, batch: int, max_len: int,
+                   window: Optional[int], dtype) -> dict:
+    """Shape template for a decode cache (ring-buffer sized for windows)."""
+    S = min(max_len, window) if window is not None else max_len
+    shp = (batch, S, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype),
+            "len": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, cfg: ArchConfig, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    keys = jax.random.split(rng, 7)
+    s = 1.0 / math.sqrt(d)
+    sq = 1.0 / math.sqrt(m.q_lora)
+    sk = 1.0 / math.sqrt(m.kv_lora)
+    return {
+        "wq_a": jax.random.normal(keys[0], (d, m.q_lora), dtype) * s,
+        "wq_b": jax.random.normal(keys[1], (m.q_lora, H, m.nope_dim + m.rope_dim), dtype) * sq,
+        "wkv_a": jax.random.normal(keys[2], (d, m.kv_lora + m.rope_dim), dtype) * s,
+        "wk_b": jax.random.normal(keys[3], (m.kv_lora, H, m.nope_dim), dtype) * sk,
+        "wv_b": jax.random.normal(keys[4], (m.kv_lora, H, m.v_dim), dtype) * sk,
+        "wo": jax.random.normal(keys[5], (H, m.v_dim, d), dtype) / math.sqrt(H * m.v_dim),
+        "q_norm": jnp.ones((m.q_lora,), dtype),
+        "kv_norm": jnp.ones((m.kv_lora,), dtype),
+    }
+
+
+def _rms(x, g, eps=1e-6):
+    n = x * jax.lax.rsqrt(jnp.mean(jnp.square(x.astype(jnp.float32)), -1,
+                                   keepdims=True) + eps)
+    return (n * g).astype(x.dtype)
+
+
+def apply_mla(params: dict, x: jnp.ndarray, *, cfg: ArchConfig,
+              rope_base: float = 10_000.0,
+              positions: Optional[jnp.ndarray] = None,
+              cache: Optional[dict] = None,
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """MLA.  Prefill: expand latent → per-head K/V and run flash attention.
+    Decode: *absorbed* form — queries are projected into the latent space and
+    attention runs over the compressed (kv_lora + rope) cache, which is the
+    whole point of MLA's small KV cache."""
+    m: MLAConfig = cfg.mla
+    B, T, d = x.shape
+    H = cfg.n_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    q_lat = _rms(jnp.einsum("btd,dr->btr", x, params["wq_a"]), params["q_norm"])
+    q = jnp.einsum("btr,rhx->bthx", q_lat, params["wq_b"])
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_rope = rope(q_rope, positions, rope_base)
+
+    kv = jnp.einsum("btd,dr->btr", x, params["wkv_a"])
+    c_kv = _rms(kv[..., :m.kv_lora], params["kv_norm"])   # (B, T, kv_lora)
+    k_rope = rope(kv[..., m.kv_lora:][:, :, None, :], positions, rope_base)
+
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+
+    if cache is None or T > 1:
+        k_nope = jnp.einsum("btr,rhx->bthx", c_kv, params["wk_b"])
+        v = jnp.einsum("btr,rhx->bthx", c_kv, params["wv_b"])
+        k = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(k_rope, (B, T, H, m.rope_dim))],
+                            axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = flash_attention(qq, k, v, causal=True, scale=scale)
+        new_cache = None
+        if cache is not None:   # prefill: stash the compressed latents
+            c_cache = jax.vmap(lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, 0, 0))(
+                cache["c"], c_kv)
+            r_cache = jax.vmap(lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, 0, 0))(
+                cache["r"], k_rope[:, :, 0, :])
+            new_cache = {"c": c_cache, "r": r_cache,
+                         "len": positions[:, -1] + 1}
+    else:
+        # absorbed decode: q_eff = W_kbᵀ q_nope lives in latent space
+        q_lat_abs = jnp.einsum("bthx,rhx->bthr", q_nope, params["wk_b"])
+        slot = positions[:, 0]
+        c_cache = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, 0))(
+            cache["c"], c_kv, slot)
+        r_cache = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, 0))(
+            cache["r"], k_rope[:, :, 0, :], slot)
+        kv_valid = positions[:, -1] + 1
+        s_lat = jnp.einsum("bthr,bsr->bhts", q_lat_abs.astype(jnp.float32),
+                           c_cache.astype(jnp.float32))
+        s_rope = jnp.einsum("bthx,bsx->bhts", q_rope.astype(jnp.float32),
+                            r_cache.astype(jnp.float32))
+        s = (s_lat + s_rope) * scale
+        valid = jnp.arange(c_cache.shape[1])[None, :] < kv_valid[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhts,bsr->bthr", p, c_cache.astype(jnp.float32))
+        o = jnp.einsum("bthr,rhx->bthx", o_lat.astype(x.dtype), params["wv_b"])
+        new_cache = {"c": c_cache, "r": r_cache, "len": kv_valid}
+
+    out = jnp.einsum("bthx,hxd->btd", o, params["wo"])
+    return out, new_cache
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {"c": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora), dtype),
+            "r": jax.ShapeDtypeStruct((batch, max_len, m.rope_dim), dtype),
+            "len": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross(rng, cfg: ArchConfig, dtype) -> dict:
+    return init_gqa(rng, cfg, dtype)
+
+
+def apply_cross(params: dict, x: jnp.ndarray, enc: jnp.ndarray, *,
+                cfg: ArchConfig) -> jnp.ndarray:
+    """x: (B, Tq, d) decoder states; enc: (B, Tk, d) encoder output."""
+    q = jnp.einsum("btd,dhx->bthx", x, params["wq"])
+    k = jnp.einsum("btd,dhx->bthx", enc, params["wk"])
+    v = jnp.einsum("btd,dhx->bthx", enc, params["wv"])
+    o = flash_attention(q, k, v, causal=False)
+    return jnp.einsum("bthx,hxd->btd", o, params["wo"])

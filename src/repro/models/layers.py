@@ -1,0 +1,66 @@
+"""Shared building blocks: RMSNorm, dense FFN variants, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+__all__ = ["rms_norm", "init_rms", "init_ffn", "apply_ffn",
+           "init_embedding", "embed", "logits"]
+
+
+def init_rms(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    n = x * jax.lax.rsqrt(jnp.mean(jnp.square(x.astype(jnp.float32)), -1,
+                                   keepdims=True) + eps)
+    return (n.astype(x.dtype) * gain)
+
+
+def init_ffn(rng, d: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_ff)
+    p = {"w_in": jax.random.normal(k1, (d, d_ff), dtype) * s_in,
+         "w_out": jax.random.normal(k2, (d_ff, d), dtype) * s_out}
+    if act == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d, d_ff), dtype) * s_in
+    return p
+
+
+def apply_ffn(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = jnp.einsum("btd,df->btf", x, params["w_in"])
+    if act == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":                    # Nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    return jnp.einsum("btf,fd->btd", h, params["w_out"])
+
+
+def init_embedding(rng, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    p = {"tok": jax.random.normal(k1, (cfg.vocab, cfg.d_model), dtype) * 0.02}
+    if not cfg.tie_embeddings:
+        p["out"] = jax.random.normal(k2, (cfg.d_model, cfg.vocab), dtype) \
+            / math.sqrt(cfg.d_model)
+    return p
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def logits(params: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", x, params["tok"])
+    return jnp.einsum("btd,dv->btv", x, params["out"])

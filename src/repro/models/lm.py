@@ -1,0 +1,343 @@
+"""Composable LM stack: decoder-only, encoder-decoder, hybrid, SSM.
+
+A model = embeddings + ``prefix`` (unrolled layers) + ``n_repeats`` copies of
+the repeating ``block`` run under ``jax.lax.scan`` (stacked params → compact
+HLO at any depth) + final norm + output head.  Modality frontends are stub
+projections of precomputed features (per the assignment brief).
+
+Three entry points:
+  * ``model_fwd``    — full-sequence forward (training / evaluation)
+  * ``prefill``      — full-sequence forward that also fills a decode cache
+  * ``decode_step``  — one token with cache (serving)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import layers as ly
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .config import ArchConfig, LayerSpec
+from ..parallel.ops import sharded_embed
+
+__all__ = ["init_model", "model_fwd", "prefill", "decode_step",
+           "init_cache_shapes", "padded_vocab", "ModelCtx"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Distribution context threaded through layer application.
+
+    ep_full: shard MoE experts over the *data* axes too (full-mesh expert
+    parallelism) — removes the FSDP all-gather of expert weights entirely
+    (§Perf hillclimb lever; requires num_experts % dp == 0)."""
+    mesh: Optional[jax.sharding.Mesh] = None
+    model_axis: str = "model"
+    ep_full: bool = False
+    remat_policy: str = "full"   # "full" | "dots" (save matmul outputs)
+    a2a_fp8: bool = False        # fp8 MoE dispatch payloads
+
+
+def padded_vocab(cfg: ArchConfig, mult: int = 512) -> int:
+    return -(-cfg.vocab // mult) * mult
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(rng, cfg: ArchConfig, spec: LayerSpec, *,
+                cross: bool = False) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(rng, 6)
+    p: Dict[str, Any] = {"norm1": ly.init_rms(cfg.d_model, dt),
+                         "norm2": ly.init_rms(cfg.d_model, dt)}
+    if spec.mixer == "attn":
+        if cfg.mla is not None:
+            p["mixer"] = attn.init_mla(keys[0], cfg, dt)
+        else:
+            p["mixer"] = attn.init_gqa(keys[0], cfg, dt)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm_mod.init_mamba(keys[0], cfg, dt)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rwkv_mod.init_rwkv_tmix(keys[0], cfg, dt)
+    if cross:
+        p["norm_x"] = ly.init_rms(cfg.d_model, dt)
+        p["cross"] = attn.init_cross(keys[1], cfg, dt)
+    if spec.ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(keys[2], cfg, dt)
+    elif spec.mixer == "rwkv":
+        p["ffn"] = rwkv_mod.init_rwkv_cmix(keys[2], cfg, dt)
+    else:
+        p["ffn"] = ly.init_ffn(keys[2], cfg.d_model, cfg.d_ff, spec.ffn, dt)
+    return p
+
+
+def _init_block(rng, cfg: ArchConfig, specs, *, cross: bool = False) -> dict:
+    keys = jax.random.split(rng, len(specs))
+    return {f"layer{i}": _init_layer(keys[i], cfg, s, cross=cross)
+            for i, s in enumerate(specs)}
+
+
+def init_model(rng, cfg: ArchConfig) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(rng, 8)
+    vocab_p = padded_vocab(cfg)
+    cfg_p = dataclasses.replace(cfg, vocab=vocab_p)
+    params: Dict[str, Any] = {"embed": ly.init_embedding(keys[0], cfg_p, dt)}
+
+    if cfg.prefix:
+        params["prefix"] = [
+            _init_layer(jax.random.fold_in(keys[1], i), cfg, s)
+            for i, s in enumerate(cfg.prefix)]
+    block_keys = jax.random.split(keys[2], cfg.n_repeats)
+    params["blocks"] = jax.vmap(
+        lambda k: _init_block(k, cfg, cfg.block))(block_keys)
+    params["final_norm"] = ly.init_rms(cfg.d_model, dt)
+
+    if cfg.enc_dec:
+        ekeys = jax.random.split(keys[3], cfg.n_enc_repeats)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _init_block(k, cfg, cfg.enc_block))(ekeys)
+        params["enc_norm"] = ly.init_rms(cfg.d_model, dt)
+        # decoder blocks get cross-attention
+        dkeys = jax.random.split(keys[4], cfg.n_repeats)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_block(k, cfg, cfg.block, cross=True))(dkeys)
+
+    if cfg.frontend is not None:
+        params["frontend"] = {
+            "proj": jax.random.normal(keys[5], (cfg.frontend_dim, cfg.d_model),
+                                      dt) / jnp.sqrt(cfg.frontend_dim)}
+    if cfg.mtp:
+        params["mtp"] = {
+            "norm": ly.init_rms(cfg.d_model, dt),
+            "proj": jax.random.normal(keys[6], (2 * cfg.d_model, cfg.d_model),
+                                      dt) / jnp.sqrt(2.0 * cfg.d_model)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p: dict, x, *, cfg: ArchConfig, spec: LayerSpec,
+                 ctx: ModelCtx, positions=None, cache=None, enc_out=None):
+    h = ly.rms_norm(x, p["norm1"], cfg.norm_eps)
+    mixer_cache = cache.get("mixer") if cache else None
+    if spec.mixer == "attn":
+        base = cfg.rope_base_local if spec.sliding_window else cfg.rope_base
+        if cfg.mla is not None:
+            mo, new_mc = attn.apply_mla(p["mixer"], h, cfg=cfg,
+                                        rope_base=base, positions=positions,
+                                        cache=mixer_cache)
+        else:
+            mo, new_mc = attn.apply_gqa(p["mixer"], h, cfg=cfg,
+                                        window=spec.sliding_window,
+                                        rope_base=base, positions=positions,
+                                        cache=mixer_cache)
+    elif spec.mixer == "mamba":
+        mo, new_mc = ssm_mod.apply_mamba(p["mixer"], h, cfg=cfg,
+                                         cache=mixer_cache)
+    elif spec.mixer == "rwkv":
+        mo, new_mc = rwkv_mod.apply_rwkv_tmix(p["mixer"], h, cfg=cfg,
+                                              cache=mixer_cache)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + mo
+
+    if "cross" in p and enc_out is not None:
+        hx = ly.rms_norm(x, p["norm_x"], cfg.norm_eps)
+        x = x + attn.apply_cross(p["cross"], hx, enc_out, cfg=cfg)
+
+    h2 = ly.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if spec.ffn == "moe":
+        fo = moe_mod.apply_moe(p["ffn"], h2, cfg=cfg, mesh=ctx.mesh,
+                               model_axis=ctx.model_axis,
+                               ep_full=ctx.ep_full, a2a_fp8=ctx.a2a_fp8)
+        new_fc = None
+    elif spec.mixer == "rwkv":
+        fo, new_mc = rwkv_mod.apply_rwkv_cmix(p["ffn"], h2, cache=new_mc)
+    else:
+        fo = ly.apply_ffn(p["ffn"], h2, spec.ffn)
+    x = x + fo
+    new_cache = {"mixer": new_mc} if new_mc is not None else {}
+    return x, new_cache
+
+
+def _run_stack(params, x, *, cfg: ArchConfig, specs, stacked, ctx: ModelCtx,
+               positions=None, caches=None, enc_out=None):
+    """Run ``prefix`` (list of layer params) or scanned ``blocks``."""
+    if not stacked:
+        new_caches = []
+        for i, (p, spec) in enumerate(zip(params, specs)):
+            c = caches[i] if caches is not None else None
+            x, nc = _apply_layer(p, x, cfg=cfg, spec=spec, ctx=ctx,
+                                 positions=positions, cache=c,
+                                 enc_out=enc_out)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def body(carry, xs):
+        h = carry
+        block_params, block_cache = xs
+        new_block_cache = {}
+        for i, spec in enumerate(specs):
+            c = block_cache.get(f"layer{i}") if block_cache else None
+            h, nc = _apply_layer(block_params[f"layer{i}"], h, cfg=cfg,
+                                 spec=spec, ctx=ctx, positions=positions,
+                                 cache=c, enc_out=enc_out)
+            new_block_cache[f"layer{i}"] = nc
+        return h, new_block_cache
+
+    if caches is None:
+        if ctx.remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+    x, new_caches = jax.lax.scan(
+        body, x, (params, caches if caches is not None else {}))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _encoder(params, feats, *, cfg: ArchConfig, ctx: ModelCtx):
+    x = jnp.einsum("btf,fd->btd", feats, params["frontend"]["proj"])
+    x, _ = _run_stack(params["enc_blocks"], x, cfg=cfg, specs=cfg.enc_block,
+                      stacked=True, ctx=ctx)
+    return ly.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _trunk(params, x, *, cfg: ArchConfig, ctx: ModelCtx, positions=None,
+           caches=None, enc_out=None):
+    new_caches = {}
+    if cfg.prefix:
+        x, nc = _run_stack(params["prefix"], x, cfg=cfg, specs=cfg.prefix,
+                           stacked=False, positions=positions, ctx=ctx,
+                           caches=caches.get("prefix") if caches else None,
+                           enc_out=enc_out)
+        new_caches["prefix"] = nc
+    x, nc = _run_stack(params["blocks"], x, cfg=cfg, specs=cfg.block,
+                       stacked=True, positions=positions, ctx=ctx,
+                       caches=caches.get("blocks") if caches else None,
+                       enc_out=enc_out)
+    new_caches["blocks"] = nc
+    return ly.rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches
+
+
+def model_fwd(params, batch: Dict[str, jnp.ndarray], *, cfg: ArchConfig,
+              ctx: ModelCtx = ModelCtx()) -> Dict[str, jnp.ndarray]:
+    """Full-sequence forward.  Returns {"logits", optional "mtp_logits"}.
+
+    batch: tokens (B, T); audio/enc feats (B, Ts, F) for enc-dec;
+    patch feats (B, P, F) for VLM prefix conditioning.
+    """
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = sharded_embed(params["embed"]["tok"], tokens, ctx.mesh,
+                      ctx.model_axis)
+    enc_out = None
+    n_prefix_tokens = 0
+
+    if cfg.enc_dec:
+        enc_out = _encoder(params, batch["enc_feats"], cfg=cfg, ctx=ctx)
+    elif cfg.frontend == "vision":
+        pre = jnp.einsum("bpf,fd->bpd", batch["patch_feats"],
+                         params["frontend"]["proj"])
+        n_prefix_tokens = pre.shape[1]
+        x = jnp.concatenate([pre, x], axis=1)
+
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (B, x.shape[1]))
+    x, _ = _trunk(params, x, cfg=cfg, ctx=ctx, positions=positions,
+                  enc_out=enc_out)
+    if n_prefix_tokens:
+        x = x[:, n_prefix_tokens:]
+    out = {"logits": ly.logits(params["embed"], x,
+                               dataclasses.replace(cfg, vocab=padded_vocab(cfg)))}
+    if cfg.mtp:
+        nxt = jnp.concatenate([x[:, 1:], x[:, -1:]], axis=1)
+        h = jnp.concatenate([ly.rms_norm(x, params["mtp"]["norm"],
+                                         cfg.norm_eps), nxt], axis=-1)
+        h = jnp.einsum("bte,ed->btd", h, params["mtp"]["proj"])
+        out["mtp_logits"] = ly.logits(
+            params["embed"], h, dataclasses.replace(cfg, vocab=padded_vocab(cfg)))
+    return out
+
+
+def init_cache_shapes(cfg: ArchConfig, batch: int, max_len: int,
+                      ) -> Dict[str, Any]:
+    """ShapeDtypeStruct cache template (dry-run) — zeros via tree_map for
+    real serving."""
+    dt = _dtype(cfg)
+
+    def layer_cache(spec: LayerSpec):
+        if spec.mixer == "attn":
+            if cfg.mla is not None:
+                return {"mixer": attn.mla_cache_spec(cfg, batch, max_len, dt)}
+            return {"mixer": attn.gqa_cache_spec(cfg, batch, max_len,
+                                                 spec.sliding_window, dt)}
+        if spec.mixer == "mamba":
+            return {"mixer": ssm_mod.mamba_cache_spec(cfg, batch, dt)}
+        if spec.mixer == "rwkv":
+            return {"mixer": rwkv_mod.rwkv_cache_spec(cfg, batch, dt)}
+        return {}
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_repeats,) + s.shape, s.dtype),
+            tree)
+
+    caches: Dict[str, Any] = {}
+    if cfg.prefix:
+        caches["prefix"] = [layer_cache(s) for s in cfg.prefix]
+    caches["blocks"] = stack({f"layer{i}": layer_cache(s)
+                              for i, s in enumerate(cfg.block)})
+    return caches
+
+
+def prefill(params, batch, caches, *, cfg: ArchConfig,
+            ctx: ModelCtx = ModelCtx()):
+    """Process the prompt, fill the cache, return last-position logits."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = sharded_embed(params["embed"]["tok"], tokens, ctx.mesh,
+                      ctx.model_axis)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _encoder(params, batch["enc_feats"], cfg=cfg, ctx=ctx)
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x, new_caches = _trunk(params, x, cfg=cfg, ctx=ctx, positions=positions,
+                           caches=caches, enc_out=enc_out)
+    logits = ly.logits(params["embed"], x[:, -1:],
+                       dataclasses.replace(cfg, vocab=padded_vocab(cfg)))
+    return logits, new_caches
+
+
+def decode_step(params, tokens, pos, caches, *, cfg: ArchConfig,
+                ctx: ModelCtx = ModelCtx(), enc_out=None):
+    """One decode step.  tokens (B, 1), pos (B,) absolute positions."""
+    B = tokens.shape[0]
+    x = sharded_embed(params["embed"]["tok"], tokens, ctx.mesh,
+                      ctx.model_axis)
+    positions = pos[:, None]
+    x, new_caches = _trunk(params, x, cfg=cfg, ctx=ctx, positions=positions,
+                           caches=caches, enc_out=enc_out)
+    logits = ly.logits(params["embed"], x,
+                       dataclasses.replace(cfg, vocab=padded_vocab(cfg)))
+    return logits, new_caches

@@ -1,0 +1,183 @@
+"""RWKV-6 ("Finch") mixer: data-dependent decay time-mix + channel-mix.
+
+The WKV recurrence runs in the chunk-parallel form (see kernels/wkv6.py for
+the TPU Pallas version and the derivation); the model-side implementation
+here is the same math in pure jnp with a ``lax.scan`` over chunks, which
+keeps the HLO small for the dry-run and is the oracle-consistent fallback on
+CPU.  Decode carries (token-shift state, per-head WKV state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+__all__ = ["init_rwkv_tmix", "apply_rwkv_tmix", "init_rwkv_cmix",
+           "apply_rwkv_cmix", "rwkv_cache_spec"]
+
+
+def wkv6_chunked(r, k, v, w, u, chunk: int = 64):
+    """Chunk-parallel WKV6.  r,k,w: (B,H,T,K), v: (B,H,T,V), u: (H,K).
+    Returns (out (B,H,T,V), final state (B,H,K,V))."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    if T % chunk:
+        pad = chunk - T % chunk
+        r = jnp.pad(r, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    Tp = r.shape[2]
+    nc = Tp // chunk
+
+    def resh(x):
+        return x.reshape(B, H, nc, chunk, x.shape[-1]).transpose(2, 0, 1, 3, 4)
+
+    rs, ks, vs, ws = map(resh, (r, k, v, w))      # (nc, B, H, C, ·)
+
+    def per_chunk(S, inp):
+        rc, kc, vc, wc = (t.astype(jnp.float32) for t in inp)   # (B,H,C,·)
+        lw = jnp.log(jnp.maximum(wc, 1e-12))
+        lc = jnp.cumsum(lw, axis=2)
+        lc_prev = lc - lw
+        r_dec = rc * jnp.exp(lc_prev)
+        k_grow = kc * jnp.exp(-lc)
+        p = jnp.einsum("bhtk,bhsk->bhts", r_dec, k_grow)
+        t_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        s_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        p = jnp.where(t_i > s_i, p, 0.0)
+        o = jnp.einsum("bhts,bhsv->bhtv", p, vc)
+        bonus = jnp.einsum("bhtk,bhtk->bht", rc * u[None, :, None, :], kc)
+        o = o + bonus[..., None] * vc
+        o = o + jnp.einsum("bhtk,bhkv->bhtv", r_dec, S)
+        lc_last = lc[:, :, -1]                                   # (B,H,K)
+        k_carry = kc * jnp.exp(lc_last[:, :, None, :] - lc)
+        S_new = (jnp.exp(lc_last)[..., None] * S
+                 + jnp.einsum("bhtk,bhtv->bhkv", k_carry, vc))
+        return S_new, o
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    S_fin, outs = jax.lax.scan(per_chunk, S0, (rs, ks, vs, ws))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, Tp, V)[:, :, :T]
+    return out.astype(v.dtype), S_fin
+
+
+def init_rwkv_tmix(rng, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    keys = jax.random.split(rng, 8)
+    s = 1.0 / math.sqrt(d)
+    lora = 64
+    return {
+        "mu": jax.random.uniform(keys[0], (5, d), dtype),   # r,k,v,w,g shifts
+        "wr": jax.random.normal(keys[1], (d, d), dtype) * s,
+        "wk": jax.random.normal(keys[2], (d, d), dtype) * s,
+        "wv": jax.random.normal(keys[3], (d, d), dtype) * s,
+        "wg": jax.random.normal(keys[4], (d, d), dtype) * s,
+        "w0": jnp.full((d,), -2.0, dtype),                  # base decay
+        "w_lora_a": jax.random.normal(keys[5], (d, lora), dtype) * s,
+        "w_lora_b": jax.random.normal(keys[6], (lora, d), dtype) * 0.01,
+        "u": jax.random.normal(keys[7], (H, hs), dtype) * 0.1,
+        "wo": jax.random.normal(jax.random.fold_in(rng, 9), (d, d), dtype) * s,
+        "ln_g": jnp.ones((d,), dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]):
+    """Previous-token tensor; ``last`` (B, d) continues across decode steps."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :]
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def apply_rwkv_tmix(params: dict, x: jnp.ndarray, *, cfg: ArchConfig,
+                    cache: Optional[dict] = None,
+                    ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    B, T, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    prev = _token_shift(x, cache["shift_t"] if cache is not None else None)
+    mu = params["mu"]
+    xr, xk, xv, xw, xg = (x + (prev - x) * mu[i] for i in range(5))
+
+    r = xr @ params["wr"]
+    k = xk @ params["wk"]
+    v = xv @ params["wv"]
+    g = jax.nn.silu(xg @ params["wg"])
+    w_log = params["w0"] + (jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"])
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32)))        # decay ∈ (0,1)
+
+    def heads(t):
+        return t.reshape(B, T, H, hs).transpose(0, 2, 1, 3)
+
+    rh, kh, vh, wh = heads(r), heads(k), heads(v), heads(w.astype(x.dtype))
+
+    if cache is None:
+        o, _ = wkv6_chunked(rh, kh, vh, wh, params["u"].astype(jnp.float32))
+        new_cache = None
+    elif T == 1:
+        S = cache["wkv"].astype(jnp.float32)                 # (B,H,K,V)
+        r1 = rh[:, :, 0].astype(jnp.float32)
+        k1 = kh[:, :, 0].astype(jnp.float32)
+        v1 = vh[:, :, 0].astype(jnp.float32)
+        w1 = wh[:, :, 0].astype(jnp.float32)
+        kv = k1[..., None] * v1[..., None, :]
+        o1 = jnp.einsum("bhk,bhkv->bhv",
+                        r1, S + params["u"].astype(jnp.float32)[None, :, :, None] * kv)
+        S = w1[..., None] * S + kv
+        o = o1[:, :, None, :].astype(x.dtype)
+        new_cache = {"wkv": S.astype(cache["wkv"].dtype), "shift_t": x[:, -1],
+                     "shift_c": cache["shift_c"]}
+    else:                                                    # prefill
+        o, S = wkv6_chunked(rh, kh, vh, wh, params["u"].astype(jnp.float32))
+        new_cache = {"wkv": S.astype(cache["wkv"].dtype), "shift_t": x[:, -1],
+                     "shift_c": cache["shift_c"]}
+
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, d)
+    from .layers import rms_norm
+    o = rms_norm(o, params["ln_g"]) * g
+    return o @ params["wo"], new_cache
+
+
+def init_rwkv_cmix(rng, cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "mu": jax.random.uniform(k1, (2, d), dtype),
+        "wk": jax.random.normal(k2, (d, f), dtype) / math.sqrt(d),
+        "wv": jax.random.normal(k3, (f, d), dtype) / math.sqrt(f),
+        "wr": jax.random.normal(jax.random.fold_in(k1, 1), (d, d), dtype) / math.sqrt(d),
+    }
+
+
+def apply_rwkv_cmix(params: dict, x: jnp.ndarray, *,
+                    cache: Optional[dict] = None,
+                    ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    prev = _token_shift(x, cache["shift_c"] if cache is not None else None)
+    mu = params["mu"]
+    xk = x + (prev - x) * mu[0]
+    xr = x + (prev - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    out = jax.nn.sigmoid(xr @ params["wr"]) * (k @ params["wv"])
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["shift_c"] = x[:, -1]
+    return out, new_cache
+
+
+def rwkv_cache_spec(cfg: ArchConfig, batch: int, dtype) -> dict:
+    hs = cfg.rwkv_head_size
+    H = cfg.d_model // hs
+    return {
+        "wkv": jax.ShapeDtypeStruct((batch, H, hs, hs), jnp.float32),
+        "shift_t": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+        "shift_c": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+    }

@@ -1,0 +1,4 @@
+"""Optimizers (pure-JAX, pytree-based, sharding-transparent)."""
+from .adamw import adamw_init, adamw_update, OptState  # noqa: F401
+from .adafactor import adafactor_init, adafactor_update  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401

@@ -1,0 +1,69 @@
+"""Adafactor (factored second moment) — the memory-lean optimizer option for
+the ≥300B configs: O(n+m) state per (n, m) matrix instead of O(nm)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adafactor_init", "adafactor_update"]
+
+
+class _Factored(NamedTuple):
+    row: jnp.ndarray
+    col: jnp.ndarray
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    second: Any          # per-leaf: _Factored for >=2D, full array otherwise
+
+
+def _is_factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def init(p):
+        if _is_factored(p):
+            return _Factored(row=jnp.zeros(p.shape[:-1], jnp.float32),
+                             col=jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                           jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          second=jax.tree.map(init, params,
+                                              is_leaf=None))
+
+
+def adafactor_update(params, grads, state: AdafactorState, *, lr,
+                     decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0):
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+    def upd(p, g, s):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + eps
+        if isinstance(s, _Factored):
+            row = beta * s.row + (1 - beta) * g2.mean(axis=-1)
+            col = beta * s.col + (1 - beta) * g2.mean(axis=-2)
+            row_mean = row.mean(axis=-1, keepdims=True)
+            v = (row / jnp.maximum(row_mean, eps))[..., None] * col[..., None, :]
+            new_s = _Factored(row=row, col=col)
+        else:
+            v = beta * s + (1 - beta) * g2
+            new_s = v
+        u = gf / jnp.sqrt(jnp.maximum(v, eps))
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        p_new = p.astype(jnp.float32) - lr_t * u
+        return p_new.astype(p.dtype), new_s
+
+    is_leaf = lambda t: isinstance(t, _Factored)
+    out = jax.tree.map(upd, params, grads, state.second, is_leaf=is_leaf)
+    two = lambda t: isinstance(t, tuple) and len(t) == 2 and not isinstance(t, _Factored)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=two)
+    new_second = jax.tree.map(lambda t: t[1], out, is_leaf=two)
+    return new_params, AdafactorState(step=step, second=new_second)

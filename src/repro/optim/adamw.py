@@ -1,0 +1,69 @@
+"""AdamW with optional low-precision moments.
+
+Moments inherit the parameter sharding automatically under pjit (they are
+tree_map images of the params).  ``state_dtype="bfloat16"`` halves optimizer
+memory for the ≥100B configs (recorded as a §Perf memory-term lever).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw_init", "adamw_update"]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, state_dtype: Optional[str] = None) -> OptState:
+    def zeros_like(p):
+        dt = jnp.dtype(state_dtype) if state_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros_like, params),
+                    nu=jax.tree.map(zeros_like, params))
+
+
+def adamw_update(params, grads, state: OptState, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: Optional[float] = 1.0):
+    """Returns (new_params, new_state).  ``lr`` may be a scalar or a
+    step-indexed callable."""
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)) + 1e-16)
+        scale = jnp.minimum(1.0, grad_clip / gnorm)
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr_t * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,4 @@
+"""Distribution layer: sharding rules, heterogeneous shard planning."""
+from .sharding import (param_shardings, batch_sharding, cache_shardings,
+                       opt_state_shardings)  # noqa: F401
+from .hetero import hetero_split, replan_on_failure  # noqa: F401

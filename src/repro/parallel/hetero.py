@@ -1,0 +1,73 @@
+"""Heterogeneous shard planning — the paper's Theorem 1 applied to device
+groups (DESIGN.md §2.3).
+
+A TPU fleet is rarely uniform: mixed generations across pods, degraded
+hosts, or DCN-distant pod groups.  Given per-group throughput profiles
+(exactly the paper's (a, u, γ) triples at pod granularity), the planner:
+
+* ``hetero_split`` — unequal data-parallel shard sizes ∝ 1/θ (Theorem 1),
+  rounded to whole examples while preserving the global batch;
+* ``replan_on_failure`` — elastic re-plan over the surviving groups (the
+  paper's load re-allocation when Ω changes);
+* ``coded_batch_plan`` — with MDS-coded gradient aggregation enabled, adds
+  the Theorem-1 redundancy so the step completes from any prefix of groups
+  whose loads sum to the required batch (straggler tolerance without
+  re-execution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.allocation import markov_loads
+from ..sim.cluster import ClusterProfile
+
+__all__ = ["hetero_split", "replan_on_failure", "coded_batch_plan"]
+
+
+def _theta_of_profile(profile: ClusterProfile) -> np.ndarray:
+    return np.array([profile.classes[c].unit_delay for c in profile.members])
+
+
+def _largest_remainder_round(loads: np.ndarray, total: int) -> np.ndarray:
+    """Round non-negative loads to integers summing to ``total``."""
+    scaled = loads / loads.sum() * total
+    base = np.floor(scaled).astype(int)
+    rem = total - base.sum()
+    order = np.argsort(-(scaled - base))
+    base[order[:rem]] += 1
+    return base
+
+
+def hetero_split(profile: ClusterProfile, global_batch: int) -> np.ndarray:
+    """Per-group batch shard sizes ∝ 1/θ (Theorem 1 without redundancy)."""
+    theta = _theta_of_profile(profile)
+    inv = 1.0 / theta
+    return _largest_remainder_round(inv, global_batch)
+
+
+def coded_batch_plan(profile: ClusterProfile, global_batch: int,
+                     ) -> Tuple[np.ndarray, float]:
+    """Theorem-1 loads *with* redundancy for coded gradient aggregation.
+
+    Returns (integer per-group loads summing to ≈2×global_batch, predicted
+    completion t* in the profile's time unit).  Any subset of groups whose
+    loads reach ``global_batch`` reconstructs the full-batch gradient
+    (k-of-n MDS property)."""
+    theta = _theta_of_profile(profile)[None, :]   # single "master"
+    l, t = markov_loads(np.array([float(global_batch)]), theta)
+    total = int(round(l.sum()))
+    return _largest_remainder_round(l[0], total), float(t[0])
+
+
+def replan_on_failure(profile: ClusterProfile, global_batch: int,
+                      failed: Sequence[int]) -> Tuple[ClusterProfile, np.ndarray]:
+    """Drop failed groups, re-solve the split over survivors."""
+    keep = [i for i in range(profile.N) if i not in set(failed)]
+    if not keep:
+        raise RuntimeError("no surviving worker groups")
+    new_profile = dataclasses.replace(
+        profile, members=tuple(profile.members[i] for i in keep))
+    return new_profile, hetero_split(new_profile, global_batch)

@@ -1,0 +1,236 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Strategy (DESIGN.md §5):
+* tensor-parallel ("model" axis): attention heads, FFN hidden, MoE experts,
+  vocab — classic Megatron splits;
+* fully-sharded data-parallel (("pod","data") axes): the largest remaining
+  dim of every ≥2D weight is sharded across the DP axes (ZeRO-3 equivalent —
+  XLA all-gathers weights on use, reduce-scatters grads);
+* KV heads replicate when ``n_kv_heads`` doesn't divide the model axis (the
+  standard GQA-under-TP fallback);
+* 1D params (norm gains, biases) replicate.
+
+Rules are *path+shape* driven so they apply to every architecture in the zoo
+without per-arch tables.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_shardings", "batch_sharding", "cache_shardings",
+           "opt_state_shardings", "data_axes_of"]
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _tp_dim(path: str, shape: Tuple[int, ...]) -> Optional[int]:
+    """Which dim gets the 'model' axis for this leaf, or None."""
+    nd = len(shape)
+    # embeddings
+    if path.endswith("embed.tok"):
+        return 0                       # vocab rows
+    if path.endswith("embed.out"):
+        return 1                       # vocab cols
+    # attention
+    if path.endswith(".wq") or path.endswith("wq_b"):
+        return 1                       # heads
+    if path.endswith(".wk") or path.endswith(".wv"):
+        return 1                       # kv heads (checked divisible by caller)
+    if path.endswith(".wo") and nd == 3:
+        return 0                       # heads
+    if path.endswith("wk_b") or path.endswith("wv_b"):
+        return 1                       # MLA heads
+    # dense / shared FFN
+    if path.endswith("w_in") and nd == 2:
+        return 1
+    if path.endswith("w_gate") and nd == 2:
+        return 1
+    if path.endswith("w_out") and nd == 2:
+        return 0
+    if "shared_in" in path or "shared_gate" in path:
+        return 1
+    if "shared_out" in path:
+        return 0
+    # MoE experts (E, d, f) / (E, f, d)
+    if nd == 3 and (path.endswith("ffn.w_in") or path.endswith("ffn.w_gate")
+                    or path.endswith("ffn.w_out")):
+        return 0                       # expert axis
+    # mamba
+    if path.endswith("mixer.w_in") and nd == 2:
+        return 1
+    if path.endswith("mixer.w_out") and nd == 2:
+        return 0
+    if path.endswith("w_bcdt") or path.endswith("a_log"):
+        return 0
+    if path.endswith("mixer.conv"):
+        return 1
+    # rwkv
+    if any(path.endswith(s) for s in (".wr", ".wk", ".wv", ".wg")) and nd == 2:
+        return 1
+    if path.endswith(".u") and nd == 2:
+        return 0                       # heads
+    return None
+
+
+def _spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh,
+              *, fsdp: bool = True, stacked: bool = False,
+              moe_full_ep: bool = False) -> P:
+    """Build the PartitionSpec for one leaf.  ``stacked`` marks a leading
+    n_repeats axis (from the block scan) that must stay unsharded."""
+    model = mesh.shape.get("model", 1)
+    daxes = data_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    off = 1 if stacked else 0
+    body = shape[off:]
+    spec: list = [None] * len(shape)
+
+    # full-mesh expert parallelism: (E, d, f) → (E/dp, d, f/tp)
+    if moe_full_ep and len(body) == 3 and (
+            path.endswith("ffn.w_in") or path.endswith("ffn.w_gate")
+            or path.endswith("ffn.w_out")) and body[0] % dp == 0:
+        spec[off + 0] = daxes if len(daxes) > 1 else daxes[0]
+        hid = 2 if path.endswith("ffn.w_in") or path.endswith("ffn.w_gate") \
+            else 1
+        if body[hid] % model == 0 and model > 1:
+            spec[off + hid] = "model"
+        return P(*spec)
+
+    td = _tp_dim(path, body)
+    if td is not None and body[td] % model == 0 and model > 1:
+        spec[off + td] = "model"
+
+    if fsdp and dp > 1 and len(body) >= 2:
+        # shard the largest remaining dim over the DP axes
+        cands = [i for i in range(len(body)) if spec[off + i] is None
+                 and body[i] % dp == 0]
+        if cands:
+            big = max(cands, key=lambda i: body[i])
+            if body[big] >= 2 * dp:     # don't shred small dims
+                spec[off + big] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*spec)
+
+
+def _paths(tree: Any, prefix: str = ""):
+    """(path, leaf) pairs with dict keys joined by '.'."""
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out += _paths(v, f"{prefix}.{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += _paths(v, f"{prefix}[{i}]")
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def param_shardings(params_shapes: Any, mesh: Mesh, *, fsdp: bool = True,
+                    moe_full_ep: bool = False):
+    """NamedSharding tree matching a params (shape) tree.
+
+    Leaves under 'blocks'/'enc_blocks' have a leading stacked n_repeats axis.
+    """
+    flat = _paths(params_shapes)
+    specs = {}
+    for path, leaf in flat:
+        stacked = ("blocks" in path.split(".")[0] or ".blocks." in path
+                   or path.startswith("enc_blocks"))
+        specs[path] = _spec_for(path, tuple(leaf.shape), mesh, fsdp=fsdp,
+                                stacked=stacked, moe_full_ep=moe_full_ep)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}.{k}" if prefix else str(k))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [rebuild(v, f"{prefix}[{i}]") for i, v in enumerate(tree)]
+            return type(tree)(t)
+        return NamedSharding(mesh, specs[prefix])
+
+    return rebuild(params_shapes)
+
+
+def batch_sharding(mesh: Mesh, batch_shape: Tuple[int, ...],
+                   *, batch_dim: int = 0):
+    """Shard the batch dim over the DP axes when divisible, else replicate
+    (e.g. long_500k's global_batch=1)."""
+    daxes = data_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    spec: list = [None] * len(batch_shape)
+    if dp > 1 and batch_shape[batch_dim] % dp == 0:
+        spec[batch_dim] = daxes if len(daxes) > 1 else daxes[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh, batch: int):
+    """KV caches: batch over DP axes when divisible; otherwise shard the
+    sequence axis (long-context single-request decode); head-ish dims on
+    'model' when divisible."""
+    daxes = data_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    model = mesh.shape.get("model", 1)
+    dspec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def spec_of(leaf):
+        shp = leaf.shape
+        spec: list = [None] * len(shp)
+        # layout: (n_repeats, batch, seq, heads/dims...) or (batch, ...)
+        bdim = 1 if len(shp) >= 2 and shp[0] != batch else 0
+        if bdim < len(shp) and shp[bdim] == batch and batch % dp == 0 and dp > 1:
+            spec[bdim] = dspec
+        elif len(shp) > bdim + 1 and shp[bdim + 1] % dp == 0 and dp > 1 \
+                and shp[bdim + 1] >= 4 * dp:
+            spec[bdim + 1] = dspec      # sequence sharding fallback
+        # try the model axis on a heads-like trailing dim
+        for dim in range(len(shp) - 1, bdim + 1, -1):
+            if spec[dim] is None and shp[dim] % model == 0 and model > 1 \
+                    and shp[dim] >= model:
+                spec[dim] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(spec_of, cache_shapes)
+
+
+def opt_state_shardings(opt_shapes: Any, params_shardings: Any):
+    """Optimizer-state shardings.
+
+    AdamW moments mirror the parameter shardings exactly.  Adafactor's
+    factored second moment inherits the parent spec with the reduced dim
+    dropped (row = spec[:-1], col = spec[:-2] + spec[-1:]).  Scalars
+    replicate.
+    """
+    flat_p, _ = jax.tree.flatten(params_shardings)
+    mesh = flat_p[0].mesh
+    rep = NamedSharding(mesh, P())
+
+    if hasattr(opt_shapes, "mu"):          # AdamW OptState
+        return type(opt_shapes)(step=rep, mu=params_shardings,
+                                nu=params_shardings)
+
+    if hasattr(opt_shapes, "second"):      # AdafactorState
+        from ..optim.adafactor import _Factored
+
+        def factored(ps):
+            spec = list(ps.spec) + [None] * 8
+            nd = len(ps.spec)
+            row = P(*spec[:max(nd - 1, 0)])
+            col = P(*(list(spec[:max(nd - 2, 0)]) + [spec[nd - 1]]
+                      if nd >= 2 else []))
+            return _Factored(row=NamedSharding(mesh, row),
+                             col=NamedSharding(mesh, col))
+
+        second = jax.tree.map(
+            lambda leaf, ps: factored(ps) if isinstance(leaf, _Factored)
+            else ps,
+            opt_shapes.second, params_shardings,
+            is_leaf=lambda t: isinstance(t, _Factored))
+        return type(opt_shapes)(step=rep, second=second)
+
+    raise TypeError(f"unknown optimizer state {type(opt_shapes)}")

@@ -1,0 +1,6 @@
+"""Distributed runtime: coded execution, straggler mitigation, train/serve
+loops."""
+from .coded_exec import CodedExecutor, ExecutionReport  # noqa: F401
+from .coded_grads import coded_grad_aggregate, encode_grad_shards  # noqa: F401
+from .straggler import BackupTaskPolicy, DeadlinePolicy  # noqa: F401
+from .train_loop import TrainLoop, TrainLoopConfig  # noqa: F401

@@ -1,0 +1,2 @@
+"""Monte-Carlo simulation of the coded-computation system (paper §V)."""
+from .montecarlo import SimResult, simulate_plan  # noqa: F401

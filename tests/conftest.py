@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make src/ importable without installation.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real (single) device; only the dry-run
+# pins 512 devices, inside its own process.

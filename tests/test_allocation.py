@@ -1,0 +1,99 @@
+"""Theorems 1/2/3 and the Lambert-W implementation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (comp_dominant_loads, fractional_loads, lambertw_m1,
+                        markov_loads, phi_comp_dominant, small_scale_scenario,
+                        theta_dedicated)
+from repro.core.delays import expected_received
+
+
+def test_lambertw_identity():
+    ys = -np.exp(np.linspace(np.log(1e-14), -1.0000001, 200))
+    w = lambertw_m1(ys)
+    np.testing.assert_allclose(w * np.exp(w), ys, rtol=1e-10)
+    assert np.all(w <= -1.0)
+
+
+def test_lambertw_against_scipy():
+    sp = pytest.importorskip("scipy.special")
+    ys = -np.exp(np.linspace(np.log(1e-12), np.log(np.exp(-1) * 0.9999), 100))
+    np.testing.assert_allclose(lambertw_m1(ys), sp.lambertw(ys, k=-1).real,
+                               rtol=1e-10)
+
+
+def test_thm1_constraint_tight_and_redundancy_2x():
+    sc = small_scale_scenario(0)
+    th = theta_dedicated(sc, np.ones((sc.M, sc.N + 1)))
+    l, t = markov_loads(sc.L, th)
+    # P4 constraint is tight at the optimum
+    lhs = (l * (1 - th * l / t[:, None])).sum(1)
+    np.testing.assert_allclose(lhs, sc.L, rtol=1e-10)
+    # Markov optimum always provisions 2× redundancy
+    np.testing.assert_allclose(l.sum(1), 2 * sc.L, rtol=1e-10)
+    # loads are inversely proportional to θ
+    ratio = l * th
+    np.testing.assert_allclose(ratio, np.broadcast_to(ratio[:, :1],
+                                                      ratio.shape),
+                               rtol=1e-10)
+
+
+def test_thm2_exact_feasibility_and_optimality():
+    sc = small_scale_scenario(1)
+    part = np.ones((sc.M, sc.N + 1))
+    l, t = comp_dominant_loads(sc.L, sc.a, sc.u, part)
+    # E[X(t*)] == L exactly (constraint active at the optimum)
+    huge_gamma = np.full_like(sc.gamma, 1e12)
+    ex = expected_received(float(t[0]), l, part, part, sc.a, sc.u, huge_gamma)
+    np.testing.assert_allclose(ex[0], sc.L[0], rtol=1e-6)
+    # perturbing loads (same total) cannot beat t*: check a few directions
+    rng = np.random.default_rng(0)
+    m = 0
+    for _ in range(20):
+        d = rng.normal(size=sc.N + 1)
+        d -= d.mean()
+        l2 = np.maximum(l[m] + 0.01 * sc.L[m] * d / np.abs(d).max(), 1e-3)
+        ex2 = expected_received(float(t[m]), l2[None], part[:1], part[:1],
+                                sc.a[:1], sc.u[:1], huge_gamma[:1])
+        # feasible perturbations deliver no more than the optimum needs
+        assert ex2[0] <= sc.L[m] * (1 + 5e-2)
+
+
+def test_phi_positive_decreasing_in_u():
+    a = 0.3
+    us = np.linspace(0.5, 50, 20)
+    phi = phi_comp_dominant(a, us)
+    assert np.all(phi > 0)
+    assert np.all(np.diff(phi) < 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 10_000))
+def test_thm1_properties_random(n_workers, m_masters, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.05, 0.5, size=(m_masters, n_workers + 1))
+    u = 1.0 / a
+    gamma = rng.uniform(0.5, 4.0, size=a.shape) * u
+    L = rng.uniform(1e3, 1e5, size=m_masters)
+    from repro.core import Scenario
+    sc = Scenario(a=a, u=u, gamma=gamma, L=L)
+    th = theta_dedicated(sc, np.ones_like(a))
+    l, t = markov_loads(sc.L, th)
+    assert np.all(l >= 0) and np.all(t > 0)
+    # adding a worker (finite θ) can only reduce t*: drop one and compare
+    th_drop = th.copy()
+    th_drop[:, -1] = np.inf
+    _, t_drop = markov_loads(sc.L, th_drop)
+    assert np.all(t <= t_drop + 1e-9)
+
+
+def test_thm3_matches_markov_form():
+    sc = small_scale_scenario(2)
+    th = theta_dedicated(sc, np.ones((sc.M, sc.N + 1)))
+    l1, t1 = markov_loads(sc.L, th)
+    l3, t3 = fractional_loads(sc.L, th)
+    np.testing.assert_allclose(l1, l3)
+    np.testing.assert_allclose(t1, t3)
+    # KKT condition: l* = t*/(2θ)
+    np.testing.assert_allclose(l3, t3[:, None] / (2 * th), rtol=1e-10)

@@ -1,0 +1,82 @@
+"""Algorithms 1, 2, 4 — assignment invariants and orderings."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Scenario, fractional_greedy, iterated_greedy,
+                        plan_from_assignment, simple_greedy,
+                        small_scale_scenario, large_scale_scenario,
+                        theta_fractional, validate_plan, value_matrix)
+
+
+def _min_V(sc, k):
+    v = value_matrix(sc)
+    V = v[:, 0] + (k[:, 1:] * v[:, 1:]).sum(1)
+    return V.min()
+
+
+def test_simple_greedy_assigns_every_worker():
+    sc = large_scale_scenario(0)
+    k = simple_greedy(sc)
+    assert np.all(k[:, 1:].sum(0) == 1)          # each worker exactly once
+    validate_plan(sc, plan_from_assignment(sc, k), fractional=False)
+
+
+def test_iterated_at_least_as_good_as_simple():
+    """Both are heuristics for an NP-hard problem; iterated greedy must win
+    or tie (within noise) on the clear majority of seeds and never lose by
+    more than 1% (paper Fig. 4(b) shows it ahead at large scale)."""
+    wins = 0
+    for seed in range(5):
+        sc = large_scale_scenario(seed)
+        vi, vs = _min_V(sc, iterated_greedy(sc, rng=seed)), \
+            _min_V(sc, simple_greedy(sc))
+        assert vi >= vs * 0.99
+        wins += vi >= vs - 1e-12
+    assert wins >= 3
+
+
+def test_iterated_greedy_deterministic_given_rng():
+    sc = large_scale_scenario(3)
+    k1 = iterated_greedy(sc, rng=7)
+    k2 = iterated_greedy(sc, rng=7)
+    np.testing.assert_array_equal(k1, k2)
+
+
+def test_fractional_respects_constraints_and_balances():
+    sc = small_scale_scenario(0)
+    init = iterated_greedy(sc, rng=0)
+    p_ded = plan_from_assignment(sc, init)
+    p = fractional_greedy(sc, init=init)
+    validate_plan(sc, p, fractional=True)
+    # fractional min-max objective is never worse than the dedicated one
+    assert p.t <= p_ded.t + 1e-9
+    # resource sums per worker stay within [0, 1]
+    assert np.all(p.k[:, 1:].sum(0) <= 1 + 1e-9)
+    assert np.all(p.b[:, 1:].sum(0) <= 1 + 1e-9)
+
+
+def test_fractional_narrows_master_gap():
+    sc = small_scale_scenario(0)
+    init = iterated_greedy(sc, rng=0)
+    ded = plan_from_assignment(sc, init)
+    frac = fractional_greedy(sc, init=init)
+    gap_ded = ded.t_per_master.max() - ded.t_per_master.min()
+    gap_frac = frac.t_per_master.max() - frac.t_per_master.min()
+    assert gap_frac <= gap_ded + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 4), st.integers(4, 12))
+def test_assignment_random_scenarios(seed, M, N):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.05, 0.5, size=(M, N + 1))
+    u = 1.0 / a
+    sc = Scenario(a=a, u=u, gamma=2 * u, L=rng.uniform(1e3, 1e4, M))
+    k = iterated_greedy(sc, rng=seed)
+    # binary, exclusive
+    assert set(np.unique(k[:, 1:])).issubset({0.0, 1.0})
+    assert np.all(k[:, 1:].sum(0) <= 1)
+    p = fractional_greedy(sc, init=k, rng=seed)
+    validate_plan(sc, p, fractional=True)
+    assert np.isfinite(p.t)

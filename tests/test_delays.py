@@ -1,0 +1,62 @@
+"""Delay model (eqs. (1)-(5)) — CDF identities and sampler agreement."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delays import (cdf_comm, cdf_comp, cdf_local, cdf_total,
+                               expected_total, sample_total)
+
+
+def test_cdf_total_resonant_limit():
+    """Eq. (3) → eq. (4) as bγ → ku."""
+    l, k, b, a = 100.0, 1.0, 1.0, 0.2
+    u = 5.0
+    t = 40.0
+    exact = cdf_total(t, l, k, b, a, u, u)                  # resonant path
+    near = cdf_total(t, l, k, b, a, u * (1 + 1e-7), u)      # general path
+    assert abs(float(exact) - float(near)) < 1e-5
+
+
+def test_cdf_monotone_and_bounded():
+    ts = np.linspace(0, 200, 400)
+    c = cdf_total(ts, 100.0, 1.0, 1.0, 0.2, 5.0, 8.0)
+    assert np.all(np.diff(c) >= -1e-12)
+    assert c[0] == 0.0 and c[-1] <= 1.0
+    assert np.all((0 <= c) & (c <= 1))
+
+
+def test_shift_region_zero():
+    # P[T <= t] = 0 for t below the deterministic computation shift a·l/k
+    assert float(cdf_total(10.0, 100.0, 1.0, 1.0, 0.2, 5.0, 8.0)) == 0.0
+    assert float(cdf_comp(19.9, 100.0, 1.0, 0.2, 5.0)) == 0.0
+    assert float(cdf_comp(20.1, 100.0, 1.0, 0.2, 5.0)) > 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.05, 0.5), st.floats(1.0, 10.0), st.floats(0.5, 4.0),
+       st.integers(0, 100))
+def test_sampler_matches_cdf(a, u, g_ratio, seed):
+    """Empirical CDF of sample_total ≈ closed-form cdf_total."""
+    rng = np.random.default_rng(seed)
+    l = 50.0
+    gamma = g_ratio * u
+    arr_l = np.array([[0.0, l]])      # col 0 local (zero load), col 1 worker
+    ones = np.ones((1, 2))
+    s = sample_total(rng, (4000,), arr_l, ones, ones,
+                     np.array([[0.4, a]]), np.array([[1.0, u]]),
+                     np.array([[1.0, gamma]]), local_col0=True)[:, 0, 1]
+    for q in (0.25, 0.5, 0.75):
+        t_q = np.quantile(s, q)
+        c = float(cdf_total(t_q, l, 1.0, 1.0, a, u, gamma))
+        assert abs(c - q) < 0.05
+
+
+def test_expected_total_is_mean_of_samples():
+    rng = np.random.default_rng(0)
+    l, a, u, gamma = 80.0, 0.3, 3.0, 5.0
+    arr_l = np.array([[0.0, l]])
+    ones = np.ones((1, 2))
+    s = sample_total(rng, (200_000,), arr_l, ones, ones,
+                     np.array([[0.4, a]]), np.array([[1.0, u]]),
+                     np.array([[1.0, gamma]]))[:, 0, 1]
+    want = float(expected_total(l, 1.0, 1.0, a, u, gamma))
+    assert abs(s.mean() - want) / want < 0.02

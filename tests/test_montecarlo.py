@@ -1,0 +1,56 @@
+"""Monte-Carlo simulator vs closed-form expectations."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Plan, Scenario, iterated_greedy,
+                        plan_from_assignment, small_scale_scenario)
+from repro.core.delays import cdf_total
+from repro.sim import simulate_plan
+from repro.sim.montecarlo import _completion_times
+
+
+def test_completion_times_manual_case():
+    T = np.array([[5.0, 1.0, 3.0], [2.0, 9.0, 4.0]])
+    loads = np.array([4.0, 4.0, 4.0])
+    # need 8 rows: first row arrivals sorted (1,3,5) → done at 3
+    out = _completion_times(T, loads, need=8.0)
+    np.testing.assert_allclose(out, [3.0, 4.0])
+    # unreachable
+    out2 = _completion_times(T, loads, need=20.0)
+    assert np.isinf(out2).all()
+
+
+def test_markov_bound_holds_empirically():
+    """P[node finishes by t*] ≥ 1/2 at the Thm-1 point (Markov tightness)."""
+    sc = small_scale_scenario(0)
+    plan = plan_from_assignment(sc, iterated_greedy(sc, rng=0))
+    r = simulate_plan(sc, plan, trials=20_000, rng=5, keep_samples=True)
+    # E[X(t*)] >= L ⇒ empirical completion should usually beat t*
+    frac_on_time = np.mean(r.overall_samples <= plan.t)
+    assert frac_on_time > 0.5
+
+
+def test_simulator_seed_reproducible():
+    sc = small_scale_scenario(1)
+    plan = plan_from_assignment(sc, iterated_greedy(sc, rng=1))
+    r1 = simulate_plan(sc, plan, trials=2000, rng=9)
+    r2 = simulate_plan(sc, plan, trials=2000, rng=9)
+    assert r1.overall_mean == r2.overall_mean
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50))
+def test_single_node_completion_matches_cdf(seed):
+    """One worker, whole task: empirical CDF at median ≈ closed form."""
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.1, 0.4)
+    u = 1.0 / a
+    sc = Scenario(a=np.array([[0.4, a]]), u=np.array([[2.5, u]]),
+                  gamma=np.array([[1.0, 2 * u]]), L=np.array([100.0]))
+    k = np.ones((1, 2))
+    l = np.array([[0.0, 100.0]])
+    plan = Plan(k=k, b=k.copy(), l=l, t_per_master=np.array([1.0]))
+    r = simulate_plan(sc, plan, trials=6000, rng=seed, keep_samples=True)
+    med = float(np.median(r.overall_samples))
+    c = float(cdf_total(med, 100.0, 1.0, 1.0, a, u, 2 * u))
+    assert abs(c - 0.5) < 0.06

@@ -1,0 +1,43 @@
+"""Algorithm 3 (SCA) — feasibility and monotone improvement."""
+import numpy as np
+
+from repro.core import (iterated_greedy, plan_from_assignment,
+                        sca_enhance_plan, small_scale_scenario,
+                        large_scale_scenario, fractional_greedy)
+from repro.core.delays import expected_received
+
+
+def _exact_feasible(sc, plan, slack=1e-3):
+    for m in range(sc.M):
+        ex = expected_received(float(plan.t_per_master[m]),
+                               plan.l[m][None], plan.k[m][None],
+                               plan.b[m][None], sc.a[m][None], sc.u[m][None],
+                               sc.gamma[m][None])
+        assert ex[0] >= sc.L[m] * (1 - slack), (m, ex[0], sc.L[m])
+
+
+def test_sca_improves_dedicated_and_stays_feasible():
+    sc = small_scale_scenario(0)
+    base = plan_from_assignment(sc, iterated_greedy(sc, rng=0))
+    enh = sca_enhance_plan(sc, base)
+    assert enh.t <= base.t + 1e-9
+    # the paper reports ~8.85% predicted-delay reduction at small scale;
+    # accept anything ≥ 3% for robustness across draws
+    assert enh.t < base.t * 0.97
+    _exact_feasible(sc, enh)
+
+
+def test_sca_improves_fractional():
+    sc = small_scale_scenario(1)
+    frac = fractional_greedy(sc)
+    enh = sca_enhance_plan(sc, frac)
+    assert enh.t <= frac.t + 1e-9
+    _exact_feasible(sc, enh)
+
+
+def test_sca_large_scale_feasible():
+    sc = large_scale_scenario(0, M=2, N=20)   # trimmed for CI time
+    base = plan_from_assignment(sc, iterated_greedy(sc, rng=0))
+    enh = sca_enhance_plan(sc, base)
+    assert enh.t <= base.t
+    _exact_feasible(sc, enh)

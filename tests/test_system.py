@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline: scenario → assignment (Alg 1/2/4) → loads (Thm 1/2/3,
+SCA) → MDS encode → straggling workers → k-of-n decode → verified numerics,
+plus Monte-Carlo agreement with the paper's qualitative claims and the
+fault-tolerance story (dead workers, elastic replan).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Scenario, coded_uniform, fractional_greedy,
+                        iterated_greedy, plan_from_assignment,
+                        sca_enhance_plan, simple_greedy, small_scale_scenario,
+                        large_scale_scenario, uncoded_uniform, validate_plan)
+from repro.runtime import CodedExecutor
+from repro.runtime.straggler import BackupTaskPolicy, DeadlinePolicy
+from repro.sim import simulate_plan
+
+
+def test_end_to_end_coded_pipeline_exact_result():
+    """Numerical round-trip with a dead worker — the core paper workflow."""
+    sc = small_scale_scenario(0)
+    plan = plan_from_assignment(sc, iterated_greedy(sc, rng=0))
+    plan.l[:] = plan.l / sc.L[:, None] * 256        # shrink to test size
+    sc = Scenario(a=sc.a, u=sc.u, gamma=sc.gamma, L=np.full(sc.M, 256.0))
+    rng = np.random.default_rng(0)
+    A = [rng.normal(size=(256, 32)) for _ in range(sc.M)]
+    x = [rng.normal(size=32) for _ in range(sc.M)]
+    ex = CodedExecutor(sc, plan, rng=1)
+    results, report = ex.run(A, x, dead_workers=(2,))
+    assert bool(report.decode_ok.all()), report.max_err
+    for m in range(sc.M):
+        np.testing.assert_allclose(results[m], A[m] @ x[m], rtol=1e-6)
+    assert np.isfinite(report.overall)
+
+
+def test_proposed_beats_benchmarks_in_monte_carlo():
+    """The paper's headline ordering: proposed < coded < uncoded."""
+    sc = large_scale_scenario(0)
+    k_it = iterated_greedy(sc, rng=0)
+    dedi = plan_from_assignment(sc, k_it, method="dedi-iter")
+    r_dedi = simulate_plan(sc, dedi, trials=8000, rng=1)
+    r_cod = simulate_plan(sc, coded_uniform(sc), trials=8000, rng=1)
+    r_unc = simulate_plan(sc, uncoded_uniform(sc), trials=8000, rng=1)
+    assert r_dedi.overall_mean < r_cod.overall_mean < r_unc.overall_mean
+    # and SCA strictly improves the dedicated plan
+    sca = sca_enhance_plan(sc, dedi)
+    r_sca = simulate_plan(sc, sca, trials=8000, rng=1)
+    assert r_sca.overall_mean < r_dedi.overall_mean
+
+
+def test_fractional_equals_iterated_at_large_scale():
+    """Paper Fig. 4(b): frac ≈ dedi-iter when workers are plentiful."""
+    sc = large_scale_scenario(1)
+    k_it = iterated_greedy(sc, rng=1)
+    dedi = plan_from_assignment(sc, k_it)
+    frac = fractional_greedy(sc, init=k_it)
+    r_d = simulate_plan(sc, dedi, trials=6000, rng=2)
+    r_f = simulate_plan(sc, frac, trials=6000, rng=2)
+    assert abs(r_f.overall_mean - r_d.overall_mean) / r_d.overall_mean < 0.05
+
+
+def test_plans_validate_constraints():
+    sc = small_scale_scenario(3)
+    validate_plan(sc, plan_from_assignment(sc, simple_greedy(sc)),
+                  fractional=False)
+    validate_plan(sc, fractional_greedy(sc, rng=3), fractional=True)
+
+
+def test_coding_beats_replication_baselines():
+    """Coded k-of-n vs the replication policies the paper cites ([7],[8])."""
+    sc = large_scale_scenario(2, M=1, N=20)
+    plan = plan_from_assignment(sc, iterated_greedy(sc, rng=2))
+    r_coded = simulate_plan(sc, plan, trials=4000, rng=3)
+
+    rng = np.random.default_rng(3)
+    n_tasks, d = 10, 2
+    loads = sc.L[0] / n_tasks
+    theta = 1 / sc.gamma[0, 1:21] + 1 / sc.u[0, 1:21] + sc.a[0, 1:21]
+    backup = BackupTaskPolicy(d=d)
+    comp = []
+    for _ in range(500):
+        delays = loads * theta[rng.permutation(20)[:n_tasks * d]].reshape(
+            n_tasks, d) * rng.exponential(1.0, (n_tasks, d))
+        comp.append(backup.completion(delays))
+    assert r_coded.overall_mean < np.mean(comp)
+
+
+def test_elastic_replan_after_worker_loss():
+    """Losing workers triggers a feasible re-plan with higher delay."""
+    sc = large_scale_scenario(4)
+    k = iterated_greedy(sc, rng=4)
+    base = plan_from_assignment(sc, k)
+    theta = 1 / sc.gamma + 1 / sc.u + sc.a
+    order = np.argsort(theta[0, 1:])[:5] + 1      # the 5 fastest workers
+    k2 = k.copy()
+    k2[:, order] = 0.0
+    degraded = plan_from_assignment(sc, k2)
+    validate_plan(sc, degraded, fractional=False)
+    assert degraded.t >= base.t                   # losing capacity can't help
+    assert np.isfinite(degraded.t)
+
+
+def test_deadline_policy_counts_waste():
+    delays = np.array([1.0, 2.0, 3.0, 10.0])
+    loads = np.array([4.0, 4.0, 4.0, 4.0])
+    t, wasted = DeadlinePolicy().completion(delays, loads, need=8.0)
+    assert t == 2.0 and wasted == 8.0
