@@ -1,0 +1,63 @@
+"""End-to-end streaming demo: heterogeneous EC2 + TPU-pod pool, 3 masters
+with Poisson arrivals, mid-run worker degradation + death, and a p99-sojourn
+comparison of the three planning policies (dedicated / fractional / uncoded).
+
+This is the paper's setting made *online*: instead of one static batch, task
+streams hit the shared pool continuously, the scheduler tracks per-worker
+share budgets across concurrent in-flight tasks, and the planner re-solves
+as the pool churns.
+
+    PYTHONPATH=src python examples/streaming_serving.py
+"""
+import numpy as np
+
+from repro.sim.cluster import ClusterProfile, ec2_cluster, tpu_pod_cluster
+from repro.stream import (PoissonProcess, ReplanPolicy, StreamingExecutor,
+                          WorkerEvent)
+
+
+def mixed_pool() -> ClusterProfile:
+    """8 EC2 instances (2 fast c5.large) + 4 TPU pod groups, one degraded."""
+    ec2 = ec2_cluster(N=8, n_fast=2, rng=0, gamma_over_u=2.0)
+    tpu = tpu_pod_cluster(n_pods=4, degraded=(1,))
+    classes = ec2.classes + tpu.classes
+    members = tuple(ec2.members) + tuple(m + len(ec2.classes)
+                                         for m in tpu.members)
+    return ClusterProfile(classes=classes, members=members,
+                          master_class=ec2.master_class)
+
+
+def main():
+    profile = mixed_pool()
+    sc = profile.scenario(M=3, L=512.0)
+    print(f"pool: {profile.N} workers "
+          f"({', '.join(c.name for c in profile.classes)}), 3 masters, "
+          f"L={int(sc.L[0])} coded rows/task")
+
+    # mid-run churn: worker 3 slows 4x at t=1.5s, worker 7 dies at t=3s and
+    # rejoins at t=8s (times in ms)
+    churn = [WorkerEvent(1500.0, 3, "degrade", 4.0),
+             WorkerEvent(3000.0, 7, "leave"),
+             WorkerEvent(8000.0, 7, "join"),
+             WorkerEvent(9000.0, 3, "restore")]
+
+    print(f"{'policy':<12} {'p50':>8} {'p95':>8} {'p99':>8} "
+          f"{'queue':>8} {'waste':>7} {'replans':>7}")
+    for policy in ("dedicated", "fractional", "uncoded"):
+        srcs = [PoissonProcess(m, rate=0.004, seed=2) for m in range(sc.M)]
+        ex = StreamingExecutor(
+            sc, srcs, policy=policy, churn=churn,
+            replan=ReplanPolicy(mode="drift", drift_threshold=0.1,
+                                use_sca=(policy != "uncoded")),
+            numerics="verify", rng=0)
+        s = ex.run(max_tasks=150).summary()
+        assert s.get("decode_ok_rate", 1.0) == 1.0, "decode verification failed"
+        print(f"{policy:<12} {s['sojourn_p50']:8.1f} {s['sojourn_p95']:8.1f} "
+              f"{s['sojourn_p99']:8.1f} {s['queue_wait_mean']:8.1f} "
+              f"{s['wasted_fraction']:7.2f} {s['replans']:7.0f}")
+    print("(times in ms; waste = redundant coded rows / useful rows; "
+          "all decodes verified)")
+
+
+if __name__ == "__main__":
+    main()

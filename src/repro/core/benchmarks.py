@@ -55,11 +55,14 @@ def uncoded_uniform(sc: Scenario) -> Plan:
     l = np.zeros_like(k)
     for m in range(sc.M):
         w = np.nonzero(k[m, 1:] > 0)[0] + 1
-        l[m, w] = sc.L[m] / w.size
+        if w.size:
+            l[m, w] = sc.L[m] / w.size
     theta = theta_dedicated(sc, k)
-    # crude deterministic estimate: slowest worker's expected finish time
+    # crude deterministic estimate: slowest worker's expected finish time;
+    # a master with no workers at all (tiny pools) cannot finish uncoded.
     with np.errstate(invalid="ignore"):
-        est = np.nanmax(np.where(l > 0, l * theta, np.nan), axis=1)
+        vals = np.where(l > 0, l * theta, -np.inf).max(axis=1)
+    est = np.where((l > 0).any(axis=1), vals, np.inf)
     return Plan(k=k, b=k.copy(), l=l, t_per_master=est, method="uncoded-uniform")
 
 

@@ -35,7 +35,7 @@ from . import delays
 from .allocation import markov_loads
 from .problem import Plan, Scenario, theta_dedicated, theta_fractional
 
-__all__ = ["sca_enhance_master", "sca_enhance_plan"]
+__all__ = ["sca_enhance_master", "sca_enhance_plan", "feasible_deadline"]
 
 _GOLD = 0.5 * (3.0 - np.sqrt(5.0))  # 0.381966...
 
@@ -217,19 +217,72 @@ def sca_enhance_master(sc: Scenario, m: int, k: np.ndarray, b: np.ndarray,
     return out, float(z_t)
 
 
+def feasible_deadline(sc: Scenario, m: int, k: np.ndarray, b: np.ndarray,
+                      l_row: np.ndarray, *, t_hi: Optional[float] = None,
+                      iters: int = 60) -> float:
+    """Smallest t with E[X_m(t)] >= L_m at *fixed* loads (exact CDFs).
+
+    The online replanner warm-starts Algorithm 3 from the previous plan's
+    loads; Algorithm 3 requires a feasible (l, t) pair, so this bisection
+    recovers the matching deadline.  Returns inf when Σl < L_m (the loads
+    can never recover L_m useful rows)."""
+    l_row = np.asarray(l_row, dtype=np.float64)
+    if l_row.sum() < float(sc.L[m]) - 1e-9:
+        return np.inf
+
+    def ex(t: float) -> float:
+        return float(delays.expected_received(
+            t, l_row[None, :], k[m][None, :], b[m][None, :],
+            sc.a[m][None, :], sc.u[m][None, :], sc.gamma[m][None, :])[0])
+
+    if t_hi is None:
+        t_hi = 1.0
+        for _ in range(200):
+            if ex(t_hi) >= sc.L[m]:
+                break
+            t_hi *= 2.0
+        else:
+            return np.inf
+    lo, hi = 0.0, float(t_hi)
+    if ex(hi) < sc.L[m]:
+        return np.inf
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if ex(mid) >= sc.L[m]:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
 def sca_enhance_plan(sc: Scenario, plan: Plan, *, alpha: float = 0.995,
-                     max_iters: int = 60) -> Plan:
+                     max_iters: int = 60,
+                     warm_l: Optional[np.ndarray] = None) -> Plan:
     """Apply Algorithm 3 to every master of a plan (dedicated or fractional).
 
     Fractional plans are handled by the paper's remark at the end of §IV-B:
     substitute γ → bγ, u → ku, a → a/k inside the DC pieces (done by
     ``_build_instance``).
+
+    ``warm_l`` (optional, (M, N+1)) warm-starts each master's SCA iteration
+    from previous loads instead of the plan's Theorem-1/3 point — the online
+    replanner passes the previous plan here so few SCA iterations suffice
+    when the worker pool changed only slightly.  Warm rows that put load on
+    nodes the plan assigns no resources to, or whose total cannot cover
+    L_m, fall back to the plan's own loads.
     """
     l_new = plan.l.copy()
     t_new = plan.t_per_master.copy()
     for m in range(sc.M):
+        l_init, t_init = plan.l[m], float(plan.t_per_master[m])
+        if warm_l is not None:
+            cand = np.where((plan.k[m] > 0) & (plan.b[m] > 0), warm_l[m], 0.0)
+            cand[0] = warm_l[m][0]
+            t_cand = feasible_deadline(sc, m, plan.k, plan.b, cand)
+            if np.isfinite(t_cand) and t_cand <= t_init:
+                l_init, t_init = cand, t_cand
         l_row, t_m = sca_enhance_master(
-            sc, m, plan.k, plan.b, plan.l[m], float(plan.t_per_master[m]),
+            sc, m, plan.k, plan.b, l_init, t_init,
             alpha=alpha, max_iters=max_iters)
         if t_m <= t_new[m]:
             l_new[m] = l_row

@@ -68,6 +68,9 @@ class CodedExecutor:
                               sc.a, sc.u, sc.gamma, local_col0=True)
         for w in dead_workers:
             delays[:, w] = np.inf
+        # A NaN delay (poisoned sample) means "never arrives", same as a dead
+        # worker — fold both into inf so ordering and prefix logic are exact.
+        delays = np.where(np.isnan(delays), np.inf, delays)
 
         for m in range(sc.M):
             A, x = np.asarray(A_list[m]), np.asarray(x_list[m])
@@ -84,23 +87,30 @@ class CodedExecutor:
             y_parts = {int(n): A_tilde[rows] @ x
                        for n, rows in zip(active, slices)}
 
-            # completion: earliest prefix of arrivals covering >= L rows
-            order = active[np.argsort(delays[m, active])]
+            # completion: earliest prefix of arrivals covering >= L rows.
+            # Explicit finite mask BEFORE ordering: a dead/NaN worker ranked
+            # anywhere in the sort must be *skipped* (it never arrives), not
+            # terminate decoding — the live workers behind it still count.
+            d_act = delays[m, active]
+            finite = np.isfinite(d_act)
+            order_j = np.argsort(np.where(finite, d_act, np.inf),
+                                 kind="stable")
             got_rows: List[np.ndarray] = []
             got_y: List[np.ndarray] = []
             acc = 0
             t_done = np.inf
             prefix = []
-            for n in order:
-                if not np.isfinite(delays[m, n]):
-                    break
-                idx = slices[list(active).index(n)]
+            for j in order_j:
+                if not finite[j]:
+                    break           # only non-arrivals remain past this point
+                n = int(active[j])
+                idx = slices[j]
                 got_rows.append(idx)
-                got_y.append(y_parts[int(n)])
-                prefix.append(int(n))
+                got_y.append(y_parts[n])
+                prefix.append(n)
                 acc += idx.size
                 if acc >= L:
-                    t_done = delays[m, n]
+                    t_done = d_act[j]
                     break
             completion[m] = t_done
             used.append(np.array(prefix))

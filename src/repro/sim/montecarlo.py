@@ -18,6 +18,7 @@ import numpy as np
 
 from ..core.delays import sample_total
 from ..core.problem import Plan, Scenario
+from ..stream.backend import completion_times
 
 __all__ = ["SimResult", "simulate_plan"]
 
@@ -43,16 +44,10 @@ class SimResult:
 def _completion_times(T: np.ndarray, loads: np.ndarray, need: float) -> np.ndarray:
     """Earliest t with Σ_{n: T_n <= t} l_n >= need, per realization row.
 
-    T: (R, K) delays, loads: (K,).  Returns (R,) (inf if unreachable)."""
-    order = np.argsort(T, axis=1)
-    T_sorted = np.take_along_axis(T, order, axis=1)
-    l_sorted = loads[order]
-    cum = np.cumsum(l_sorted, axis=1)
-    hit = cum >= need - 1e-9
-    first = np.argmax(hit, axis=1)
-    reachable = hit[np.arange(T.shape[0]), first]
-    out = T_sorted[np.arange(T.shape[0]), first]
-    return np.where(reachable, out, np.inf)
+    T: (R, K) delays, loads: (K,).  Returns (R,) (inf if unreachable).
+    Thin wrapper over the shared batched backend (repro.stream.backend),
+    kept for API compatibility."""
+    return completion_times(T, loads, float(need))
 
 
 def simulate_plan(sc: Scenario, plan: Plan, trials: int = 100_000,
@@ -91,15 +86,9 @@ def simulate_plan(sc: Scenario, plan: Plan, trials: int = 100_000,
         if straggle_p > 0:
             throttled = rng.random(T.shape) < straggle_p
             T = np.where(throttled, T * straggle_factor, T)
-        comp = np.empty((r, M))
-        for m in range(M):
-            active = plan.l[m] > 0
-            Tm = T[:, m, active]
-            if needs_all:
-                comp[:, m] = Tm.max(axis=1) if Tm.size else np.inf
-            else:
-                comp[:, m] = _completion_times(Tm, plan.l[m, active],
-                                               float(sc.L[m]))
+        # one batched call over (realization, master) — no per-master loop
+        comp = completion_times(T, plan.l[None, :, :], sc.L[None, :],
+                                needs_all=needs_all)
         sums += comp.sum(axis=0)
         overall = comp.max(axis=1)
         overall_sum += overall.sum()

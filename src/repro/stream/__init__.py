@@ -1,0 +1,28 @@
+"""repro.stream — event-driven streaming scheduler over the paper's planner.
+
+The static stack (assignment → loads → SCA) optimises one batch; this
+package turns it into a traffic-serving runtime: per-master arrival
+processes, per-worker share tracking for concurrent in-flight tasks, online
+replanning with SCA warm starts, a batched completion/decode backend shared
+with the Monte-Carlo simulator, and structured sojourn/queueing/waste
+metrics.  See ``src/repro/stream/README.md`` for the event model.
+"""
+from .backend import (ExponentialBlock, completion_times, decode_batch,
+                      delivered_by, sample_delays)
+from .engine import StreamingExecutor, poisson_sources
+from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, Event, EventLoop,
+                     PoissonProcess, TraceProcess, WorkerEvent)
+from .metrics import StreamMetrics, TaskRecord
+from .queueing import AdmissionConfig, SharePool, WaitQueue
+from .replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
+
+__all__ = [
+    "StreamingExecutor", "poisson_sources",
+    "EventLoop", "Event", "PoissonProcess", "TraceProcess", "WorkerEvent",
+    "ARRIVAL", "COMPLETION", "CHURN", "REPLAN",
+    "AdmissionConfig", "SharePool", "WaitQueue",
+    "OnlinePlanner", "ReplanPolicy", "scaled_row_loads",
+    "StreamMetrics", "TaskRecord",
+    "completion_times", "delivered_by", "sample_delays", "decode_batch",
+    "ExponentialBlock",
+]

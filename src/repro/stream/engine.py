@@ -1,0 +1,408 @@
+"""``StreamingExecutor`` — the event-driven runtime over the paper's planner.
+
+Where ``repro.runtime.coded_exec.CodedExecutor`` executes *one* static batch
+with a per-master Python loop, this engine serves a *stream*: per-master
+arrival processes feed a discrete-event loop; each arriving task acquires
+fractional (k, b) shares from the live worker pool (column sums of
+concurrent in-flight tasks stay ≤ 1, paper (6c)/(25c)), gets Theorem-1/3
+closed-form loads at its admitted shares, and completes at the earliest
+prefix of worker deliveries covering L_m coded rows.  Worker churn (leave /
+join / degrade / restore) retimes in-flight deliveries and triggers online
+replanning per the configured :class:`~repro.stream.replan.ReplanPolicy`.
+
+All per-task math routes through :mod:`repro.stream.backend` — the same
+batched sort+cumsum completion rule the Monte-Carlo simulator uses, block-
+amortised exponential sampling, and (in verification mode) one batched MDS
+encode + ``vmap``'d decode per master instead of a per-task Python pipeline.
+
+A run is a pure function of its seeds: event ties break by insertion order,
+arrival processes own per-master generators, and delay randomness is
+consumed from a pre-sampled block — same-seed replays produce identical
+metrics, which the tier-1 tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import mds
+from ..core.problem import Scenario
+from . import backend as bk
+from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, ArrivalProcess,
+                     EventLoop, PoissonProcess, WorkerEvent)
+from .metrics import StreamMetrics, TaskRecord
+from .queueing import AdmissionConfig, SharePool, WaitQueue
+from .replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
+
+__all__ = ["StreamingExecutor", "poisson_sources"]
+
+
+def poisson_sources(sc: Scenario, utilization: float = 0.5,
+                    seed: int = 0) -> List[PoissonProcess]:
+    """One Poisson source per master, sized to a target utilization.
+
+    Rate_m = utilization / t*_m with t*_m the Theorem-1 predicted completion
+    of the full pool split evenly — a convenient default that loads the
+    system without saturating it."""
+    from ..core.assignment import plan_from_assignment, simple_greedy
+    plan = plan_from_assignment(sc, simple_greedy(sc))
+    rates = utilization / np.maximum(plan.t_per_master, 1e-300)
+    return [PoissonProcess(m, float(rates[m]), seed=seed)
+            for m in range(sc.M)]
+
+
+@dataclasses.dataclass
+class _InFlight:
+    tid: int
+    master: int
+    k_row: np.ndarray
+    b_row: np.ndarray
+    l_row: np.ndarray
+    finish: np.ndarray            # absolute per-node delivery times
+    need: float
+    t_admit: float
+    completion: float
+    version: int = 0
+
+
+class StreamingExecutor:
+    """Serves per-master task streams through the coded pipeline.
+
+    Parameters
+    ----------
+    sc:        base Scenario (M masters, N shared workers).
+    sources:   arrival processes (defaults to ``poisson_sources(sc)``).
+    policy:    "fractional" | "dedicated" | "uncoded" planning stack.
+    replan:    online replanning policy (see :class:`ReplanPolicy`).
+    admission: share-scaling / backpressure configuration.  Dedicated and
+               uncoded plans force all-or-nothing admission.
+    churn:     scheduled :class:`WorkerEvent`s (join/leave/degrade/restore).
+    numerics:  "none" (delay simulation only) or "verify" (synthesize per-
+               task matrices and run the batched MDS encode→decode check;
+               requires integer-sized L).
+    rng:       master seed; every random stream derives from it.
+    backend:   "numpy" or "jax" for the batched kernels.
+
+    One executor = one run.  Build a fresh instance to replay.
+    """
+
+    def __init__(self, sc: Scenario,
+                 sources: Optional[Sequence[ArrivalProcess]] = None, *,
+                 policy: str = "fractional",
+                 replan: Optional[ReplanPolicy] = None,
+                 admission: Optional[AdmissionConfig] = None,
+                 churn: Sequence[WorkerEvent] = (),
+                 numerics: str = "none",
+                 verify_cols: int = 4,
+                 rng: int = 0,
+                 backend: str = "numpy"):
+        if numerics not in ("none", "verify"):
+            raise ValueError(f"unknown numerics mode {numerics!r}")
+        self.sc = sc
+        self.sources = list(sources) if sources is not None else \
+            poisson_sources(sc, seed=rng)
+        self.admission = admission or AdmissionConfig(
+            allow_scaling=(policy == "fractional"))
+        if policy != "fractional":
+            self.admission = dataclasses.replace(self.admission,
+                                                 allow_scaling=False)
+        self.churn = sorted(churn, key=lambda e: e.time)
+        self.numerics = numerics
+        self.verify_cols = int(verify_cols)
+        self.seed = int(rng)
+        self.backend = backend
+
+        self.planner = OnlinePlanner(sc, policy=policy, replan=replan,
+                                     rng=self.seed)
+        self.loop = EventLoop()
+        self.pool = SharePool(sc.N)
+        self.queue = WaitQueue(self.admission.max_queue)
+        self.metrics = StreamMetrics(sc.M, sc.N)
+
+        self.scale = np.ones(sc.N + 1)
+        self._sc_eff = sc
+        self._exp = bk.ExponentialBlock(
+            np.random.default_rng((self.seed, 0xD31A)), sc.N + 1)
+        self.tasks: Dict[int, TaskRecord] = {}
+        self.inflight: Dict[int, _InFlight] = {}
+        self._verify_buf: List[_InFlight] = []
+        self._next_tid = 0
+        self._emitted = 0
+        self._ran = False
+        # Monotone completion-event versions: a stale COMPLETION (pushed
+        # before churn retimed or re-dispatched its task) must never match.
+        self._version_seq = itertools.count()
+
+    @property
+    def online(self) -> np.ndarray:
+        """Worker-online mask — single source of truth is the share pool."""
+        return self.pool.online
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, max_tasks: int = 1000, until: float = np.inf) -> StreamMetrics:
+        """Simulate ``max_tasks`` arrivals (drained to completion) or until
+        sim time ``until``, whichever first.  Returns the metrics."""
+        if self._ran:
+            raise RuntimeError("StreamingExecutor is single-shot; build a "
+                               "fresh instance to replay")
+        self._ran = True
+        self.max_tasks = int(max_tasks)
+        for i, src in enumerate(self.sources):
+            t0 = src.next_after(0.0)
+            if np.isfinite(t0):
+                self.loop.push(t0, ARRIVAL, i)
+        for ev in self.churn:
+            self.loop.push(ev.time, CHURN, ev)
+        pol = self.planner.replan
+        if pol.mode == "periodic":
+            self.loop.push(pol.period, REPLAN, None)
+
+        while not self.loop.empty():
+            if self.loop.peek_time() > until:
+                break
+            ev = self.loop.pop()
+            if ev.kind == ARRIVAL:
+                self._on_arrival(ev.payload, ev.time)
+            elif ev.kind == COMPLETION:
+                self._on_completion(ev.payload, ev.time)
+            elif ev.kind == CHURN:
+                self._on_churn(ev.payload, ev.time)
+            elif ev.kind == REPLAN:
+                self.planner.ensure_plan(self.online, self.scale, force=True)
+                # Reschedule only while something else can still happen: a
+                # pending arrival/completion/churn event (at most one REPLAN
+                # exists and it was just popped) or an in-flight task.  A
+                # bare unservable queue must not keep the loop alive forever.
+                if self.inflight or len(self.loop):
+                    self.loop.push(ev.time + pol.period, REPLAN, None)
+
+        if self.numerics == "verify":
+            self._run_verification()
+        self.metrics.replans = self.planner.replans
+        self.metrics.rejected = self.queue.rejected
+        self.metrics.unserved = len(self.queue)
+        return self.metrics
+
+    # ------------------------------------------------------------- handlers
+
+    def _on_arrival(self, src_idx: int, t: float) -> None:
+        if self._emitted >= self.max_tasks:
+            return
+        src = self.sources[src_idx]
+        tid = self._next_tid
+        self._next_tid += 1
+        self._emitted += 1
+        rec = TaskRecord(tid=tid, master=src.master, t_arrive=t,
+                         rows_needed=float(self.sc.L[src.master]))
+        self.tasks[tid] = rec
+        if self._emitted < self.max_tasks:
+            t_next = src.next_after(t)
+            if np.isfinite(t_next):
+                self.loop.push(t_next, ARRIVAL, src_idx)
+        self.planner.ensure_plan(self.online, self.scale, event=True)
+        # FIFO fairness: earlier-queued tasks get first claim on the pool —
+        # a newcomer may not slip past a waiting queue head.
+        self._drain_queue(t)
+        if len(self.queue) or not self._try_admit(tid, t):
+            if not self.queue.offer(tid):
+                del self.tasks[tid]          # backpressure: rejected outright
+
+    def _on_completion(self, payload: Tuple[int, int], t: float) -> None:
+        tid, version = payload
+        fl = self.inflight.get(tid)
+        if fl is None or fl.version != version:
+            return                            # stale (churn retimed the task)
+        self._finalize(fl, t)
+        self._drain_queue(t)
+
+    def _on_churn(self, ev: WorkerEvent, t: float) -> None:
+        w = ev.worker
+        if ev.kind == "leave":
+            self.pool.set_online(w, False)
+            for fl in list(self.inflight.values()):
+                if fl.l_row[w] > 0 and fl.finish[w] > t:
+                    fl.finish[w] = np.inf
+                    self._retime(fl, t)
+        elif ev.kind == "join":
+            self.pool.set_online(w, True)
+        elif ev.kind == "degrade":
+            self.scale[w] *= ev.factor
+            for fl in self.inflight.values():
+                if fl.l_row[w] > 0 and np.isfinite(fl.finish[w]) \
+                        and fl.finish[w] > t:
+                    fl.finish[w] = t + (fl.finish[w] - t) * ev.factor
+                    self._retime(fl, t)
+        elif ev.kind == "restore":
+            undo = self.scale[w]
+            self.scale[w] = 1.0
+            for fl in self.inflight.values():
+                if fl.l_row[w] > 0 and np.isfinite(fl.finish[w]) \
+                        and fl.finish[w] > t and undo > 0:
+                    fl.finish[w] = t + (fl.finish[w] - t) / undo
+                    self._retime(fl, t)
+        self._sc_eff = self.planner.effective_scenario(self.online, self.scale)
+        self.planner.ensure_plan(self.online, self.scale, event=True)
+        self._drain_queue(t)
+
+    # ------------------------------------------------------------ admission
+
+    def _try_admit(self, tid: int, t: float) -> bool:
+        rec = self.tasks[tid]
+        m = rec.master
+        plan = self.planner.ensure_plan(self.online, self.scale)
+        k_req = np.where(self.online, plan.k[m], 0.0)
+        b_req = np.where(self.online, plan.b[m], 0.0)
+        k_req[0], b_req[0] = plan.k[m, 0], plan.b[m, 0]
+        f = self.pool.feasible_fraction(k_req, b_req)
+        if self.admission.allow_scaling:
+            if f < self.admission.min_fraction:
+                return False
+            f = min(f, 1.0)
+        else:
+            if f < 1.0 - 1e-9:
+                return False
+            f = 1.0
+        k_row = f * k_req
+        b_row = f * b_req
+        k_row[0] = b_row[0] = 1.0            # the master's own processor
+
+        if self.planner.needs_all:
+            # uncoded: equal re-split over the plan's surviving workers
+            l_row = np.zeros_like(k_row)
+            w = np.nonzero(k_row[1:] > 0)[0] + 1
+            if w.size == 0:
+                return False
+            l_row[w] = self.sc.L[m] / w.size
+        else:
+            l_row, _ = scaled_row_loads(self._sc_eff, m, k_row, b_row)
+        if l_row.sum() < self.sc.L[m] - 1e-6 and not self.planner.needs_all:
+            return False                      # cannot cover L_m: wait
+
+        e = self._exp.draw()
+        d = bk.sample_delays(e[0], e[1], l_row, k_row, b_row,
+                             self._sc_eff.a[m], self._sc_eff.u[m],
+                             self._sc_eff.gamma[m])
+        finish = np.where(l_row > 0, t + d, np.inf)
+        comp = float(bk.completion_times(
+            finish[None], l_row[None], np.array([self.sc.L[m]]),
+            needs_all=self.planner.needs_all, backend="numpy")[0])
+        if not np.isfinite(comp):
+            return False
+
+        self.pool.acquire(k_row, b_row)
+        rec.t_admit = t
+        rec.fraction = f
+        rec.rows_total += float(l_row.sum())
+        fl = _InFlight(tid=tid, master=m, k_row=k_row, b_row=b_row,
+                       l_row=l_row, finish=finish, need=float(self.sc.L[m]),
+                       t_admit=t, completion=comp,
+                       version=next(self._version_seq))
+        self.inflight[tid] = fl
+        self.loop.push(comp, COMPLETION, (tid, fl.version))
+        return True
+
+    def _drain_queue(self, t: float) -> None:
+        while len(self.queue):
+            tid = self.queue.peek()
+            if self._try_admit(tid, t):
+                self.queue.take()
+            else:
+                break                         # FIFO head-of-line blocking
+
+    # ----------------------------------------------------------- completion
+
+    def _retime(self, fl: _InFlight, t: float) -> None:
+        comp = float(bk.completion_times(
+            fl.finish[None], fl.l_row[None], np.array([fl.need]),
+            needs_all=self.planner.needs_all, backend="numpy")[0])
+        if comp == fl.completion:
+            return
+        fl.version = next(self._version_seq)
+        if np.isfinite(comp):
+            fl.completion = comp
+            self.loop.push(max(comp, t), COMPLETION, (fl.tid, fl.version))
+        else:
+            # too many deliveries lost — release and re-dispatch
+            rec = self.tasks[fl.tid]
+            rec.retries += 1
+            self.pool.release(fl.k_row, fl.b_row)
+            self.metrics.record_share_interval(fl.k_row, fl.b_row,
+                                               t - fl.t_admit)
+            del self.inflight[fl.tid]
+            if not self._try_admit(fl.tid, t):
+                self.queue.offer(fl.tid)
+
+    def _finalize(self, fl: _InFlight, t: float) -> None:
+        rec = self.tasks[fl.tid]
+        rec.t_complete = t
+        rec.rows_delivered = float(bk.delivered_by(
+            fl.finish[None], fl.l_row[None], np.array([t]))[0])
+        self.pool.release(fl.k_row, fl.b_row)
+        self.metrics.record_share_interval(fl.k_row, fl.b_row, t - fl.t_admit)
+        self.metrics.record_task(rec)
+        del self.inflight[fl.tid]
+        if self.numerics == "verify" and not self.planner.needs_all:
+            self._verify_buf.append(fl)
+
+    # --------------------------------------------------- batched verification
+
+    def _run_verification(self) -> None:
+        """Execute the completed tasks' numerics in per-master batches.
+
+        One generator, one batched encode (einsum over the task axis) and one
+        batched exactly-L decode per master — the vmap execution backend —
+        instead of ``CodedExecutor``'s per-task encode/decode pipeline."""
+        by_master: Dict[int, List[_InFlight]] = {}
+        for fl in self._verify_buf:
+            by_master.setdefault(fl.master, []).append(fl)
+        for m, fls in by_master.items():
+            L = int(round(float(self.sc.L[m])))
+            li = [mds.integer_loads(fl.l_row, 0) for fl in fls]
+            Lt = max(max(int(x.sum()) for x in li), L)
+            vrng = np.random.default_rng((self.seed, 0x7E51, m))
+            G = mds.make_generator(L, Lt, kind="systematic", rng=vrng,
+                                   dtype=np.float64)
+            B, S = len(fls), self.verify_cols
+            A = vrng.normal(size=(B, L, S))
+            x = vrng.normal(size=(B, S))
+            y_full = np.einsum("rl,bls,bs->br", G, A, x)   # (B, Lt) coded
+            rows = np.empty((B, L), dtype=np.int64)
+            valid = np.ones(B, dtype=bool)
+            for i, (fl, lint) in enumerate(zip(fls, li)):
+                active = np.nonzero(lint > 0)[0]
+                slices = mds.split_loads(int(lint[active].sum()), lint[active])
+                order = np.argsort(np.where(np.isfinite(fl.finish[active]),
+                                            fl.finish[active], np.inf),
+                                   kind="stable")
+                got: List[np.ndarray] = []
+                acc = 0
+                for j in order:
+                    if not np.isfinite(fl.finish[active[j]]) or \
+                            fl.finish[active[j]] > fl.completion + 1e-9:
+                        continue
+                    got.append(slices[j])
+                    acc += slices[j].size
+                    if acc >= L:
+                        break
+                if acc < L:
+                    valid[i] = False
+                    continue
+                rows[i] = np.concatenate(got)[:L]
+            idx = np.nonzero(valid)[0]
+            if idx.size:
+                y_rows = np.take_along_axis(y_full[idx], rows[idx], axis=1)
+                y_hat = bk.decode_batch(G, rows[idx], y_rows,
+                                        backend=self.backend)
+                truth = np.einsum("bls,bs->bl", A[idx], x[idx])
+                err = np.abs(y_hat - truth).max(axis=1)
+                tol = 1e-6 * (1.0 + np.abs(truth).max(axis=1))
+                for j, i in enumerate(idx):
+                    rec = self.tasks[fls[i].tid]
+                    rec.max_err = float(err[j])
+                    rec.decode_ok = bool(err[j] <= tol[j])
+            for i in np.nonzero(~valid)[0]:
+                self.tasks[fls[i].tid].decode_ok = False

@@ -1,0 +1,153 @@
+"""Discrete-event core of the streaming scheduler.
+
+A heap-based event loop with a strict total order (time, then insertion
+sequence) so that same-seed runs replay identically, plus the arrival /
+churn processes that feed it:
+
+* ``PoissonProcess`` — per-master memoryless task arrivals.
+* ``TraceProcess``  — replay recorded arrival instants.
+* ``WorkerEvent``   — worker churn: ``leave`` / ``join`` / ``degrade`` /
+  ``restore`` at a given time, with a slowdown ``factor`` for degradation.
+
+Event kinds are plain strings; payloads are opaque to the loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "ARRIVAL", "COMPLETION", "CHURN", "REPLAN",
+    "Event", "EventLoop",
+    "ArrivalProcess", "PoissonProcess", "TraceProcess",
+    "WorkerEvent",
+]
+
+ARRIVAL = "arrival"
+COMPLETION = "completion"
+CHURN = "churn"
+REPLAN = "replan"
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: float
+    seq: int
+    kind: str
+    payload: Any = None
+
+
+class EventLoop:
+    """Min-heap of events keyed by (time, seq).
+
+    ``seq`` is a global insertion counter: ties in time resolve in push
+    order, which makes the whole simulation a pure function of its seeds.
+    """
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, Event]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def push(self, time: float, kind: str, payload: Any = None) -> Event:
+        if time < self.now - 1e-12:
+            raise ValueError(f"event at t={time} is in the past (now={self.now})")
+        ev = Event(float(time), next(self._seq), kind, payload)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        return ev
+
+    def pop(self) -> Event:
+        time, _, ev = heapq.heappop(self._heap)
+        self.now = time
+        return ev
+
+    def peek_time(self) -> float:
+        return self._heap[0][0] if self._heap else np.inf
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def empty(self) -> bool:
+        return not self._heap
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+class ArrivalProcess:
+    """One task source bound to a master; yields successive arrival times."""
+
+    master: int
+
+    def next_after(self, t: float) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class PoissonProcess(ArrivalProcess):
+    """Poisson arrivals of rate ``rate`` (tasks per unit time) at ``master``.
+
+    Each process owns an independent Generator seeded from (seed, master) so
+    the arrival sequence is independent of event interleaving.
+    """
+
+    def __init__(self, master: int, rate: float, seed: int = 0):
+        if rate <= 0:
+            raise ValueError("rate must be > 0")
+        self.master = int(master)
+        self.rate = float(rate)
+        self.rng = np.random.default_rng((int(seed), int(master), 0xA221))
+
+    def next_after(self, t: float) -> float:
+        return t + self.rng.exponential(1.0 / self.rate)
+
+
+class TraceProcess(ArrivalProcess):
+    """Replays a fixed sequence of arrival instants (trace-driven mode)."""
+
+    def __init__(self, master: int, times: Sequence[float]):
+        self.master = int(master)
+        self.times = sorted(float(t) for t in times)
+        self._i = 0
+
+    def next_after(self, t: float) -> float:
+        while self._i < len(self.times) and self.times[self._i] < t - 1e-12:
+            self._i += 1
+        if self._i >= len(self.times):
+            return np.inf
+        out = self.times[self._i]
+        self._i += 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Worker churn
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WorkerEvent:
+    """A scheduled change to worker ``worker`` (1-based column) at ``time``.
+
+    kind:
+      ``leave``    worker goes offline; undelivered in-flight rows are lost
+                   (redundancy or re-dispatch covers them).
+      ``join``     worker (re)joins the pool for new tasks.
+      ``degrade``  worker slows down by ``factor`` (a×f, u/f, γ/f), applied
+                   to new tasks and to the *remaining* time of in-flight
+                   deliveries.
+      ``restore``  degradation factor reset to 1.
+    """
+    time: float
+    worker: int
+    kind: str
+    factor: float = 2.0
+
+    def __post_init__(self):
+        if self.kind not in ("leave", "join", "degrade", "restore"):
+            raise ValueError(f"unknown churn kind {self.kind!r}")
+        if self.kind == "degrade" and self.factor <= 0:
+            raise ValueError("degrade factor must be > 0")

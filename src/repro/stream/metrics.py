@@ -1,0 +1,155 @@
+"""Structured metrics of the streaming engine.
+
+Per-task records plus pool-level aggregates, all in simulation time units
+(the paper's scenarios are milliseconds):
+
+* **sojourn**        t_complete − t_arrive  (what a user of the system sees)
+* **queue_wait**     t_admit − t_arrive     (admission backpressure)
+* **service**        t_complete − t_admit   (coded completion delay — the
+                     quantity the paper's Theorems bound)
+* **wasted_rows**    coded rows dispatched but cancelled at completion
+                     (Σl − rows delivered by t_complete): the price of
+                     redundancy, cf. the deadline policy's waste counter
+* **overshoot_rows** delivered − L_m: rows received but not needed
+* **utilization**    per-worker ∫ k_inflight dt / horizon — how much of each
+                     worker's computing power the stream actually held
+
+``summary()`` flattens everything into one dict of floats (JSON-ready);
+``to_records()`` returns the raw per-task dicts for trace analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["TaskRecord", "StreamMetrics"]
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    tid: int
+    master: int
+    t_arrive: float
+    t_admit: float = math.nan
+    t_complete: float = math.nan
+    fraction: float = 1.0          # admitted share scale (1 = full plan shares)
+    rows_total: float = 0.0        # Σ l dispatched
+    rows_needed: float = 0.0       # L_m
+    rows_delivered: float = 0.0    # delivered by completion
+    retries: int = 0               # re-dispatches after losing too many workers
+    decode_ok: Optional[bool] = None
+    max_err: float = math.nan
+
+    @property
+    def sojourn(self) -> float:
+        return self.t_complete - self.t_arrive
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.t_arrive
+
+    @property
+    def service(self) -> float:
+        return self.t_complete - self.t_admit
+
+    @property
+    def wasted_rows(self) -> float:
+        return max(self.rows_total - self.rows_delivered, 0.0)
+
+    @property
+    def overshoot_rows(self) -> float:
+        return max(self.rows_delivered - self.rows_needed, 0.0)
+
+    def to_dict(self) -> Dict[str, float]:
+        return {
+            "tid": self.tid, "master": self.master,
+            "t_arrive": self.t_arrive, "t_admit": self.t_admit,
+            "t_complete": self.t_complete, "sojourn": self.sojourn,
+            "queue_wait": self.queue_wait, "service": self.service,
+            "fraction": self.fraction, "rows_total": self.rows_total,
+            "rows_needed": self.rows_needed,
+            "rows_delivered": self.rows_delivered,
+            "wasted_rows": self.wasted_rows,
+            "overshoot_rows": self.overshoot_rows,
+            "retries": self.retries,
+            "decode_ok": self.decode_ok, "max_err": self.max_err,
+        }
+
+
+class StreamMetrics:
+    """Accumulates task records and worker share-time integrals."""
+
+    def __init__(self, M: int, N: int):
+        self.M, self.N = int(M), int(N)
+        self.completed: List[TaskRecord] = []
+        self.rejected = 0
+        self.unserved = 0          # still queued when the run ended
+        self.replans = 0
+        self.busy_k = np.zeros(N + 1)      # ∫ k dt per worker column
+        self.busy_b = np.zeros(N + 1)
+        self.t_end = 0.0
+
+    # -- accumulation --------------------------------------------------------
+
+    def record_task(self, rec: TaskRecord) -> None:
+        self.completed.append(rec)
+        if np.isfinite(rec.t_complete):
+            self.t_end = max(self.t_end, rec.t_complete)
+
+    def record_share_interval(self, k_row: np.ndarray, b_row: np.ndarray,
+                              dt: float) -> None:
+        self.busy_k += k_row * dt
+        self.busy_b += b_row * dt
+
+    # -- views ---------------------------------------------------------------
+
+    def _arr(self, attr: str, master: Optional[int] = None) -> np.ndarray:
+        recs = self.completed if master is None else [
+            r for r in self.completed if r.master == master]
+        return np.array([getattr(r, attr) for r in recs], dtype=np.float64)
+
+    def sojourns(self, master: Optional[int] = None) -> np.ndarray:
+        return self._arr("sojourn", master)
+
+    def utilization(self) -> np.ndarray:
+        """Mean in-flight computing-power share per worker (cols 1..N)."""
+        horizon = max(self.t_end, 1e-300)
+        return self.busy_k[1:] / horizon
+
+    def to_records(self) -> List[Dict[str, float]]:
+        return [r.to_dict() for r in self.completed]
+
+    def summary(self) -> Dict[str, float]:
+        s = self.sojourns()
+        q = self._arr("queue_wait")
+        w = self._arr("wasted_rows")
+        need = self._arr("rows_needed")
+        ok = [r.decode_ok for r in self.completed if r.decode_ok is not None]
+        out: Dict[str, float] = {
+            "tasks_completed": float(len(self.completed)),
+            "tasks_rejected": float(self.rejected),
+            "tasks_unserved": float(self.unserved),
+            "replans": float(self.replans),
+            "horizon": float(self.t_end),
+        }
+        if s.size:
+            fin = s[np.isfinite(s)]
+            out.update({
+                "throughput_per_time": len(self.completed) / max(self.t_end, 1e-300),
+                "sojourn_mean": float(fin.mean()) if fin.size else math.inf,
+                "sojourn_p50": float(np.quantile(fin, 0.50)) if fin.size else math.inf,
+                "sojourn_p95": float(np.quantile(fin, 0.95)) if fin.size else math.inf,
+                "sojourn_p99": float(np.quantile(fin, 0.99)) if fin.size else math.inf,
+                "queue_wait_mean": float(q.mean()),
+                "queue_wait_p99": float(np.quantile(q, 0.99)),
+                "wasted_rows_per_task": float(w.mean()),
+                "wasted_fraction": float(w.sum() / max(need.sum(), 1e-300)),
+                "utilization_mean": float(self.utilization().mean()),
+                "utilization_max": float(self.utilization().max()),
+            })
+        if ok:
+            out["decode_ok_rate"] = float(np.mean([bool(v) for v in ok]))
+        return out

@@ -1,0 +1,126 @@
+"""Per-worker share tracking and admission control.
+
+The paper's constraints (6c)/(25c) bound the *column sums* of the
+computing-power and bandwidth fractions: Σ_m k_{m,n} ≤ 1 and
+Σ_m b_{m,n} ≤ 1 for every shared worker n.  A static plan satisfies them
+across masters; a streaming system must additionally satisfy them across
+*concurrent in-flight tasks*.  ``SharePool`` is that ledger: tasks acquire
+(k, b) rows on admission and release them on completion, and the engine
+queues (backpressure) whatever does not fit.
+
+Admission supports proportional down-scaling (fractional policies only): if
+a task wants shares k_req but only f·k_req fits, it can run with f·k_req —
+its loads are re-derived from the Theorem-3 closed form at the scaled
+shares, trading a longer predicted completion for no queueing delay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["AdmissionConfig", "SharePool", "WaitQueue"]
+
+_ATOL = 1e-9
+
+
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Admission / backpressure policy of the streaming engine.
+
+    min_fraction: smallest acceptable down-scaling of the desired shares;
+                  below it the task waits instead of running starved.
+    allow_scaling: fractional policies may shrink shares; dedicated and
+                  uncoded plans are all-or-nothing (whole workers).
+    max_queue:    backpressure bound — arrivals beyond it are *rejected*
+                  (counted, not simulated).  None = unbounded queue.
+    """
+    min_fraction: float = 0.25
+    allow_scaling: bool = True
+    max_queue: Optional[int] = None
+
+
+class SharePool:
+    """Ledger of in-flight (k, b) column sums over the N shared workers.
+
+    Column 0 (the master's local processor) is never pooled: each master is
+    always fully dedicated to itself (paper §II-A), so only columns 1..N are
+    tracked.  Offline workers admit no new shares.
+    """
+
+    def __init__(self, N: int):
+        self.N = int(N)
+        self.k_used = np.zeros(N + 1)
+        self.b_used = np.zeros(N + 1)
+        self.online = np.ones(N + 1, dtype=bool)
+
+    # -- capacity queries ---------------------------------------------------
+
+    def available_k(self) -> np.ndarray:
+        out = np.where(self.online, 1.0 - self.k_used, 0.0)
+        out[0] = 1.0
+        return np.maximum(out, 0.0)
+
+    def available_b(self) -> np.ndarray:
+        out = np.where(self.online, 1.0 - self.b_used, 0.0)
+        out[0] = 1.0
+        return np.maximum(out, 0.0)
+
+    def feasible_fraction(self, k_req: np.ndarray, b_req: np.ndarray) -> float:
+        """Largest f ∈ [0, 1] with f·k_req ≤ avail_k and f·b_req ≤ avail_b.
+
+        Requests on offline workers force f = 0 (the caller should mask them
+        out first if partial service is acceptable)."""
+        need = (k_req[1:] > _ATOL) | (b_req[1:] > _ATOL)
+        if not need.any():
+            return 1.0
+        ak, ab = self.available_k()[1:], self.available_b()[1:]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            fk = np.where(k_req[1:] > _ATOL, ak / np.maximum(k_req[1:], _ATOL), np.inf)
+            fb = np.where(b_req[1:] > _ATOL, ab / np.maximum(b_req[1:], _ATOL), np.inf)
+        f = float(np.min(np.where(need, np.minimum(fk, fb), np.inf)))
+        return float(np.clip(f, 0.0, 1.0))
+
+    # -- mutation -----------------------------------------------------------
+
+    def acquire(self, k_row: np.ndarray, b_row: np.ndarray) -> None:
+        if np.any(self.k_used[1:] + k_row[1:] > 1.0 + 1e-6) or \
+           np.any(self.b_used[1:] + b_row[1:] > 1.0 + 1e-6):
+            raise ValueError("share acquisition violates column-sum <= 1")
+        self.k_used[1:] += k_row[1:]
+        self.b_used[1:] += b_row[1:]
+
+    def release(self, k_row: np.ndarray, b_row: np.ndarray) -> None:
+        self.k_used[1:] = np.maximum(self.k_used[1:] - k_row[1:], 0.0)
+        self.b_used[1:] = np.maximum(self.b_used[1:] - b_row[1:], 0.0)
+
+    def set_online(self, worker: int, online: bool) -> None:
+        self.online[worker] = online
+
+
+class WaitQueue:
+    """FIFO backpressure queue of task ids awaiting admission."""
+
+    def __init__(self, max_queue: Optional[int] = None):
+        self.max_queue = max_queue
+        self._q: Deque[int] = deque()
+        self.rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def offer(self, tid: int) -> bool:
+        """Enqueue; False (rejected) when the backpressure bound is hit."""
+        if self.max_queue is not None and len(self._q) >= self.max_queue:
+            self.rejected += 1
+            return False
+        self._q.append(tid)
+        return True
+
+    def peek(self) -> Optional[int]:
+        return self._q[0] if self._q else None
+
+    def take(self) -> int:
+        return self._q.popleft()

@@ -1,0 +1,226 @@
+"""Online (re)planning for the streaming engine.
+
+The static stack solves one batch: assignment (Alg. 1/2/4) → loads
+(Thm. 1/2/3) → SCA enhancement (Alg. 3).  A streaming system must re-solve
+as the pool drifts — workers leave, join, degrade — without paying the full
+optimisation on every arrival.  ``OnlinePlanner`` wraps the static stack
+with:
+
+* **replan policies** — ``always`` (every arrival/churn event), ``periodic``
+  (timer-driven), ``drift`` (re-solve when the per-master capacity vector
+  V_m = Σ_n 1/θ_{m,n} moved more than a threshold), ``never``;
+* **warm starting** — Algorithm 3 is seeded from the previous plan's loads
+  (``sca_enhance_plan(warm_l=...)``), so a mildly-perturbed pool converges
+  in a few SCA iterations instead of a cold solve;
+* **a cheap closed-form fallback** — admission-time decisions (scaling a
+  task's shares to what the pool has left) use the Theorem-1/3 closed form
+  ``l* = t*/(2θ)`` directly; no iterative solve sits on the latency-critical
+  path.
+
+Pool changes are communicated as an ``online`` mask plus a per-worker
+slowdown ``scale`` (1 = healthy); plans are always recomputed when the mask
+changes (a plan placing load on a dead worker is never served).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.assignment import fractional_greedy, iterated_greedy, plan_from_assignment
+from ..core.allocation import markov_loads
+from ..core.benchmarks import uncoded_uniform
+from ..core.problem import Plan, Scenario, theta_dedicated
+from ..core.sca import sca_enhance_plan
+
+__all__ = ["ReplanPolicy", "OnlinePlanner", "theta_row_fractional", "scaled_row_loads"]
+
+
+@dataclasses.dataclass
+class ReplanPolicy:
+    """When and how hard to re-optimise.
+
+    mode:            "always" | "periodic" | "drift" | "never".
+    period:          timer interval for "periodic" (sim time units).
+    drift_threshold: relative capacity change triggering a re-solve in
+                     "drift" mode (max_m |V_m/V_m_prev - 1|).
+    use_sca:         run Algorithm 3 on each re-solve (warm-started).
+    sca_iters:       SCA iteration budget per re-solve.
+    """
+    mode: str = "drift"
+    period: float = 50.0
+    drift_threshold: float = 0.15
+    use_sca: bool = False
+    sca_iters: int = 6
+
+    def __post_init__(self):
+        if self.mode not in ("always", "periodic", "drift", "never"):
+            raise ValueError(f"unknown replan mode {self.mode!r}")
+
+
+def theta_row_fractional(a_row, u_row, g_row, k_row, b_row) -> np.ndarray:
+    """θ_{m,·} of eq. (24) for a single master row (admission fast path)."""
+    th = np.full_like(np.asarray(a_row, dtype=np.float64), np.inf)
+    th[0] = 1.0 / u_row[0] + a_row[0]
+    kk, bb = k_row[1:], b_row[1:]
+    act = (kk > 0) & (bb > 0)
+    with np.errstate(divide="ignore"):
+        val = (1.0 / np.where(act, bb * g_row[1:], 1.0)
+               + 1.0 / np.where(act, kk * u_row[1:], 1.0)
+               + a_row[1:] / np.where(act, kk, 1.0))
+    th[1:] = np.where(act, val, np.inf)
+    return th
+
+
+def scaled_row_loads(sc: Scenario, m: int, k_row: np.ndarray,
+                     b_row: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Theorem-1/3 closed-form loads for one master at given shares.
+
+    This is the latency-critical fallback: O(N) closed form, no iteration.
+    Returns (l_row, t_pred)."""
+    th = theta_row_fractional(sc.a[m], sc.u[m], sc.gamma[m], k_row, b_row)
+    l, t = markov_loads(sc.L[m:m + 1], th[None, :])
+    return l[0], float(t[0])
+
+
+class OnlinePlanner:
+    """Maintains the active Plan for the current pool state.
+
+    ``policy`` picks the static planning stack:
+      "dedicated"  — Alg. 1 iterated greedy + Thm-1 loads,
+      "fractional" — Alg. 4 fractional greedy + Thm-3 loads,
+      "uncoded"    — uniform uncoded benchmark (needs-all rule).
+    """
+
+    def __init__(self, sc: Scenario, *, policy: str = "fractional",
+                 replan: Optional[ReplanPolicy] = None,
+                 rng: np.random.Generator | int = 0):
+        if policy not in ("dedicated", "fractional", "uncoded"):
+            raise ValueError(f"unknown planning policy {policy!r}")
+        self.base = sc
+        self.policy = policy
+        self.replan = replan or ReplanPolicy()
+        self._seed = rng if isinstance(rng, int) else 0
+        self._plan: Optional[Plan] = None
+        self._key: Optional[bytes] = None
+        self._capacity_at_plan: Optional[np.ndarray] = None
+        self.replans = 0
+
+    # -- pool state → effective scenario ------------------------------------
+
+    def effective_scenario(self, online: np.ndarray,
+                           scale: np.ndarray) -> Scenario:
+        """Degradation-adjusted Scenario over the full node axis.
+
+        ``scale[n] = f`` slows worker n by f: shift a×f, rates u/f and γ/f.
+        Offline workers keep their parameters (exclusion happens in the
+        restricted solve, not by parameter surgery)."""
+        s = np.asarray(scale, dtype=np.float64)[None, :]
+        return Scenario(a=self.base.a * s, u=self.base.u / s,
+                        gamma=self.base.gamma / s, L=self.base.L)
+
+    def capacity(self, online: np.ndarray, scale: np.ndarray) -> np.ndarray:
+        """V_m = Σ_{n online} 1/θ_{m,n}: the drift statistic (1/t* scale)."""
+        sc_eff = self.effective_scenario(online, scale)
+        part = np.broadcast_to(online[None, :], (sc_eff.M, sc_eff.N + 1))
+        th = theta_dedicated(sc_eff, part.astype(float))
+        inv = np.where(np.isfinite(th), 1.0 / th, 0.0)
+        return inv.sum(axis=1)
+
+    # -- plan lifecycle ------------------------------------------------------
+
+    @property
+    def plan(self) -> Plan:
+        if self._plan is None:
+            raise RuntimeError("no plan yet — call ensure_plan first")
+        return self._plan
+
+    @property
+    def needs_all(self) -> bool:
+        return self.policy == "uncoded"
+
+    def ensure_plan(self, online: np.ndarray, scale: np.ndarray, *,
+                    force: bool = False, event: bool = False) -> Plan:
+        """Return the active plan, re-solving per the replan policy.
+
+        force: timer fired (periodic mode) or caller demands a re-solve.
+        event: an arrival/churn happened ("always" mode re-solves on these).
+        """
+        online = np.asarray(online, dtype=bool)
+        scale = np.asarray(scale, dtype=np.float64)
+        key = online.tobytes() + scale.tobytes()
+        if self._plan is not None and key == self._key:
+            return self._plan
+        mask_changed = (self._key is None
+                        or self._key[:online.nbytes] != online.tobytes())
+        solve = force or self._plan is None or mask_changed
+        if not solve:
+            mode = self.replan.mode
+            if mode == "always" and event:
+                solve = True
+            elif mode == "drift":
+                V = self.capacity(online, scale)
+                drift = np.max(np.abs(V / np.maximum(
+                    self._capacity_at_plan, 1e-300) - 1.0))
+                solve = drift > self.replan.drift_threshold
+        if solve:
+            self._plan = self._solve(online, scale)
+            self._key = key
+            self._capacity_at_plan = self.capacity(online, scale)
+            self.replans += 1
+        return self._plan
+
+    # -- the restricted static solve ----------------------------------------
+
+    def _solve(self, online: np.ndarray, scale: np.ndarray) -> Plan:
+        sc_eff = self.effective_scenario(online, scale)
+        cols = np.concatenate([[0], np.nonzero(online[1:])[0] + 1])
+        if cols.size == 1:
+            return self._local_only_plan(sc_eff)
+        sub = Scenario(a=sc_eff.a[:, cols], u=sc_eff.u[:, cols],
+                       gamma=sc_eff.gamma[:, cols], L=sc_eff.L)
+        if self.policy == "uncoded":
+            sub_plan = uncoded_uniform(sub)
+        elif self.policy == "dedicated":
+            k = iterated_greedy(sub, rng=self._seed)
+            sub_plan = plan_from_assignment(sub, k, method="stream-dedicated")
+        else:
+            k = iterated_greedy(sub, rng=self._seed)
+            sub_plan = fractional_greedy(sub, init=k, rng=self._seed)
+        if self.replan.use_sca and self.policy != "uncoded":
+            warm = None
+            if self._plan is not None:
+                warm = self._plan.l[:, cols]
+            sub_plan = sca_enhance_plan(sub, sub_plan,
+                                        max_iters=self.replan.sca_iters,
+                                        warm_l=warm)
+        return self._expand(sub_plan, cols)
+
+    def _local_only_plan(self, sc_eff: Scenario) -> Plan:
+        """Every shared worker is offline: each master computes alone.
+
+        A single node needs no redundancy — load exactly L_m locally.  The
+        uncoded benchmark has no local-compute path, so it cannot serve
+        (t = inf; arrivals queue until a worker rejoins)."""
+        M, W = self.base.M, self.base.N + 1
+        k = np.zeros((M, W))
+        k[:, 0] = 1.0
+        l = np.zeros((M, W))
+        if self.policy == "uncoded":
+            t = np.full(M, np.inf)
+        else:
+            l[:, 0] = sc_eff.L
+            theta0 = 1.0 / sc_eff.u[:, 0] + sc_eff.a[:, 0]
+            t = sc_eff.L * theta0
+        return Plan(k=k, b=k.copy(), l=l, t_per_master=t,
+                    method=f"stream-{self.policy}-local-only")
+
+    def _expand(self, sub_plan: Plan, cols: np.ndarray) -> Plan:
+        M, W = self.base.M, self.base.N + 1
+        k = np.zeros((M, W)); b = np.zeros((M, W)); l = np.zeros((M, W))
+        k[:, cols] = sub_plan.k
+        b[:, cols] = sub_plan.b
+        l[:, cols] = sub_plan.l
+        return Plan(k=k, b=b, l=l, t_per_master=sub_plan.t_per_master.copy(),
+                    method=sub_plan.method)

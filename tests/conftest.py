@@ -1,9 +1,27 @@
+import importlib.util
 import os
+import pathlib
+import re
 import sys
 
-# Make src/ importable without installation.
+# Make src/ importable without installation (pytest's `pythonpath` ini option
+# also does this; the explicit insert keeps `python tests/...` working too).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
 # tests and benches must see the real (single) device; only the dry-run
 # pins 512 devices, inside its own process.
+
+# Graceful degradation for optional test-only deps: when `hypothesis` (or any
+# other optional import) is absent, skip collecting the modules that need it
+# instead of erroring the whole session.
+_OPTIONAL = ("hypothesis",)
+collect_ignore = []
+_here = pathlib.Path(__file__).parent
+for _dep in _OPTIONAL:
+    if importlib.util.find_spec(_dep) is not None:
+        continue
+    _pat = re.compile(rf"^\s*(?:from|import)\s+{_dep}\b", re.MULTILINE)
+    for _p in sorted(_here.glob("test_*.py")):
+        if _pat.search(_p.read_text()) and _p.name not in collect_ignore:
+            collect_ignore.append(_p.name)
