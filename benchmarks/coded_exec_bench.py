@@ -12,6 +12,7 @@
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -92,7 +93,7 @@ def _stream_scenario(seed: int = 0, M: int = 3, N: int = 8, L: float = 256.0):
 
 
 def run_stream(seed: int = 0, n_tasks: int = 1000,
-               json_path: str | None = None):
+               json_path: str | None = None, backend: str = "numpy"):
     """1000-task streaming simulation vs sequential CodedExecutor.run.
 
     Both sides simulate the same workload class (3 masters, L=256 coded
@@ -114,7 +115,7 @@ def run_stream(seed: int = 0, n_tasks: int = 1000,
                  WorkerEvent(5000.0, 5, "leave"),
                  WorkerEvent(9000.0, 5, "join")]
         ex = StreamingExecutor(sc, srcs, policy="fractional", churn=churn,
-                               numerics=numerics, rng=seed)
+                               numerics=numerics, rng=seed, backend=backend)
         t0 = time.perf_counter()
         ms = ex.run(max_tasks=n_tasks)
         return ms, time.perf_counter() - t0
@@ -171,11 +172,18 @@ def run_stream(seed: int = 0, n_tasks: int = 1000,
          f"p99_sojourn_ms={record['p99_sojourn_ms']};json={path}")
 
 
-def main():
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tasks", type=int, default=1000,
+                   help="streaming-bench task count")
+    p.add_argument("--backend", default="numpy",
+                   choices=("numpy", "jax", "pallas"),
+                   help="streaming verification backend")
+    args = p.parse_args(argv)
     run_executor()
     run_kernels()
     run_coded_grads()
-    run_stream()
+    run_stream(n_tasks=args.tasks, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ from repro.core import (comp_dominant_loads, iterated_greedy,
                         large_scale_scenario, Plan)
 from repro.sim import simulate_plan
 
-from .common import TRIALS, emit, save_rows, timed
+from .common import TRIALS, bench_parser, emit, save_rows, timed
 
 
 def _plans(sc, rng=0):
@@ -34,7 +34,8 @@ def _plans(sc, rng=0):
     return exact, approx, enhanced
 
 
-def run(scale: str = "small", trials: int = TRIALS, seed: int = 0):
+def run(scale: str = "small", trials: int = TRIALS, seed: int = 0,
+        backend: str = "numpy"):
     # computation-dominant: make comms delay negligible
     sc0 = small_scale_scenario(seed) if scale == "small" \
         else large_scale_scenario(seed)
@@ -45,7 +46,7 @@ def run(scale: str = "small", trials: int = TRIALS, seed: int = 0):
     out = {}
     for plan in plans:
         r = simulate_plan(sc, plan, trials=trials, rng=seed + 1,
-                          keep_samples=True)
+                          keep_samples=True, backend=backend)
         out[plan.method] = r
         for m in range(sc.M):
             rows.append((plan.method, f"master{m}",
@@ -61,9 +62,10 @@ def run(scale: str = "small", trials: int = TRIALS, seed: int = 0):
     return out
 
 
-def main():
-    run("small")
-    run("large")
+def main(argv=None):
+    args = bench_parser(__doc__).parse_args(argv)
+    for scale in ("small", "large") if args.scale == "all" else (args.scale,):
+        run(scale, trials=args.trials, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ from repro.core import (coded_uniform, fractional_greedy, iterated_greedy,
                         large_scale_scenario, uncoded_uniform)
 from repro.sim import simulate_plan
 
-from .common import TRIALS, emit, save_rows, timed
+from .common import TRIALS, bench_parser, emit, save_rows, timed
 
 
 def build_plans(sc, *, include_bruteforce: bool, rng=0):
@@ -37,7 +37,8 @@ def build_plans(sc, *, include_bruteforce: bool, rng=0):
     return plans
 
 
-def run(scale: str = "small", trials: int = TRIALS, seed: int = 0):
+def run(scale: str = "small", trials: int = TRIALS, seed: int = 0,
+        backend: str = "numpy"):
     sc = small_scale_scenario(seed) if scale == "small" \
         else large_scale_scenario(seed)
     plans, t_us = timed(build_plans, sc,
@@ -45,7 +46,8 @@ def run(scale: str = "small", trials: int = TRIALS, seed: int = 0):
     means = {}
     rows = []
     for name, plan in plans.items():
-        r = simulate_plan(sc, plan, trials=trials, rng=seed + 1)
+        r = simulate_plan(sc, plan, trials=trials, rng=seed + 1,
+                          backend=backend)
         means[name] = r.overall_mean
         rows.append((name, round(r.overall_mean, 2), round(plan.t, 2)))
     save_rows(f"fig4_delay_{scale}.csv", "method,mc_mean_ms,predicted_ms",
@@ -63,9 +65,10 @@ def run(scale: str = "small", trials: int = TRIALS, seed: int = 0):
     return means
 
 
-def main():
-    run("small")
-    run("large")
+def main(argv=None):
+    args = bench_parser(__doc__).parse_args(argv)
+    for scale in ("small", "large") if args.scale == "all" else (args.scale,):
+        run(scale, trials=args.trials, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -12,11 +12,11 @@ from repro.core import (coded_uniform, iterated_greedy, plan_from_assignment,
                         large_scale_scenario, uncoded_uniform)
 from repro.sim import simulate_plan
 
-from .common import TRIALS, emit, save_rows, timed
+from .common import TRIALS, bench_parser, emit, save_rows, timed
 
 
 def run(scale: str = "large", trials: int = TRIALS, seed: int = 0,
-        rho: float = 0.95):
+        rho: float = 0.95, backend: str = "numpy"):
     sc = small_scale_scenario(seed) if scale == "small" \
         else large_scale_scenario(seed)
 
@@ -30,7 +30,7 @@ def run(scale: str = "large", trials: int = TRIALS, seed: int = 0,
     rows, q = [], {}
     for name, plan in plans.items():
         r = simulate_plan(sc, plan, trials=trials, rng=seed + 1,
-                          keep_samples=True)
+                          keep_samples=True, backend=backend)
         q[name] = r.quantile(rho)
         # coarse CDF grid for the figure
         ts = np.quantile(r.overall_samples, np.linspace(0.01, 0.999, 25))
@@ -45,9 +45,10 @@ def run(scale: str = "large", trials: int = TRIALS, seed: int = 0,
     return q
 
 
-def main():
-    run("large")
-    run("small")
+def main(argv=None):
+    args = bench_parser(__doc__).parse_args(argv)
+    for scale in ("large", "small") if args.scale == "all" else (args.scale,):
+        run(scale, trials=args.trials, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -17,13 +17,13 @@ from repro.core import (coded_uniform, fractional_greedy, iterated_greedy,
                         large_scale_scenario)
 from repro.sim import simulate_plan
 
-from .common import TRIALS, emit, save_rows, timed
+from .common import TRIALS, bench_parser, emit, save_rows, timed
 
 
 RATIOS = (0.5, 1.0, 2.0, 4.0, 8.0)
 
 
-def run(trials: int = TRIALS // 2, seed: int = 0):
+def run(trials: int = TRIALS // 2, seed: int = 0, backend: str = "numpy"):
     base = large_scale_scenario(seed)
     rows = []
     mono_ok = True
@@ -41,7 +41,8 @@ def run(trials: int = TRIALS // 2, seed: int = 0):
                 "frac": fractional_greedy(sc, init=k_it),
             }
             for name, plan in plans.items():
-                r = simulate_plan(sc, plan, trials=trials, rng=seed + 1)
+                r = simulate_plan(sc, plan, trials=trials, rng=seed + 1,
+                                  backend=backend)
                 share = float(np.mean(plan.l[:, 0] / plan.l.sum(axis=1)))
                 rows.append((ratio, name, round(r.overall_mean, 2),
                              round(share, 4)))
@@ -61,8 +62,10 @@ def run(trials: int = TRIALS // 2, seed: int = 0):
          f"share_decreasing={shares[-1] < shares[0]}")
 
 
-def main():
-    run()
+def main(argv=None):
+    args = bench_parser(__doc__, scales=(),
+                        default_trials=TRIALS // 2).parse_args(argv)
+    run(trials=args.trials, backend=args.backend)
 
 
 if __name__ == "__main__":

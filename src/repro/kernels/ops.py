@@ -17,8 +17,8 @@ from .matmul import matmul_pallas
 from .mds_encode import mds_encode_pallas
 from .wkv6 import wkv6_pallas
 
-__all__ = ["matmul", "mds_encode", "coded_matvec", "wkv6",
-           "default_interpret"]
+__all__ = ["matmul", "mds_encode", "mds_encode_batch", "coded_matvec",
+           "coded_matvec_batch", "wkv6", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -60,6 +60,34 @@ def mds_encode(g: jnp.ndarray, a: jnp.ndarray, *, systematic: bool = True,
         parity = matmul(g[L:], a, block=block, interpret=interpret)
         return jnp.concatenate([a.astype(parity.dtype), parity], axis=0)
     return matmul(g, a, block=block, interpret=interpret)
+
+
+def mds_encode_batch(g: jnp.ndarray, a: jnp.ndarray, *,
+                     systematic: bool = True, block=(128, 128, 128),
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Batched Ã_b = G_b @ A_b over a leading task/master axis.
+
+    ``g`` is (B, L̃, L) per-task generators or a shared (L̃, L); ``a`` is
+    (B, L, S).  ``vmap`` of the Pallas call adds a grid dimension, so the
+    whole stack is one kernel launch."""
+    interpret = default_interpret() if interpret is None else interpret
+    enc = functools.partial(mds_encode, systematic=systematic, block=block,
+                            interpret=interpret)
+    if g.ndim == 2:
+        return jax.vmap(lambda ab: enc(g, ab))(a)
+    return jax.vmap(enc)(g, a)
+
+
+def coded_matvec_batch(a_tilde: jnp.ndarray, x: jnp.ndarray, *,
+                       block_rows: int = 128, block_k: int = 128,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Batched per-task coded products y_b = Ã_b @ x_b.
+
+    ``a_tilde`` (B, L, S), ``x`` (B, S) or (B, S, C) → (B, L[, C])."""
+    interpret = default_interpret() if interpret is None else interpret
+    mv = functools.partial(coded_matvec, block_rows=block_rows,
+                           block_k=block_k, interpret=interpret)
+    return jax.vmap(mv)(a_tilde, x)
 
 
 def coded_matvec(a_tilde: jnp.ndarray, x: jnp.ndarray, *,

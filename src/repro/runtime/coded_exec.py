@@ -11,6 +11,17 @@ This is simultaneously (a) the simulation backend for the paper's Fig. 2-6/8
 (numerically exact completion delays), and (b) the fault-tolerance engine:
 ``run`` simply never waits for workers outside the decoding prefix, so a
 dead worker (delay = inf) costs nothing once redundancy covers its load.
+
+``run`` builds **one stacked problem over the master axis** and calls the
+shared :mod:`repro.stream.backend` once per stage: a batched encode, a
+single ``completion_times`` call over all masters, and a single
+``decode_batch`` (with its systematic-prefix fast path) for every master
+that completes.  On the default numpy backend this is bit-for-bit equal to
+the legacy per-master loop — kept as :meth:`CodedExecutor._run_loop` and
+asserted by the equivalence tests.  ``backend="jax"`` moves the linear
+algebra onto the jitted jax path, ``backend="pallas"`` runs the encode /
+coded-product Pallas kernels (real lowering on TPU, interpret elsewhere);
+both compute in float32, so decode verification uses a looser tolerance.
 """
 from __future__ import annotations
 
@@ -22,6 +33,8 @@ import numpy as np
 from ..core import mds
 from ..core.delays import sample_total
 from ..core.problem import Plan, Scenario
+from ..stream.backend import (check_backend, completion_times, decode_batch,
+                              has_jax)
 
 __all__ = ["CodedExecutor", "ExecutionReport"]
 
@@ -39,17 +52,149 @@ class ExecutionReport:
         return float(self.completion.max())
 
 
+@dataclasses.dataclass
+class _MasterProblem:
+    """One master's prepared (encoded-side) problem, pre-numerics."""
+    m: int
+    A: np.ndarray
+    x: np.ndarray
+    L: int
+    L_tilde: int
+    G: np.ndarray                    # (max(L_tilde, L), L)
+    rows_L: Optional[np.ndarray]     # (L,) received row ids, None if DNF
+    prefix: np.ndarray               # node ids in the decode prefix
+    node_rows: List[Tuple[int, np.ndarray]]  # (node, its row slice) in order
+
+
 class CodedExecutor:
-    """Executes one realization of the coded multi-master computation."""
+    """Executes one realization of the coded multi-master computation.
+
+    backend: "numpy" (default; bit-for-bit with the legacy per-master
+    loop), "jax" (jitted stacked linear algebra) or "pallas" (encode /
+    product kernels from ``repro.kernels``; interpret mode off-TPU).
+    ``verify_tol`` is the relative decode-verification tolerance; the
+    default is 1e-6 on numpy and 5e-4 on the float32 jax/pallas paths.
+    """
 
     def __init__(self, sc: Scenario, plan: Plan, *,
                  generator_kind: str = "systematic",
-                 rng: np.random.Generator | int = 0):
+                 rng: np.random.Generator | int = 0,
+                 backend: str = "numpy",
+                 verify_tol: Optional[float] = None):
         self.sc = sc
         self.plan = plan
         self.rng = (np.random.default_rng(rng)
                     if not isinstance(rng, np.random.Generator) else rng)
         self.generator_kind = generator_kind
+        self.backend = check_backend(backend)
+        if self.backend != "numpy" and not has_jax():
+            self.backend = "numpy"   # graceful, like the backend layer
+        self.verify_tol = (verify_tol if verify_tol is not None
+                           else (1e-6 if self.backend == "numpy" else 5e-4))
+
+    # ------------------------------------------------------------- staging
+
+    def _prepare(self, A_list, x_list, dead_workers
+                 ) -> Tuple[np.ndarray, List[_MasterProblem]]:
+        """Sample delays, draw generators, and resolve every master's decode
+        prefix — all randomness happens here, in the legacy draw order."""
+        sc, plan = self.sc, self.plan
+        loads = mds.integer_loads(plan.l, 0)
+
+        delays = sample_total(self.rng, (), plan.l, plan.k, plan.b,
+                              sc.a, sc.u, sc.gamma, local_col0=True)
+        for w in dead_workers:
+            delays[:, w] = np.inf
+        # A NaN delay (poisoned sample) means "never arrives", same as a dead
+        # worker — fold both into inf so ordering and prefix logic are exact.
+        delays = np.where(np.isnan(delays), np.inf, delays)
+
+        need = np.array([np.asarray(A).shape[0] for A in A_list],
+                        dtype=np.float64)
+        # one batched completion call over the master axis
+        completion = completion_times(delays, loads.astype(np.float64), need)
+
+        problems: List[_MasterProblem] = []
+        for m in range(sc.M):
+            A, x = np.asarray(A_list[m]), np.asarray(x_list[m])
+            L = A.shape[0]
+            lm = loads[m]
+            active = np.nonzero(lm > 0)[0]
+            L_tilde = int(lm[active].sum())
+            G = mds.make_generator(L, max(L_tilde, L),
+                                   kind=self.generator_kind,
+                                   rng=self.rng, dtype=np.float64)
+            slices = mds.split_loads(L_tilde, lm[active])
+            # prefix bookkeeping: earliest arrivals until >= L rows.  A dead
+            # or NaN worker ranked anywhere in the sort is *skipped* (it
+            # never arrives); the live workers behind it still count.
+            d_act = delays[m, active]
+            finite = np.isfinite(d_act)
+            order_j = np.argsort(np.where(finite, d_act, np.inf),
+                                 kind="stable")
+            got_rows: List[np.ndarray] = []
+            node_rows: List[Tuple[int, np.ndarray]] = []
+            prefix: List[int] = []
+            acc = 0
+            for j in order_j:
+                if not finite[j]:
+                    break           # only non-arrivals remain past this point
+                n = int(active[j])
+                got_rows.append(slices[j])
+                node_rows.append((n, slices[j]))
+                prefix.append(n)
+                acc += slices[j].size
+                if acc >= L:
+                    break
+            rows_L = (np.concatenate(got_rows)[:L] if acc >= L else None)
+            problems.append(_MasterProblem(
+                m=m, A=A, x=x, L=L, L_tilde=L_tilde, G=G, rows_L=rows_L,
+                prefix=np.array(prefix), node_rows=node_rows))
+        return completion, problems
+
+    # ------------------------------------------------------------ numerics
+
+    def _encode_products_np(self, p: _MasterProblem) -> np.ndarray:
+        """(L,) received results for one master — legacy-exact numerics.
+
+        Encode and per-node partial products run at the legacy loop's exact
+        shapes (``G[:L̃] @ A`` then one gemv per prefix node), so the numpy
+        path stays bit-for-bit; only nodes inside the decode prefix are
+        computed (the legacy loop also multiplied never-used nodes)."""
+        A_tilde = mds.encode(p.G[:p.L_tilde], p.A)
+        parts = [A_tilde[idx] @ p.x for _, idx in p.node_rows]
+        return np.concatenate(parts)[:p.L]
+
+    def _encode_products_dev(self, group: List[_MasterProblem]) -> np.ndarray:
+        """(B, L) received results for one same-shape group of masters, all
+        stacked on device: one batched encode (Pallas ``mds_encode`` kernel
+        on the pallas backend — real lowering on TPU, interpret elsewhere —
+        plain jnp matmul on jax), one batched coded product, one gather of
+        the received rows, one host transfer out (float32)."""
+        import jax.numpy as jnp
+        Lt = group[0].L_tilde
+        G_stack = jnp.asarray(np.stack([p.G[:Lt] for p in group]))
+        A_stack = jnp.asarray(np.stack([p.A for p in group]))
+        x_stack = jnp.asarray(np.stack([p.x for p in group]))
+        if self.backend == "pallas":
+            from ..kernels import ops
+            A_tilde = ops.mds_encode_batch(
+                G_stack, A_stack,
+                systematic=self.generator_kind == "systematic")
+            y_full = ops.coded_matvec_batch(A_tilde, x_stack)
+        else:
+            A_tilde = jnp.matmul(G_stack, A_stack)
+            xs = x_stack[..., None] if x_stack.ndim == 2 else x_stack
+            y_full = jnp.matmul(A_tilde, xs)
+            if x_stack.ndim == 2:
+                y_full = y_full[..., 0]
+        rows = jnp.asarray(np.stack([p.rows_L for p in group]))
+        if y_full.ndim == 3:                   # matrix right-hand sides
+            return np.asarray(jnp.take_along_axis(
+                y_full, rows[..., None], axis=1))
+        return np.asarray(jnp.take_along_axis(y_full, rows, axis=1))
+
+    # ----------------------------------------------------------------- run
 
     def run(self, A_list: Sequence[np.ndarray], x_list: Sequence[np.ndarray],
             dead_workers: Sequence[int] = (),
@@ -58,6 +203,56 @@ class CodedExecutor:
 
         ``dead_workers`` are 1-based worker columns that never respond
         (fault injection)."""
+        sc, plan = self.sc, self.plan
+        completion, problems = self._prepare(A_list, x_list, dead_workers)
+        results: List[Optional[np.ndarray]] = [None] * sc.M
+        ok = np.zeros(sc.M, bool)
+        errs = np.zeros(sc.M)
+
+        # group completed masters by problem shape → one stacked decode (and,
+        # off-numpy, one stacked encode/product) per group.  The numpy path
+        # only needs a common L to share the decode, so it groups coarser.
+        groups: Dict[Tuple[int, ...], List[_MasterProblem]] = {}
+        for p in problems:
+            if p.rows_L is None:
+                results[p.m] = np.full(p.L, np.nan)
+                continue
+            key = ((p.L, p.x.shape[1:]) if self.backend == "numpy"
+                   else (p.L, p.L_tilde, p.A.shape[1], p.x.shape[1:]))
+            groups.setdefault(key, []).append(p)
+
+        for group in groups.values():
+            if self.backend == "numpy":
+                y_sel = np.stack([self._encode_products_np(p)
+                                  for p in group])
+            else:
+                y_sel = self._encode_products_dev(group)
+            rows = np.stack([p.rows_L for p in group])
+            y_hat = decode_batch(
+                [p.G for p in group], rows, y_sel,
+                backend="numpy" if self.backend == "numpy" else "jax")
+            for i, p in enumerate(group):
+                truth = p.A @ p.x
+                results[p.m] = y_hat[i]
+                errs[p.m] = float(np.max(np.abs(y_hat[i] - truth)))
+                ok[p.m] = errs[p.m] <= self.verify_tol * \
+                    (1 + float(np.max(np.abs(truth))))
+
+        report = ExecutionReport(
+            completion=completion, used_nodes=[p.prefix for p in problems],
+            decode_ok=ok, max_err=errs,
+            redundancy=plan.l.sum(axis=1) / sc.L)
+        return list(results), report
+
+    # -------------------------------------------------- reference (legacy)
+
+    def _run_loop(self, A_list: Sequence[np.ndarray],
+                  x_list: Sequence[np.ndarray],
+                  dead_workers: Sequence[int] = (),
+                  ) -> Tuple[List[np.ndarray], ExecutionReport]:
+        """The original per-master Python loop, kept verbatim as the
+        reference implementation: the equivalence tests assert ``run`` (on
+        the numpy backend) reproduces it bit-for-bit from the same seed."""
         sc, plan = self.sc, self.plan
         loads = mds.integer_loads(plan.l, 0)
         results: List[np.ndarray] = []
@@ -68,8 +263,6 @@ class CodedExecutor:
                               sc.a, sc.u, sc.gamma, local_col0=True)
         for w in dead_workers:
             delays[:, w] = np.inf
-        # A NaN delay (poisoned sample) means "never arrives", same as a dead
-        # worker — fold both into inf so ordering and prefix logic are exact.
         delays = np.where(np.isnan(delays), np.inf, delays)
 
         for m in range(sc.M):
@@ -82,15 +275,10 @@ class CodedExecutor:
                                    kind=self.generator_kind,
                                    rng=self.rng, dtype=np.float64)
             slices = mds.split_loads(L_tilde, lm[active])
-            # per-node partial products  y_n = Ã_n x
             A_tilde = mds.encode(G[:L_tilde], A)
             y_parts = {int(n): A_tilde[rows] @ x
                        for n, rows in zip(active, slices)}
 
-            # completion: earliest prefix of arrivals covering >= L rows.
-            # Explicit finite mask BEFORE ordering: a dead/NaN worker ranked
-            # anywhere in the sort must be *skipped* (it never arrives), not
-            # terminate decoding — the live workers behind it still count.
             d_act = delays[m, active]
             finite = np.isfinite(d_act)
             order_j = np.argsort(np.where(finite, d_act, np.inf),
@@ -102,7 +290,7 @@ class CodedExecutor:
             prefix = []
             for j in order_j:
                 if not finite[j]:
-                    break           # only non-arrivals remain past this point
+                    break
                 n = int(active[j])
                 idx = slices[j]
                 got_rows.append(idx)
@@ -117,7 +305,6 @@ class CodedExecutor:
             if acc >= L:
                 rows = np.concatenate(got_rows)[:max(L, 0)]
                 ys = np.concatenate(got_y)[:rows.size]
-                # exactly-L decode (solve); redundancy beyond L is discarded
                 rows_L, ys_L = rows[:L], ys[:L]
                 y_hat = mds.decode(G[:L_tilde], rows_L, ys_L)
                 truth = A @ x

@@ -16,9 +16,9 @@ from typing import Optional
 
 import numpy as np
 
-from ..core.delays import sample_total
 from ..core.problem import Plan, Scenario
-from ..stream.backend import completion_times
+from ..stream.backend import (check_backend, completion_times, has_jax,
+                              simulate_batch, simulate_chunks_np)
 
 __all__ = ["SimResult", "simulate_plan"]
 
@@ -55,7 +55,8 @@ def simulate_plan(sc: Scenario, plan: Plan, trials: int = 100_000,
                   needs_all: Optional[bool] = None,
                   keep_samples: bool = False,
                   straggle_p: float = 0.0, straggle_factor: float = 8.0,
-                  chunk: int = 20_000) -> SimResult:
+                  chunk: Optional[int] = None,
+                  backend: str = "numpy") -> SimResult:
     """Monte-Carlo the completion delay of a plan.
 
     needs_all: force the uncoded "wait for every worker" rule; defaults to
@@ -67,35 +68,56 @@ def simulate_plan(sc: Scenario, plan: Plan, trials: int = 100_000,
     (CPU-credit throttling) that the paper's fitted shifted exponential
     underestimates — the planner still plans with the fitted parameters,
     exactly as the paper's §V-C does with its measured traces.
+
+    backend: "numpy" (authoritative, bit-stable Generator stream) or "jax"
+    — the jitted device-resident ``stream.backend.simulate_batch`` kernel,
+    ~an order of magnitude faster at 1e5+ trials.  The jax path is seeded
+    from ``rng`` but uses a counter-based key, so its samples are
+    reproducible yet not bit-equal to numpy's; means/CDFs agree to Monte-
+    Carlo precision.
+
+    chunk: realizations per batch.  Defaults per backend (20k host rows on
+    numpy; cache-sized 4k device chunks on jax) and is honored on both.
     """
+    check_backend(backend)
     rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
     if needs_all is None:
         needs_all = "uncoded" in plan.method
     M = sc.M
+
+    if backend != "numpy" and has_jax():
+        comp = simulate_batch(plan.l, plan.k, plan.b, sc.a, sc.u, sc.gamma,
+                              sc.L, trials, seed=rng, needs_all=needs_all,
+                              straggle_p=straggle_p,
+                              straggle_factor=straggle_factor,
+                              backend=backend,
+                              **({"chunk": chunk} if chunk else {}))
+        overall = comp.max(axis=1)
+        return SimResult(
+            per_master_mean=comp.mean(axis=0),
+            overall_mean=float(overall.mean()),
+            overall_samples=overall if keep_samples else None,
+            per_master_samples=comp if keep_samples else None,
+        )
+
     sums = np.zeros(M)
     overall_sum = 0.0
     samples = [] if keep_samples else None
     pm_samples = [] if keep_samples else None
 
-    done = 0
-    while done < trials:
-        r = min(chunk, trials - done)
-        # (r, M, N+1) delays for every active pair
-        T = sample_total(rng, (r,), plan.l, plan.k, plan.b,
-                         sc.a, sc.u, sc.gamma, local_col0=True)
-        if straggle_p > 0:
-            throttled = rng.random(T.shape) < straggle_p
-            T = np.where(throttled, T * straggle_factor, T)
-        # one batched call over (realization, master) — no per-master loop
-        comp = completion_times(T, plan.l[None, :, :], sc.L[None, :],
-                                needs_all=needs_all)
+    # streaming aggregation over the shared Generator-based chunk sampler
+    # (one implementation with simulate_batch's numpy fallback)
+    for comp in simulate_chunks_np(rng, plan.l, plan.k, plan.b, sc.a, sc.u,
+                                   sc.gamma, sc.L, trials,
+                                   needs_all=needs_all, straggle_p=straggle_p,
+                                   straggle_factor=straggle_factor,
+                                   chunk=chunk or 20_000):
         sums += comp.sum(axis=0)
         overall = comp.max(axis=1)
         overall_sum += overall.sum()
         if keep_samples:
             samples.append(overall)
             pm_samples.append(comp)
-        done += r
 
     return SimResult(
         per_master_mean=sums / trials,

@@ -1,30 +1,50 @@
-"""Batched completion / delay-sampling / decode backend shared by the
-streaming engine, ``repro.sim.montecarlo`` and ``repro.runtime.coded_exec``.
+"""Multi-backend batched numerics shared by the streaming engine,
+``repro.sim.montecarlo`` and ``repro.runtime.coded_exec``.
 
-The paper's completion rule — master m finishes at the earliest time its
-cumulative received coded rows reach L_m — used to be implemented three
-times (a per-master Python loop in the Monte-Carlo simulator, a per-arrival
-Python loop in ``CodedExecutor``, and implicitly in the straggler policies).
-This module is the single vectorised implementation:
+The paper's delay pipeline — encode → per-worker partial products → prefix
+completion → exactly-L decode — used to exist in two and a half
+implementations (a per-master Python loop in the Monte-Carlo simulator, a
+per-arrival loop in ``CodedExecutor``, and implicitly in the straggler
+policies).  This module is the single implementation, with three backends:
 
-* ``completion_times`` — sort + cumsum over the node axis, batched over any
-  leading axes (realizations, masters, in-flight tasks).  NaN and ±inf
-  delays are treated as "never arrives" instead of poisoning the prefix.
-* ``sample_delays`` — one-call delay sampling for a batch of heterogeneous
-  tasks (stacked (B, N+1) parameter rows).
-* ``decode_batch`` — batched exactly-L MDS decode: ``np.linalg.solve`` on a
-  stacked (B, L, L) system, or ``jax.vmap(jnp.linalg.solve)`` on the jax
-  backend.
-* ``ExponentialBlock`` — block-amortised standard-exponential draws so the
-  event loop consumes pre-sampled randomness (deterministic replay, no
-  per-event RNG overhead).
+* ``numpy`` — the authoritative reference.  Batched sort + cumsum over the
+  node axis, stacked ``np.linalg.solve`` decode.  Bit-for-bit equal to the
+  legacy per-master loops (asserted by tests).
+* ``jax`` — jitted and device-resident.  ``completion_times`` /
+  ``decode_batch`` run as cached jitted functions; ``simulate_batch`` is a
+  full Monte-Carlo kernel (delay sampling + completion) that gathers each
+  master's *active* worker columns, draws float32 exponentials with the
+  fast ``rbg`` generator, and evaluates the completion rule sort-free in
+  cache-sized ``lax.map`` chunks — nothing round-trips to the host until
+  the final sample array.
+* ``pallas`` — the encode / coded-product kernels from ``repro.kernels``
+  (real lowering on TPU, ``interpret=True`` everywhere else), consumed by
+  ``CodedExecutor`` and the streaming verification path; decode reuses the
+  jitted jax solve.
 
-Everything accepts ``backend="numpy" | "jax"``; jax is optional and the
-NumPy path is authoritative (tested bit-for-bit against the legacy loops).
+Public entry points:
+
+* ``completion_times`` — earliest time the cumulative received coded rows
+  reach L, batched over any leading axes (realizations, masters, tasks).
+  NaN and ±inf delays are "never arrives" instead of poisoning the prefix.
+* ``sample_delays`` — turn pre-drawn Exp(1) variates into T = T_tr + T_cp
+  delays, with optional heavy-tail ``straggle_p``/``straggle_factor``
+  throttling (burstable-instance CPU-credit exhaustion).
+* ``simulate_batch`` — (trials, M) Monte-Carlo completion delays for a full
+  plan in one call; the jitted path behind ``simulate_plan(backend="jax")``.
+* ``decode_batch`` — batched exactly-L MDS decode with a systematic-prefix
+  fast path: when the generator's top L rows are the identity and a task
+  received only those rows, the "solve" is a row permutation and is applied
+  by a scatter (bit-identical to LAPACK on a permutation matrix, no O(L^3)
+  factorization).
+* ``ExponentialBlock`` — block-amortised standard-exponential (and
+  optionally uniform) draws so the event loop consumes pre-sampled
+  randomness (deterministic replay, no per-event RNG overhead).
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import numpy as np
@@ -34,11 +54,21 @@ __all__ = [
     "completion_times",
     "delivered_by",
     "sample_delays",
+    "simulate_batch",
+    "simulate_chunks_np",
     "decode_batch",
     "ExponentialBlock",
 ]
 
 _EPS = 1e-12
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def check_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    return backend
 
 
 @functools.lru_cache(maxsize=1)
@@ -48,6 +78,28 @@ def has_jax() -> bool:
         return True
     except Exception:  # pragma: no cover - jax is baked into the image
         return False
+
+
+def _use_jax(backend: str) -> bool:
+    return backend in ("jax", "pallas") and has_jax()
+
+
+@functools.lru_cache(maxsize=1)
+def _rng_key_impl() -> Optional[str]:
+    """Fastest counter-based PRNG available ("rbg" beats threefry ~2x on
+    CPU and lowers to the hardware RNG on TPU); None → jax default."""
+    import jax.random as jr
+    try:
+        jr.key(0, impl="rbg")
+        return "rbg"
+    except Exception:  # pragma: no cover - rbg exists on all supported jax
+        return None
+
+
+def _make_key(seed: int):
+    import jax.random as jr
+    impl = _rng_key_impl()
+    return jr.key(seed, impl=impl) if impl else jr.key(seed)
 
 
 # ---------------------------------------------------------------------------
@@ -74,32 +126,29 @@ def _completion_np(T: np.ndarray, loads: np.ndarray, need: np.ndarray,
     return np.where(reachable & np.isfinite(out), out, np.inf)
 
 
-def _completion_jax(T, loads, need, needs_all: bool):
+@functools.lru_cache(maxsize=None)
+def _completion_jit(needs_all: bool):
+    """Cached jitted batched completion kernel (device arrays in and out)."""
     import jax
     import jax.numpy as jnp
 
-    def one(Trow, lrow, nd):
-        active = lrow > 0
-        Ti = jnp.where(active & jnp.isfinite(Trow), Trow, jnp.inf)
+    def core(T, loads, need):
+        active = loads > 0
+        Ti = jnp.where(active & jnp.isfinite(T), T, jnp.inf)
         if needs_all:
-            out = jnp.where(active, Ti, -jnp.inf).max()
-            out = jnp.where(active.any(), out, jnp.inf)
+            out = jnp.where(active, Ti, -jnp.inf).max(axis=-1)
+            out = jnp.where(active.any(axis=-1), out, jnp.inf)
             return jnp.where(jnp.isfinite(out), out, jnp.inf)
-        order = jnp.argsort(Ti)
-        T_s = Ti[order]
-        l_s = jnp.where(active, lrow, 0.0)[order]
-        cum = jnp.cumsum(l_s)
-        hit = cum >= nd - 1e-9
-        first = jnp.argmax(hit)
-        ok = hit[first] & jnp.isfinite(T_s[first])
-        return jnp.where(ok, T_s[first], jnp.inf)
+        T_s, l_s = jax.lax.sort(
+            [Ti, jnp.where(active, loads, 0.0)], num_keys=1, is_stable=True)
+        cum = jnp.cumsum(l_s, axis=-1)
+        hit = cum >= need[..., None] - 1e-9
+        first = jnp.argmax(hit, axis=-1)
+        ok = jnp.take_along_axis(hit, first[..., None], axis=-1)[..., 0]
+        out = jnp.take_along_axis(T_s, first[..., None], axis=-1)[..., 0]
+        return jnp.where(ok & jnp.isfinite(out), out, jnp.inf)
 
-    lead = T.shape[:-1]
-    Tf = T.reshape((-1, T.shape[-1]))
-    lf = jnp.broadcast_to(loads, T.shape).reshape((-1, T.shape[-1]))
-    nf = jnp.broadcast_to(need, lead).reshape((-1,))
-    out = jax.vmap(one)(jnp.asarray(Tf), jnp.asarray(lf), jnp.asarray(nf))
-    return np.asarray(out).reshape(lead)
+    return jax.jit(core)
 
 
 def completion_times(T, loads, need, *, needs_all: bool = False,
@@ -114,12 +163,16 @@ def completion_times(T, loads, need, *, needs_all: bool = False,
     Non-finite delays (inf dead workers, NaN poisoned samples) never arrive:
     they are skipped by the prefix, and the result is inf only if the
     remaining live nodes cannot cover ``need``.
+
+    The jax backend runs one cached jitted kernel over the whole batch; the
+    host boundary is a single transfer each way.
     """
+    check_backend(backend)
     T = np.asarray(T, dtype=np.float64)
     loads = np.broadcast_to(np.asarray(loads, dtype=np.float64), T.shape)
     need = np.broadcast_to(np.asarray(need, dtype=np.float64), T.shape[:-1])
-    if backend == "jax" and has_jax():
-        return _completion_jax(T, loads, need, needs_all)
+    if _use_jax(backend):
+        return np.asarray(_completion_jit(bool(needs_all))(T, loads, need))
     return _completion_np(T, loads, need, needs_all)
 
 
@@ -137,7 +190,9 @@ def delivered_by(T, loads, t) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def sample_delays(e_tr: np.ndarray, e_cp: np.ndarray, l, k, b, a, u, gamma,
-                  *, local_col0: bool = True) -> np.ndarray:
+                  *, local_col0: bool = True,
+                  straggle_p: float = 0.0, straggle_factor: float = 8.0,
+                  straggle_u: Optional[np.ndarray] = None) -> np.ndarray:
     """Turn standard-exponential draws into T = T_tr + T_cp delays.
 
     ``e_tr``/``e_cp`` are ~Exp(1) draws of the same (batched) shape as ``l``;
@@ -145,6 +200,14 @@ def sample_delays(e_tr: np.ndarray, e_cp: np.ndarray, l, k, b, a, u, gamma,
     an ``ExponentialBlock`` + ``sample_delays`` pipeline is distributionally
     identical to the legacy per-call sampler while being batchable and
     replayable.
+
+    ``straggle_p`` / ``straggle_factor``: per-node probability that the node
+    is in a degraded state for this task, multiplying its whole delay by
+    ``factor`` — the heavy-tailed *measured* behaviour of burstable cloud
+    instances (CPU-credit throttling) that the fitted shifted exponential
+    underestimates.  ``straggle_u`` supplies the uniform draws (same shape
+    as ``l``; see ``ExponentialBlock(uniform_rows=1)``) so replay stays
+    deterministic.
     """
     l = np.asarray(l, dtype=np.float64)
     lsafe = np.maximum(l, _EPS)
@@ -155,29 +218,46 @@ def sample_delays(e_tr: np.ndarray, e_cp: np.ndarray, l, k, b, a, u, gamma,
         t_tr = t_tr.copy()
         t_tr[..., 0] = 0.0
     t_cp = a * l / ksafe + e_cp * lsafe / (ksafe * u)
-    return np.where(l > 0, t_tr + t_cp, 0.0)
+    total = t_tr + t_cp
+    if straggle_p > 0.0:
+        if straggle_u is None:
+            raise ValueError("straggle_p > 0 requires straggle_u draws "
+                             "(use ExponentialBlock(uniform_rows=1))")
+        total = np.where(np.asarray(straggle_u) < straggle_p,
+                         total * straggle_factor, total)
+    return np.where(l > 0, total, 0.0)
 
 
 class ExponentialBlock:
-    """Pre-sampled Exp(1) draws consumed row-by-row (deterministic replay).
+    """Pre-sampled Exp(1) (+ optional Uniform(0,1)) draws consumed row-by-row.
 
     The event loop needs one (2, N+1) standard-exponential row per admitted
-    task; drawing them one event at a time costs a Generator call per event.
-    This draws ``block`` rows at once and hands out views.
+    task (plus one uniform row when heavy-tail throttling is on); drawing
+    them one event at a time costs a Generator call per event.  This draws
+    ``block`` tasks' worth at once and hands out views — deterministic
+    replay at block-amortised cost.
     """
 
     def __init__(self, rng: np.random.Generator, width: int,
-                 block: int = 512):
+                 block: int = 512, uniform_rows: int = 0):
         self.rng = rng
         self.width = int(width)
         self.block = int(block)
-        self._buf = np.empty((0, 2, self.width))
+        self.uniform_rows = int(uniform_rows)
+        self.rows = 2 + self.uniform_rows
+        self._buf = np.empty((0, self.rows, self.width))
         self._pos = 0
 
     def draw(self) -> np.ndarray:
         if self._pos >= self._buf.shape[0]:
-            self._buf = self.rng.exponential(
+            exp = self.rng.exponential(
                 1.0, size=(self.block, 2, self.width))
+            if self.uniform_rows:
+                uni = self.rng.random(
+                    size=(self.block, self.uniform_rows, self.width))
+                self._buf = np.concatenate([exp, uni], axis=1)
+            else:
+                self._buf = exp
             self._pos = 0
         row = self._buf[self._pos]
         self._pos += 1
@@ -185,32 +265,239 @@ class ExponentialBlock:
 
 
 # ---------------------------------------------------------------------------
+# Jitted Monte-Carlo (sample + complete, device-resident)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _simulate_jit(needs_all: bool, straggle: bool, n_nodes: int):
+    """Cached jitted Monte-Carlo kernel over active-node arrays.
+
+    Works on per-master *gathered* parameter rows (M, A) where A is the
+    max active-node count — a 3-4x cut in RNG and completion work versus
+    the dense (M, N+1) layout when workers are partitioned across masters.
+
+    The completion rule is evaluated sort-free: for each candidate arrival
+    i, S_i = Σ_n l_n·[T_n <= T_i]; the completion is min{T_i : S_i >= L}.
+    XLA's CPU sort is ~5x slower than this O(A²) unrolled reduction at the
+    A ≤ 64 widths that occur in practice, and the ``lax.map`` chunking
+    keeps every temporary cache-resident, so the whole kernel runs at
+    memory speed of the (trials, M) output.
+    """
+    import jax
+    import jax.numpy as jnp
+    import jax.random as jr
+
+    def run(key, c_tr, shift, c_cp, loads, need, p, factor, nch, chunk):
+        dt = c_tr.dtype
+        # need-1e-9 matches numpy; the relative term absorbs float32 cumsum
+        # rounding when coverage is exact (never larger than a fraction of
+        # one coded row at L ~ 1e4).
+        rel = 1e-6 if dt == jnp.float32 else 0.0
+        thresh = need[None, :] - 1e-9 - rel * need[None, :]
+        keys = jr.split(key, (nch, 2))
+
+        def one(kk):
+            e = jr.exponential(kk[0], (2, chunk) + c_tr.shape, dt)
+            T = c_tr * e[0] + shift + c_cp * e[1]      # padded nodes: +inf
+            if straggle:
+                u01 = jr.uniform(kk[1], (chunk,) + c_tr.shape, dt)
+                T = jnp.where(u01 < p, T * factor, T)
+            if needs_all:
+                act = loads > 0
+                out = jnp.where(act, T, -jnp.inf).max(axis=-1)
+                out = jnp.where(act.any(axis=-1), out, jnp.inf)
+                return jnp.where(jnp.isfinite(out), out, jnp.inf)
+            comp = jnp.full(T.shape[:-1], jnp.inf, dt)
+            for i in range(n_nodes):
+                Ti = T[..., i]
+                S = jnp.where(T <= Ti[..., None], loads, 0.0).sum(axis=-1)
+                comp = jnp.minimum(
+                    comp, jnp.where(S >= thresh, Ti, jnp.inf))
+            return comp
+
+        return jax.lax.map(one, keys).reshape(nch * chunk, -1)
+
+    return jax.jit(run, static_argnames=("nch", "chunk"))
+
+
+def _gather_active(l, k, b, a, u, gamma, dtype):
+    """Per-master active-column gather → (idx, loads, c_tr, shift, c_cp).
+
+    Returns (M, A) coefficient arrays with T = c_tr·e1 + shift + c_cp·e2;
+    padded slots have shift = +inf (never arrive) and zero load.  Column 0
+    (the master's local processor) gets c_tr = 0 — no communication.
+    """
+    M = l.shape[0]
+    counts = (l > 0).sum(axis=1)
+    A = max(int(counts.max()), 1)
+    idx = np.zeros((M, A), dtype=np.int64)
+    pad = np.ones((M, A), dtype=bool)
+    for m in range(M):
+        nz = np.nonzero(l[m] > 0)[0]
+        idx[m, :nz.size] = nz
+        pad[m, nz.size:] = False
+    act = pad          # True where a real node sits
+    ga = lambda arr: np.take_along_axis(np.asarray(arr, np.float64), idx, 1)
+    l_a = np.where(act, ga(l), 0.0)
+    k_a, b_a = ga(k), ga(b)
+    a_a, u_a, g_a = ga(a), ga(u), ga(gamma)
+    c_tr = np.where(act, l_a / np.maximum(b_a * g_a, _EPS), 0.0)
+    c_tr[idx == 0] = 0.0                       # local node: no comm delay
+    shift = np.where(act, a_a * l_a / np.maximum(k_a, _EPS), np.inf)
+    c_cp = np.where(act, l_a / np.maximum(k_a * u_a, _EPS), 0.0)
+    return (idx, l_a.astype(dtype), c_tr.astype(dtype),
+            shift.astype(dtype), c_cp.astype(dtype))
+
+
+def simulate_chunks_np(rng: np.random.Generator, l, k, b, a, u, gamma, L,
+                       trials: int, *, needs_all: bool = False,
+                       straggle_p: float = 0.0, straggle_factor: float = 8.0,
+                       chunk: int = 20_000):
+    """Yield (r, M) completion-delay chunks from the Generator-based
+    sampler — the single numpy Monte-Carlo loop behind both
+    ``simulate_batch(backend="numpy")`` and ``sim.montecarlo``'s
+    streaming aggregation (bit-stable for a given Generator + chunk)."""
+    from ..core.delays import sample_total
+    l = np.asarray(l, dtype=np.float64)
+    L = np.atleast_1d(np.asarray(L, dtype=np.float64))
+    chunk = max(int(chunk), 1)
+    done = 0
+    while done < trials:
+        r = min(chunk, trials - done)
+        T = sample_total(rng, (r,), l, k, b, a, u, gamma, local_col0=True)
+        if straggle_p > 0:
+            throttled = rng.random(T.shape) < straggle_p
+            T = np.where(throttled, T * straggle_factor, T)
+        yield completion_times(T, l[None], L[None], needs_all=needs_all)
+        done += r
+
+
+def simulate_batch(l, k, b, a, u, gamma, L, trials: int, *,
+                   seed: "int | np.random.Generator" = 0,
+                   needs_all: bool = False,
+                   straggle_p: float = 0.0, straggle_factor: float = 8.0,
+                   backend: str = "jax", dtype=np.float32,
+                   chunk: int = 4096) -> np.ndarray:
+    """(trials, M) Monte-Carlo completion delays for a full plan, one call.
+
+    All inputs are the dense (M, N+1) plan/scenario arrays (column 0 = the
+    master's local processor, communication-free).  The jax path is the
+    jitted device-resident kernel described in :func:`_simulate_jit`;
+    float32 by default — delay-model rounding is orders of magnitude below
+    Monte-Carlo noise at any trial count this path exists for.  Seeding is
+    by integer ``seed`` (counter-based key), so results are reproducible
+    but *not* bit-equal to the numpy Generator stream — the two backends
+    agree statistically, which is what the tests assert.
+
+    The numpy fallback runs :func:`simulate_chunks_np` (a Generator is
+    also accepted as ``seed`` there, for bit-stable shared streams).
+    """
+    check_backend(backend)
+    l = np.asarray(l, dtype=np.float64)
+    trials = int(trials)
+    if backend == "numpy" or not has_jax():
+        rng = (seed if isinstance(seed, np.random.Generator)
+               else np.random.default_rng(seed))
+        return np.concatenate(list(simulate_chunks_np(
+            rng, l, k, b, a, u, gamma, L, trials, needs_all=needs_all,
+            straggle_p=straggle_p, straggle_factor=straggle_factor,
+            chunk=chunk)))
+    if isinstance(seed, np.random.Generator):
+        seed = int(seed.integers(np.iinfo(np.int64).max))
+    L = np.atleast_1d(np.asarray(L, dtype=np.float64))
+
+    import jax.numpy as jnp
+    dtype = jnp.dtype(dtype)
+    _, l_a, c_tr, shift, c_cp = _gather_active(l, k, b, a, u, gamma, dtype)
+    chunk = max(min(int(chunk), trials), 1)
+    nch = math.ceil(trials / chunk)
+    fn = _simulate_jit(bool(needs_all), straggle_p > 0.0, l_a.shape[1])
+    comp = fn(_make_key(int(seed)), jnp.asarray(c_tr), jnp.asarray(shift),
+              jnp.asarray(c_cp), jnp.asarray(l_a),
+              jnp.asarray(L.astype(dtype)), dtype.type(straggle_p),
+              dtype.type(straggle_factor), nch, chunk)
+    return np.asarray(comp[:trials], dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
 # Batched MDS decode
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=1)
+def _solve_jit():
+    import jax
+    import jax.numpy as jnp
+    return jax.jit(lambda Gs, y: jnp.linalg.solve(Gs, y))
+
+
+def _identity_prefix(G: np.ndarray) -> bool:
+    """True iff the generator's (shared) top L rows are exactly I_L."""
+    L = G.shape[-1]
+    if G.shape[-2] < L:
+        return False
+    top = G[..., :L, :]
+    eye = np.eye(L, dtype=G.dtype)
+    return bool((top == eye).all())
+
+
 def decode_batch(G: np.ndarray, rows: np.ndarray, y: np.ndarray,
-                 *, backend: str = "numpy") -> np.ndarray:
+                 *, backend: str = "numpy",
+                 systematic: str = "auto") -> np.ndarray:
     """Recover B systems A_t x_t from exactly-L received coded results each.
 
-    G:    (L̃, L) shared generator.
+    G:    (L̃, L) shared generator, (B, L̃, L) per-task generators, or a
+          length-B list of (L̃_b, L) generators (avoids stacking the full
+          generators when only the received rows are needed).
     rows: (B, L) int — received coded-row indices per task.
     y:    (B, L) or (B, L, C) received results.
 
-    numpy path: one batched ``np.linalg.solve``; jax path: ``jax.vmap`` of
-    ``jnp.linalg.solve`` (the vmap execution backend of the streaming
-    engine's verification mode).
+    systematic="auto" (default) takes the no-straggler fast path: when G's
+    top L rows are the identity and a task received only those rows, G[rows]
+    is a permutation matrix, so the solution is ``out[rows] = y`` — a
+    scatter, bit-identical to the general solve (LU of a permutation matrix
+    is exact) at O(L) instead of O(L³).  "never" forces the general solve
+    (the benchmark baseline).
+
+    Mixed tasks (any parity row received) use one stacked solve:
+    ``np.linalg.solve`` on the numpy backend, a cached jitted
+    ``jnp.linalg.solve`` on jax/pallas.
     """
+    check_backend(backend)
+    if systematic not in ("auto", "never"):
+        raise ValueError(f"systematic must be 'auto' or 'never', "
+                         f"got {systematic!r}")
     rows = np.asarray(rows)
-    Gs = np.asarray(G, dtype=np.float64)[rows]          # (B, L, L)
+    glist = isinstance(G, (list, tuple))
+    if not glist:
+        G = np.asarray(G, dtype=np.float64)
     y = np.asarray(y, dtype=np.float64)
     squeeze = y.ndim == 2
     if squeeze:
         y = y[..., None]
-    if backend == "jax" and has_jax():
-        import jax
-        import jax.numpy as jnp
-        out = np.asarray(jax.vmap(jnp.linalg.solve)(
-            jnp.asarray(Gs), jnp.asarray(y)))
+    B, L = rows.shape
+    out = np.empty((B, L, y.shape[-1]))
+    if systematic == "auto" and B:
+        sys_ok = (all(_identity_prefix(np.asarray(g)) for g in G) if glist
+                  else _identity_prefix(G))
+        fast = (rows < L).all(axis=1) if sys_ok else np.zeros(B, dtype=bool)
     else:
-        out = np.linalg.solve(Gs, y)
+        fast = np.zeros(B, dtype=bool)
+    fi = np.nonzero(fast)[0]
+    if fi.size:
+        # permutation decode: out[b, rows[b, i]] = y[b, i]
+        out[fi[:, None], rows[fi]] = y[fi]
+    si = np.nonzero(~fast)[0]
+    if si.size:
+        if glist:
+            Gs = np.stack([np.asarray(G[i], dtype=np.float64)[rows[i]]
+                           for i in si])                   # (S, L, L)
+        elif G.ndim == 2:
+            Gs = G[rows[si]]                               # (S, L, L)
+        else:
+            Gs = G[si[:, None], rows[si]]                  # (S, L, L)
+        ys = y[si]
+        if _use_jax(backend):
+            out[si] = np.asarray(_solve_jit()(Gs, ys))
+        else:
+            out[si] = np.linalg.solve(Gs, ys)
     return out[..., 0] if squeeze else out

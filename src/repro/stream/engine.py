@@ -84,7 +84,19 @@ class StreamingExecutor:
                task matrices and run the batched MDS encode→decode check;
                requires integer-sized L).
     rng:       master seed; every random stream derives from it.
-    backend:   "numpy" or "jax" for the batched kernels.
+    backend:   "numpy", "jax" or "pallas" for the batched numerics.  jax
+               runs the verification encode/decode as jitted device code;
+               pallas additionally routes the encode and the per-task coded
+               products through the ``repro.kernels`` Pallas kernels (real
+               lowering on TPU, ``interpret=True`` elsewhere).  Both are
+               float32, so decode verification uses a looser tolerance.
+    straggle_p / straggle_factor: per-(task, node) probability that a node
+               serves this task in a degraded state — its whole delay is
+               multiplied by ``factor`` at admission-time sampling.  This
+               is the heavy-tailed measured behaviour of burstable cloud
+               instances (CPU-credit exhaustion): *churn-free* degradation
+               that hits in-flight tasks without any WorkerEvent, matching
+               ``sim.montecarlo``'s throttling model.
 
     One executor = one run.  Build a fresh instance to replay.
     """
@@ -98,9 +110,14 @@ class StreamingExecutor:
                  numerics: str = "none",
                  verify_cols: int = 4,
                  rng: int = 0,
-                 backend: str = "numpy"):
+                 backend: str = "numpy",
+                 straggle_p: float = 0.0,
+                 straggle_factor: float = 8.0):
         if numerics not in ("none", "verify"):
             raise ValueError(f"unknown numerics mode {numerics!r}")
+        bk.check_backend(backend)
+        if backend != "numpy" and not bk.has_jax():
+            backend = "numpy"        # graceful, like the backend layer
         self.sc = sc
         self.sources = list(sources) if sources is not None else \
             poisson_sources(sc, seed=rng)
@@ -114,6 +131,8 @@ class StreamingExecutor:
         self.verify_cols = int(verify_cols)
         self.seed = int(rng)
         self.backend = backend
+        self.straggle_p = float(straggle_p)
+        self.straggle_factor = float(straggle_factor)
 
         self.planner = OnlinePlanner(sc, policy=policy, replan=replan,
                                      rng=self.seed)
@@ -125,7 +144,8 @@ class StreamingExecutor:
         self.scale = np.ones(sc.N + 1)
         self._sc_eff = sc
         self._exp = bk.ExponentialBlock(
-            np.random.default_rng((self.seed, 0xD31A)), sc.N + 1)
+            np.random.default_rng((self.seed, 0xD31A)), sc.N + 1,
+            uniform_rows=1 if self.straggle_p > 0 else 0)
         self.tasks: Dict[int, TaskRecord] = {}
         self.inflight: Dict[int, _InFlight] = {}
         self._verify_buf: List[_InFlight] = []
@@ -285,7 +305,10 @@ class StreamingExecutor:
         e = self._exp.draw()
         d = bk.sample_delays(e[0], e[1], l_row, k_row, b_row,
                              self._sc_eff.a[m], self._sc_eff.u[m],
-                             self._sc_eff.gamma[m])
+                             self._sc_eff.gamma[m],
+                             straggle_p=self.straggle_p,
+                             straggle_factor=self.straggle_factor,
+                             straggle_u=e[2] if self.straggle_p > 0 else None)
         finish = np.where(l_row > 0, t + d, np.inf)
         comp = float(bk.completion_times(
             finish[None], l_row[None], np.array([self.sc.L[m]]),
@@ -334,7 +357,9 @@ class StreamingExecutor:
                                                t - fl.t_admit)
             del self.inflight[fl.tid]
             if not self._try_admit(fl.tid, t):
-                self.queue.offer(fl.tid)
+                # already-admitted work re-queues past the backpressure
+                # bound — it must not be silently dropped mid-service
+                self.queue.offer(fl.tid, force=True)
 
     def _finalize(self, fl: _InFlight, t: float) -> None:
         rec = self.tasks[fl.tid]
@@ -350,12 +375,38 @@ class StreamingExecutor:
 
     # --------------------------------------------------- batched verification
 
+    def _verify_products(self, G: np.ndarray, A: np.ndarray, x: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-task true products Z_b = A_b x_b and coded results G @ Z_b.
+
+        numpy: two einsums.  jax: the same contraction jitted on device.
+        pallas: the ``repro.kernels`` serving path — ``coded_matvec`` for
+        the per-task products (one kernel call per task via vmap) and
+        ``mds_encode`` for the generator application, which skips the
+        identity prefix of the systematic generator entirely.  Returns
+        (Z (B, L), y_full (B, L̃)) as host arrays."""
+        if self.backend == "numpy":
+            Z = np.einsum("bls,bs->bl", A, x)
+            return Z, Z @ G.T
+        import jax.numpy as jnp
+        if self.backend == "pallas":
+            from ..kernels import ops
+            Z = ops.coded_matvec_batch(jnp.asarray(A), jnp.asarray(x))
+            y_full = ops.mds_encode(jnp.asarray(G), Z.T).T
+        else:
+            Z = jnp.einsum("bls,bs->bl", jnp.asarray(A), jnp.asarray(x))
+            y_full = Z @ jnp.asarray(G).T
+        return np.asarray(Z, dtype=np.float64), \
+            np.asarray(y_full, dtype=np.float64)
+
     def _run_verification(self) -> None:
         """Execute the completed tasks' numerics in per-master batches.
 
-        One generator, one batched encode (einsum over the task axis) and one
-        batched exactly-L decode per master — the vmap execution backend —
-        instead of ``CodedExecutor``'s per-task encode/decode pipeline."""
+        One generator, one batched encode and one batched exactly-L decode
+        per master — instead of ``CodedExecutor``'s per-task pipeline.  The
+        decode takes the systematic-prefix fast path (a scatter, no solve)
+        whenever a task's prefix contains only identity rows."""
+        verify_tol = 1e-6 if self.backend == "numpy" else 5e-4
         by_master: Dict[int, List[_InFlight]] = {}
         for fl in self._verify_buf:
             by_master.setdefault(fl.master, []).append(fl)
@@ -369,7 +420,7 @@ class StreamingExecutor:
             B, S = len(fls), self.verify_cols
             A = vrng.normal(size=(B, L, S))
             x = vrng.normal(size=(B, S))
-            y_full = np.einsum("rl,bls,bs->br", G, A, x)   # (B, Lt) coded
+            Z, y_full = self._verify_products(G, A, x)     # (B, L), (B, Lt)
             rows = np.empty((B, L), dtype=np.int64)
             valid = np.ones(B, dtype=bool)
             for i, (fl, lint) in enumerate(zip(fls, li)):
@@ -395,11 +446,12 @@ class StreamingExecutor:
             idx = np.nonzero(valid)[0]
             if idx.size:
                 y_rows = np.take_along_axis(y_full[idx], rows[idx], axis=1)
-                y_hat = bk.decode_batch(G, rows[idx], y_rows,
-                                        backend=self.backend)
-                truth = np.einsum("bls,bs->bl", A[idx], x[idx])
+                y_hat = bk.decode_batch(
+                    G, rows[idx], y_rows,
+                    backend="numpy" if self.backend == "numpy" else "jax")
+                truth = Z[idx]
                 err = np.abs(y_hat - truth).max(axis=1)
-                tol = 1e-6 * (1.0 + np.abs(truth).max(axis=1))
+                tol = verify_tol * (1.0 + np.abs(truth).max(axis=1))
                 for j, i in enumerate(idx):
                     rec = self.tasks[fls[i].tid]
                     rec.max_err = float(err[j])

@@ -111,9 +111,14 @@ class WaitQueue:
     def __len__(self) -> int:
         return len(self._q)
 
-    def offer(self, tid: int) -> bool:
-        """Enqueue; False (rejected) when the backpressure bound is hit."""
-        if self.max_queue is not None and len(self._q) >= self.max_queue:
+    def offer(self, tid: int, *, force: bool = False) -> bool:
+        """Enqueue; False (rejected) when the backpressure bound is hit.
+
+        ``force`` bypasses the bound: backpressure is an *admission* policy,
+        so a task that was already admitted and must re-queue (its in-flight
+        deliveries were lost to churn) is never silently dropped."""
+        if not force and self.max_queue is not None \
+                and len(self._q) >= self.max_queue:
             self.rejected += 1
             return False
         self._q.append(tid)

@@ -30,7 +30,10 @@ def _compiled_flops(cfg, B, T):
     shapes = jax.eval_shape(lambda k: init_model(k, cfg),
                             jax.random.PRNGKey(0))
     lowered = fn.lower(shapes, batch)
-    return float(lowered.compile().cost_analysis().get("flops", 0.0))
+    cost = lowered.compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):     # jax <= 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
+    return float(cost.get("flops", 0.0))
 
 
 @pytest.mark.parametrize("arch", ["llama3_2_1b", "nemotron_4_15b",

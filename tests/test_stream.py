@@ -224,6 +224,55 @@ def test_backpressure_queue_and_rejection():
     assert s["queue_wait_mean"] > 0   # head-of-line tasks waited
 
 
+def test_straggle_fault_sweep():
+    """Heavy-tail throttling (churn-free degradation): in-flight tasks hit
+    CPU-credit-exhaustion slowdowns without any WorkerEvent.  Completion
+    must survive every throttle probability, replay deterministically, and
+    degrade monotonically in p on a fixed seed."""
+    sc = _scenario(M=2, N=8, L=48.0, seed=7)
+    p50 = {}
+    for p in (0.0, 0.2, 0.5):
+        srcs = [PoissonProcess(m, rate=0.01, seed=1) for m in range(sc.M)]
+        ex = StreamingExecutor(sc, srcs, policy="fractional", rng=9,
+                               numerics="verify", straggle_p=p,
+                               straggle_factor=8.0)
+        ms = ex.run(max_tasks=30)
+        s = ms.summary()
+        assert s["tasks_completed"] == 30, p
+        assert s["decode_ok_rate"] == 1.0, p
+        assert np.isfinite(ms.sojourns()).all(), p
+        p50[p] = s["sojourn_p50"]
+    assert p50[0.0] < p50[0.2] < p50[0.5]
+    # deterministic replay with throttling on
+    srcs = [PoissonProcess(m, rate=0.01, seed=1) for m in range(sc.M)]
+    ex = StreamingExecutor(sc, srcs, policy="fractional", rng=9,
+                           straggle_p=0.2, straggle_factor=8.0)
+    assert ex.run(max_tasks=30).summary()["sojourn_p50"] == p50[0.2]
+
+
+@pytest.mark.skipif(not has_jax(), reason="jax not installed")
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_streaming_verify_backend_equivalence(backend):
+    """jax / (interpret-mode) Pallas verification backends: identical delay
+    metrics to the numpy run (only the verification numerics move to
+    device) and every task decode-verifies."""
+    sc = _scenario(M=2, N=8, L=48.0, seed=5)
+    churn = [WorkerEvent(150.0, 2, "degrade", 4.0),
+             WorkerEvent(300.0, 5, "leave")]
+
+    def go(be):
+        srcs = [PoissonProcess(m, rate=0.01, seed=1) for m in range(sc.M)]
+        ex = StreamingExecutor(sc, srcs, policy="fractional", churn=churn,
+                               numerics="verify", rng=11, backend=be)
+        return ex.run(max_tasks=30).summary()
+
+    s_np, s_be = go("numpy"), go(backend)
+    assert s_be["decode_ok_rate"] == 1.0
+    for k in ("tasks_completed", "sojourn_p50", "sojourn_p99",
+              "queue_wait_mean", "replans"):
+        assert s_np[k] == s_be[k], k
+
+
 def test_uncoded_needs_all_and_redispatch():
     """Uncoded tasks lose a worker mid-flight: no redundancy, so the task is
     re-dispatched (retries > 0) and still completes."""
