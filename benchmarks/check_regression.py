@@ -1,0 +1,77 @@
+"""Bench regression gate: fail CI when a freshly produced bench JSON
+regresses more than ``--factor`` against the committed copy.
+
+Compares higher-is-better metrics (dotted paths into the JSON), e.g.:
+
+    python -m benchmarks.check_regression \
+        --baseline BENCH_stream.json --fresh fresh_BENCH_stream.json \
+        --key throughput_tasks_per_s --factor 2.0
+
+    python -m benchmarks.check_regression \
+        --baseline BENCH_backend.json --fresh fresh_BENCH_backend.json \
+        --key montecarlo.numpy_trials_per_s --key decode.fast_path_speedup
+
+Exit code 1 (with a table) if any fresh value falls below
+``baseline / factor``.  CI runners are slower than the dev machines that
+committed the baselines, which is exactly why the gate is a *ratio*: a
+genuine 2x throughput regression trips it, runner-to-runner noise does
+not.  ``REPRO_REGRESSION_FACTOR`` overrides the factor without a workflow
+edit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def get_path(record: dict, dotted: str):
+    cur = record
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(f"key {dotted!r} not found (missing {part!r})")
+        cur = cur[part]
+    return float(cur)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline", required=True,
+                   help="committed bench JSON (the reference)")
+    p.add_argument("--fresh", required=True,
+                   help="freshly produced bench JSON")
+    p.add_argument("--key", action="append", required=True, dest="keys",
+                   help="dotted path to a higher-is-better metric "
+                        "(repeatable)")
+    p.add_argument("--factor", type=float,
+                   default=float(os.environ.get("REPRO_REGRESSION_FACTOR",
+                                                "2.0")),
+                   help="maximum tolerated slowdown ratio (default 2.0)")
+    args = p.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    failed = False
+    print(f"{'metric':<40} {'baseline':>12} {'fresh':>12} {'ratio':>7}  gate")
+    for key in args.keys:
+        b, fval = get_path(base, key), get_path(fresh, key)
+        ratio = fval / b if b > 0 else float("inf")
+        ok = fval >= b / args.factor
+        failed |= not ok
+        print(f"{key:<40} {b:12.2f} {fval:12.2f} {ratio:7.2f}  "
+              f"{'ok' if ok else f'REGRESSION >{args.factor}x'}")
+    if failed:
+        print(f"[check_regression] FAILED: fresh metrics regressed more "
+              f"than {args.factor}x vs {args.baseline}", file=sys.stderr)
+        return 1
+    print(f"[check_regression] ok (factor {args.factor}x, "
+          f"{len(args.keys)} metrics)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,105 @@
+"""Coded serving benchmark: admission policies vs the FIFO baseline.
+
+Serves one seeded contended workload (more requests than batch slots,
+mixed tight/loose deadlines, mid-run churn) through the coded serving
+bridge under each admission policy and records tokens/s (simulation and
+wall clock), p50/p99 request sojourn and the deadline-miss rate into
+``BENCH_serve.json`` (env knob ``REPRO_BENCH_SERVE_JSON``), with the
+EDF/fair numbers expressed relative to FIFO.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench \
+        [--requests 24] [--gen-len 8] [--slots 2] [--rate 0.02] \
+        [--backend numpy] [--seed 0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.serve_coded import (CodedServingBridge, serve_policy_sweep,
+                               synthetic_requests)
+from repro.stream import WorkerEvent
+
+from .common import emit
+
+POLICIES = ("fifo", "edf", "fair")
+
+
+def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
+                    slots: int = 2, rate: float = 0.02, prompt_len: int = 16,
+                    backend: str = "numpy", seed: int = 0,
+                    json_path: str | None = None) -> dict:
+    churn = [WorkerEvent(400.0, 2, "degrade", 4.0),
+             WorkerEvent(1500.0, 5, "leave"),
+             WorkerEvent(6000.0, 5, "join"),
+             WorkerEvent(8000.0, 2, "restore")]
+    per_policy = {}
+    bridge = CodedServingBridge(masters=masters, backend=backend, seed=seed,
+                                slots_per_master=slots)
+    bridge._setup_model(prompt_len + gen_len + 8)
+    reqs = synthetic_requests(
+        requests, masters=masters, vocab=bridge._model["cfg"].vocab,
+        prompt_len=prompt_len, gen_len=gen_len, rate=rate, seed=seed)
+    reports = serve_policy_sweep(bridge, reqs, POLICIES, churn=churn)
+    for policy, rep in reports.items():
+        s = rep.summary()
+        per_policy[policy] = {
+            "tokens_per_sim_second": round(s["tokens_per_sim_second"], 2),
+            "tokens_per_wall_second": round(s["tokens_per_wall_second"], 1),
+            "p50_sojourn_ms": round(s.get("sojourn_p50", float("nan")), 1),
+            "p99_sojourn_ms": round(s.get("sojourn_p99", float("nan")), 1),
+            "deadline_miss_rate": round(s.get("deadline_miss_rate", 0.0), 4),
+            "coded_steps": int(s["coded_steps"]),
+            "solve_steps": int(s["solve_steps"]),
+            "decode_max_err": rep.max_err,
+            "wall_seconds": round(rep.wall_seconds, 3),
+        }
+    base = per_policy["fifo"]
+    record = {
+        "bench": "coded_serving_policies",
+        "requests": requests,
+        "gen_len": gen_len,
+        "masters": masters,
+        "slots_per_master": slots,
+        "backend": backend,
+        "baseline": "fifo",
+        "policies": per_policy,
+        "edf_miss_vs_fifo": round(
+            per_policy["edf"]["deadline_miss_rate"]
+            / max(base["deadline_miss_rate"], 1e-12), 3),
+        "fair_throughput_vs_fifo": round(
+            per_policy["fair"]["tokens_per_sim_second"]
+            / max(base["tokens_per_sim_second"], 1e-12), 3),
+    }
+    path = json_path or os.environ.get("REPRO_BENCH_SERVE_JSON",
+                                       "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    emit("serve/coded_policies", base["wall_seconds"] * 1e6,
+         f"fifo_tok_per_sim_s={base['tokens_per_sim_second']};"
+         f"edf_miss_vs_fifo={record['edf_miss_vs_fifo']};"
+         f"fair_throughput_vs_fifo={record['fair_throughput_vs_fifo']};"
+         f"json={path}")
+    return record
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--requests", type=int, default=24)
+    p.add_argument("--gen-len", type=int, default=8)
+    p.add_argument("--masters", type=int, default=2)
+    p.add_argument("--slots", type=int, default=2)
+    p.add_argument("--rate", type=float, default=0.02)
+    p.add_argument("--backend", default="numpy",
+                   choices=("numpy", "jax", "pallas"))
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+    run_serve_bench(requests=args.requests, gen_len=args.gen_len,
+                    masters=args.masters, slots=args.slots, rate=args.rate,
+                    backend=args.backend, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Coded serving bridge demo: the StreamingExecutor plan as the admission/
+batching policy of a real continuous-batching inference server.
+
+Every generated token batch's output-head matmul runs as MDS-coded shards
+across a heterogeneous EC2-fitted worker pool, sized by the paper's
+Theorem-1/3 load allocation and admitted through the shared-worker ledger;
+decoded logits are verified exact against the uncoded forward pass.  The
+same seeded workload (two tenants, mixed tight/loose deadlines, mid-run
+worker degradation + death) is served under all three admission policies
+so the columns are directly comparable.
+
+    PYTHONPATH=src python examples/serve_coded.py \
+        [--arch llama3.2-1b] [--requests 16] [--prompt-len 16] \
+        [--gen-len 8] [--masters 2] [--slots 2] [--rate 0.02] \
+        [--policies fifo,edf,fair] [--backend numpy|jax|pallas] [--seed 0]
+"""
+import argparse
+import sys
+
+from repro.serve_coded import (CodedServingBridge, print_policy_table,
+                               serve_policy_sweep, synthetic_requests)
+from repro.stream import WorkerEvent
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--masters", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=2,
+                    help="continuous-batching slots per master")
+    ap.add_argument("--rate", type=float, default=0.02,
+                    help="per-master arrival rate (requests per sim-ms)")
+    ap.add_argument("--policies", default="fifo,edf,fair")
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax", "pallas"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--churn", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="degrade worker 2 mid-run, kill+revive worker 5 "
+                         "(--no-churn for a stable pool)")
+    args = ap.parse_args(argv)
+
+    policies = tuple(args.policies.split(","))
+    churn = [WorkerEvent(400.0, 2, "degrade", 4.0),
+             WorkerEvent(1500.0, 5, "leave"),
+             WorkerEvent(6000.0, 5, "join"),
+             WorkerEvent(8000.0, 2, "restore")] if args.churn else []
+
+    print(f"[demo] {args.requests} requests x {args.gen_len} tokens, "
+          f"{args.masters} tenants, {args.slots} slots/tenant, "
+          f"churn={'on' if churn else 'off'}")
+    bridge = CodedServingBridge(
+        masters=args.masters, arch=args.arch, backend=args.backend,
+        seed=args.seed, slots_per_master=args.slots)
+    bridge._setup_model(args.prompt_len + args.gen_len + 8)
+    reqs = synthetic_requests(
+        args.requests, masters=args.masters,
+        vocab=bridge._model["cfg"].vocab, prompt_len=args.prompt_len,
+        gen_len=args.gen_len, rate=args.rate, seed=args.seed)
+    reports = serve_policy_sweep(bridge, reqs, policies, churn=churn)
+    print_policy_table(reports)
+    print("(sojourn in sim-ms; every token batch was scheduled by a "
+          "StreamingExecutor plan and decode-verified against the uncoded "
+          "forward pass)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,19 @@
 Runs a small request pool through prefill → token-by-token decode with a
 shared jitted decode step and per-request completion, reporting throughput
 and verifying the decode path against the full forward pass.
+
+With ``--coded`` the same model is served through the coded-computation
+bridge (:mod:`repro.serve_coded`): the output-head matmul of every token
+batch is MDS-encoded and executed as per-worker shards scheduled by the
+``StreamingExecutor`` plan, with ``--policy fifo|edf|fair`` picking the
+admission policy:
+
+    PYTHONPATH=src python -m repro.launch.serve --coded --policy edf \
+        --requests 12 --gen-len 8
+
+The building blocks (``build_model`` / ``serving_fns`` / ``zero_caches`` /
+``head_matrix``) are shared with the bridge so both paths serve the exact
+same model.
 """
 from __future__ import annotations
 
@@ -14,6 +27,54 @@ import sys
 import time
 
 import numpy as np
+
+__all__ = ["build_model", "serving_fns", "zero_caches", "head_matrix",
+           "main"]
+
+
+def build_model(arch: str, *, smoke: bool = True, seed: int = 0):
+    """Config + initialised parameters for ``arch`` (smoke-sized or full)."""
+    import jax
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import init_model
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def serving_fns(cfg, *, return_hidden: bool = False):
+    """Jitted (prefill_fn, decode_fn) closures over ``cfg``.
+
+    ``return_hidden`` threads the final-norm hidden states out of both —
+    the input the coded output head distributes across workers."""
+    import jax
+    from repro.models import decode_step, prefill
+    prefill_fn = jax.jit(lambda p, b, c: prefill(
+        p, b, c, cfg=cfg, return_hidden=return_hidden))
+    decode_fn = jax.jit(lambda p, t, pos, c: decode_step(
+        p, t, pos, c, cfg=cfg, return_hidden=return_hidden))
+    return prefill_fn, decode_fn
+
+
+def zero_caches(cfg, batch: int, max_len: int):
+    """Zero-initialised decode caches for ``batch`` slots."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import init_cache_shapes
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_shapes(cfg, batch, max_len))
+
+
+def head_matrix(cfg, params) -> np.ndarray:
+    """The output-head weight W (padded_vocab, d_model) as float64.
+
+    ``logits = hidden @ W.T`` — exactly the paper's A·x task per request,
+    with L = padded_vocab useful rows."""
+    if cfg.tie_embeddings:
+        W = np.asarray(params["embed"]["tok"])
+    else:
+        W = np.asarray(params["embed"]["out"]).T
+    return W.astype(np.float64)
 
 
 def main(argv=None) -> int:
@@ -24,16 +85,26 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--coded", action="store_true",
+                    help="serve through the coded-computation bridge "
+                         "(StreamingExecutor-planned shards)")
+    ap.add_argument("--policy", default="edf",
+                    choices=("fifo", "edf", "fair"),
+                    help="admission policy for --coded serving")
     args = ap.parse_args(argv)
+
+    if args.coded:
+        from repro.serve_coded import run_coded_smoke
+        return run_coded_smoke(arch=args.arch, smoke=args.smoke,
+                               policies=(args.policy,),
+                               n_requests=args.requests,
+                               prompt_len=args.prompt_len,
+                               gen_len=args.gen_len, seed=args.seed)
 
     import jax
     import jax.numpy as jnp
-    from repro.configs import get_smoke_config, get_config
-    from repro.models import (decode_step, init_cache_shapes, init_model,
-                              prefill)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    cfg, params = build_model(args.arch, smoke=args.smoke, seed=args.seed)
     B, P, G = args.requests, args.prompt_len, args.gen_len
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, P)), jnp.int32)
@@ -43,12 +114,8 @@ def main(argv=None) -> int:
         batch["enc_feats"] = jnp.full((B, cfg.frontend_len, cfg.frontend_dim),
                                       0.1, jnp.float32)
 
-    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                          init_cache_shapes(cfg, B, P + G + 8))
-
-    prefill_fn = jax.jit(lambda p, b, c: prefill(p, b, c, cfg=cfg))
-    decode_fn = jax.jit(lambda p, t, pos, c: decode_step(p, t, pos, c,
-                                                         cfg=cfg))
+    caches = zero_caches(cfg, B, P + G + 8)
+    prefill_fn, decode_fn = serving_fns(cfg)
 
     t0 = time.time()
     logits, caches = prefill_fn(params, batch, caches)

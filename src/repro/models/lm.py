@@ -312,8 +312,13 @@ def init_cache_shapes(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def prefill(params, batch, caches, *, cfg: ArchConfig,
-            ctx: ModelCtx = ModelCtx()):
-    """Process the prompt, fill the cache, return last-position logits."""
+            ctx: ModelCtx = ModelCtx(), return_hidden: bool = False):
+    """Process the prompt, fill the cache, return last-position logits.
+
+    ``return_hidden`` additionally returns the final-norm hidden state of
+    the last position (B, 1, d_model) — the input of the output-head
+    matmul, which coded serving executes as a distributed MDS-coded
+    product instead of the local ``ly.logits`` contraction."""
     tokens = batch["tokens"]
     B, T = tokens.shape
     x = sharded_embed(params["embed"]["tok"], tokens, ctx.mesh,
@@ -324,14 +329,21 @@ def prefill(params, batch, caches, *, cfg: ArchConfig,
     positions = jnp.broadcast_to(jnp.arange(T), (B, T))
     x, new_caches = _trunk(params, x, cfg=cfg, ctx=ctx, positions=positions,
                            caches=caches, enc_out=enc_out)
-    logits = ly.logits(params["embed"], x[:, -1:],
+    hidden = x[:, -1:]
+    logits = ly.logits(params["embed"], hidden,
                        dataclasses.replace(cfg, vocab=padded_vocab(cfg)))
+    if return_hidden:
+        return logits, new_caches, hidden
     return logits, new_caches
 
 
 def decode_step(params, tokens, pos, caches, *, cfg: ArchConfig,
-                ctx: ModelCtx = ModelCtx(), enc_out=None):
-    """One decode step.  tokens (B, 1), pos (B,) absolute positions."""
+                ctx: ModelCtx = ModelCtx(), enc_out=None,
+                return_hidden: bool = False):
+    """One decode step.  tokens (B, 1), pos (B,) absolute positions.
+
+    ``return_hidden`` additionally returns the final-norm hidden state
+    (B, 1, d_model) feeding the output head (see :func:`prefill`)."""
     B = tokens.shape[0]
     x = sharded_embed(params["embed"]["tok"], tokens, ctx.mesh,
                       ctx.model_axis)
@@ -340,4 +352,6 @@ def decode_step(params, tokens, pos, caches, *, cfg: ArchConfig,
                            caches=caches, enc_out=enc_out)
     logits = ly.logits(params["embed"], x,
                        dataclasses.replace(cfg, vocab=padded_vocab(cfg)))
+    if return_hidden:
+        return logits, new_caches, x
     return logits, new_caches

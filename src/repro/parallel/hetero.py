@@ -24,7 +24,8 @@ import numpy as np
 from ..core.allocation import markov_loads
 from ..sim.cluster import ClusterProfile
 
-__all__ = ["hetero_split", "replan_on_failure", "coded_batch_plan"]
+__all__ = ["hetero_split", "replan_on_failure", "coded_batch_plan",
+           "coded_row_shards"]
 
 
 def _theta_of_profile(profile: ClusterProfile) -> np.ndarray:
@@ -39,6 +40,28 @@ def _largest_remainder_round(loads: np.ndarray, total: int) -> np.ndarray:
     order = np.argsort(-(scaled - base))
     base[order[:rem]] += 1
     return base
+
+
+def coded_row_shards(l_row: np.ndarray, L: int) -> np.ndarray:
+    """Integer per-node coded-row shard sizes from a fractional load row.
+
+    This is the heterogeneous split applied to one master's Theorem-1/3
+    load allocation ``l_row`` (node axis, column 0 = local): every positive
+    load is ceiled (the paper drops integrality in (7c); rounding up only
+    grows the redundancy, so recovery from any prefix covering ``L`` stays
+    safe), and if share down-scaling left the rounded total below ``L`` the
+    deficit is topped up by largest remainder over the participating nodes.
+    """
+    l_row = np.asarray(l_row, dtype=np.float64)
+    shards = np.where(l_row > 0, np.ceil(l_row - 1e-9), 0.0).astype(np.int64)
+    deficit = int(L) - int(shards.sum())
+    if deficit > 0:
+        active = np.nonzero(shards > 0)[0]
+        if active.size == 0:
+            raise ValueError("no participating nodes to cover L")
+        top_up = _largest_remainder_round(l_row[active], deficit)
+        shards[active] += top_up
+    return shards
 
 
 def hetero_split(profile: ClusterProfile, global_batch: int) -> np.ndarray:

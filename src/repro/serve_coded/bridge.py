@@ -1,0 +1,492 @@
+"""The coded serving bridge: StreamingExecutor planning as the live
+admission/batching policy of the real inference server.
+
+``launch/serve.py`` runs prefill → continuous-batched decode;
+``repro.stream`` plans coded matrix products over shared heterogeneous
+workers.  This module welds them together: every token batch the server
+generates is one of the paper's coded tasks, scheduled by the *same*
+machinery the streaming engine uses —
+
+* the :class:`~repro.stream.replan.OnlinePlanner` supplies the (k, b, l)
+  plan for the current pool (churn-aware, SCA-warm-started);
+* the :class:`~repro.stream.queueing.SharePool` ledger holds the paper's
+  column-sum ≤ 1 constraint across masters' concurrent steps;
+* a pluggable :class:`~repro.stream.queueing.AdmissionPolicy`
+  ("fifo" | "edf" | "fair") decides which waiting requests join a batch
+  when slots free up, and (fair policy) caps a step's admitted shares at
+  the max-min fair entitlement;
+* :func:`repro.parallel.hetero.coded_row_shards` turns the fractional plan
+  row into integer per-worker shard sizes;
+* the :class:`~repro.serve_coded.coded_head.CodedLMHead` physically
+  executes each arrived shard's matmul and decodes the exact logits from
+  the earliest prefix covering L rows.
+
+Time model: request arrivals, worker delays and deadlines live in
+*simulation* milliseconds (sampled from the paper's shifted-exponential /
+exponential model via the stream backend); the model forwards and shard
+matmuls are real computations timed separately in wall-clock seconds.
+In-flight steps are not re-timed by churn (a step is short; churn lands on
+the next step's plan) — the streaming engine covers mid-flight re-timing
+and speculative re-dispatch for the abstract task model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..parallel.hetero import coded_row_shards
+from ..sim.cluster import ClusterProfile, ec2_cluster
+from ..stream import backend as bk
+from ..stream.events import WorkerEvent
+from ..stream.metrics import StreamMetrics, TaskRecord
+from ..stream.queueing import (AdmissionConfig, SharePool, fair_demand_rows,
+                               make_admission_policy, scale_shares)
+from ..stream.replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
+from .coded_head import CodedLMHead
+from .requests import ServeRequest
+
+__all__ = ["CodedServingBridge", "ServeReport", "default_pool"]
+
+_ARRIVE, _CHURN, _STEP = "arrive", "churn", "step"
+
+
+def default_pool(N: int = 8, n_fast: int = 2, seed: int = 0) -> ClusterProfile:
+    """The demo pool: EC2-fitted heterogeneous workers, comm-delay aware."""
+    return ec2_cluster(N=N, n_fast=n_fast, rng=seed, gamma_over_u=2.0)
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    prompt: np.ndarray
+    gen_len: int
+    tokens: List[int]
+    pos: int = 0
+    needs_prefill: bool = True
+
+
+@dataclasses.dataclass
+class _Step:
+    k_row: np.ndarray
+    b_row: np.ndarray
+    l_int: np.ndarray
+    finish: np.ndarray
+    t_start: float
+    t_done: float
+    slot_ids: List[int]
+    tokens: np.ndarray
+    rows_dispatched: int
+    used_solve: bool
+    max_err: float
+    argmax_ok: int
+
+
+class _MasterState:
+    def __init__(self, n_slots: int):
+        self.caches: Any = None
+        self.slots: Dict[int, _Slot] = {}
+        self.free: List[int] = list(range(n_slots))
+        self.step: Optional[_Step] = None
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Everything a coded serve produced, plus the scheduling metrics."""
+    metrics: StreamMetrics
+    tokens: Dict[int, List[int]]         # rid → generated token ids
+    steps: List[Dict[str, float]]        # per coded-step log
+    policy: str
+    max_err: float                       # NaN when verification was off
+    argmax_match_rate: float
+    decode_ok: Optional[bool]            # None when verification was off
+    wall_seconds: float
+    tokens_generated: int
+    solve_steps: int
+    sim_horizon_ms: float = 0.0          # last step/request completion
+
+    def summary(self) -> Dict[str, float]:
+        out = self.metrics.summary()
+        out.update({
+            "tokens_generated": float(self.tokens_generated),
+            "coded_steps": float(len(self.steps)),
+            "solve_steps": float(self.solve_steps),
+            "tokens_per_sim_second":
+                self.tokens_generated / (self.sim_horizon_ms / 1e3)
+                if self.sim_horizon_ms > 0 else 0.0,
+            "tokens_per_wall_second":
+                self.tokens_generated / max(self.wall_seconds, 1e-300),
+            "decode_max_err": self.max_err,
+            "argmax_match_rate": self.argmax_match_rate,
+        })
+        return out
+
+
+class CodedServingBridge:
+    """Serves generation requests with plan-scheduled coded head matmuls.
+
+    Parameters
+    ----------
+    profile:   worker pool (:class:`ClusterProfile`); ``None`` = the demo
+               EC2 pool.  The Scenario's L is the model's padded vocab.
+    masters:   number of tenants (plan rows); requests carry a master id.
+    arch/seed: model selection (smoke-sized) and init seed.
+    admission: stream :class:`AdmissionConfig` — ``policy`` picks the
+               waiting-request ordering, ``min_fraction``/``max_queue`` the
+               scaling/backpressure rules.
+    plan_policy / replan: forwarded to :class:`OnlinePlanner`.
+    slots_per_master: continuous-batching capacity per tenant (the
+               contended resource the admission policy arbitrates).
+    backend:   "numpy" | "jax" | "pallas" for the head encode/decode.
+    verify:    compare every decoded logits batch against the local
+               uncoded head product (CI/tests).  Off, the bridge skips the
+               (B×L×D) reference matmul per step — the honest serving
+               configuration, since distributing that product is the point.
+    """
+
+    def __init__(self, profile: Optional[ClusterProfile] = None, *,
+                 masters: int = 2, arch: str = "llama3.2-1b",
+                 smoke: bool = True,
+                 admission: Optional[AdmissionConfig] = None,
+                 plan_policy: str = "fractional",
+                 replan: Optional[ReplanPolicy] = None,
+                 slots_per_master: int = 4, backend: str = "numpy",
+                 verify: bool = True, seed: int = 0):
+        self.profile = profile or default_pool(seed=seed)
+        self.M = int(masters)
+        self.arch = arch
+        self.smoke = bool(smoke)
+        self.admission = admission or AdmissionConfig(policy="edf")
+        self.plan_policy = plan_policy
+        self.replan = replan
+        self.slots_per_master = int(slots_per_master)
+        self.backend = backend
+        self.verify = bool(verify)
+        self.seed = int(seed)
+        self._model = None
+        self._max_len = 0
+
+    # -- lazy model setup ----------------------------------------------------
+
+    def _setup_model(self, max_len: int):
+        if self._model is None:
+            from ..launch.serve import build_model, head_matrix, serving_fns
+            cfg, params = build_model(self.arch, smoke=self.smoke,
+                                      seed=self.seed)
+            if cfg.enc_dec:
+                raise NotImplementedError("coded bridge serves decoder-only "
+                                          "archs (enc-dec prefill needs "
+                                          "feats)")
+            prefill_fn, decode_fn = serving_fns(cfg, return_hidden=True)
+            W = head_matrix(cfg, params)
+            self._model = dict(cfg=cfg, params=params, prefill_fn=prefill_fn,
+                               decode_fn=decode_fn, W=W)
+            self.sc = self.profile.scenario(self.M, L=float(W.shape[0]))
+            self.head = CodedLMHead(W, seed=self.seed, backend=self.backend)
+        if max_len > self._max_len:
+            # caches must cover the longest request this bridge ever saw —
+            # a later serve() with longer requests regrows them
+            from ..launch.serve import zero_caches
+            cfg, ml = self._model["cfg"], int(max_len)
+            self._model["zero_caches"] = lambda b: zero_caches(cfg, b, ml)
+            self._max_len = ml
+
+    @staticmethod
+    def _write_slot(big, one, slot: int):
+        """Scatter a single-request cache into batch slot ``slot``.
+
+        The batch axis is the first axis where the shapes differ (the
+        single-request cache has size 1 there); identical shapes mean a
+        one-slot batch — replace wholesale."""
+        import jax
+        import jax.numpy as jnp
+
+        def w(b, o):
+            ax = next((i for i, (bs, os_) in
+                       enumerate(zip(b.shape, o.shape)) if bs != os_), None)
+            if ax is None:
+                return o
+            idx = tuple(slot if i == ax else slice(None)
+                        for i in range(b.ndim))
+            return b.at[idx].set(jnp.take(o, 0, axis=ax))
+        return jax.tree.map(w, big, one)
+
+    # -- serve ---------------------------------------------------------------
+
+    def serve(self, requests: Sequence[ServeRequest],
+              churn: Sequence[WorkerEvent] = ()) -> ServeReport:
+        t_wall = time.perf_counter()
+        reqs = {r.rid: r for r in requests}
+        max_len = max(len(r.prompt) + r.gen_len for r in requests) + 8
+        self._setup_model(max_len)
+        mdl = self._model
+        L = self.head.L
+
+        planner = OnlinePlanner(self.sc, policy=self.plan_policy,
+                                replan=self.replan, rng=self.seed)
+        pool = SharePool(self.sc.N)
+        queue = make_admission_policy(self.admission.policy,
+                                      self.admission.max_queue)
+        metrics = StreamMetrics(self.M, self.sc.N)
+        exp = bk.ExponentialBlock(
+            np.random.default_rng((self.seed, 0x5E4E)), self.sc.N + 1)
+        scale = np.ones(self.sc.N + 1)
+        sc_eff = self.sc
+        recs: Dict[int, TaskRecord] = {}
+        states = [None] * self.M
+        for m in range(self.M):
+            st = _MasterState(self.slots_per_master)
+            st.caches = mdl["zero_caches"](self.slots_per_master)
+            states[m] = st
+        step_log: List[Dict[str, float]] = []
+        tokens_out: Dict[int, List[int]] = {}
+        seq = itertools.count()
+        heap: List[Tuple[float, int, str, Any]] = []
+        for r in requests:
+            heapq.heappush(heap, (r.t_arrive, next(seq), _ARRIVE, r))
+        for ev in churn:
+            heapq.heappush(heap, (ev.time, next(seq), _CHURN, ev))
+        stats = dict(max_err=0.0, match=0, total=0, solves=0, tokens=0)
+
+        # ---- helpers bound to this serve run -----------------------------
+
+        def online() -> np.ndarray:
+            return pool.online
+
+        def has_work() -> bool:
+            return bool(len(queue)) or any(st.slots for st in states)
+
+        def admit(t: float) -> None:
+            while len(queue):
+                progressed = False
+                for rid in queue.candidates():
+                    st = states[reqs[rid].master]
+                    if st.free:
+                        slot = min(st.free)
+                        st.free.remove(slot)
+                        queue.remove(rid)
+                        queue.note_admitted(reqs[rid].master)
+                        recs[rid].t_admit = t
+                        r = reqs[rid]
+                        st.slots[slot] = _Slot(rid=rid, prompt=r.prompt,
+                                               gen_len=r.gen_len, tokens=[])
+                        progressed = True
+                        break
+                    if queue.head_of_line:
+                        return
+                if not progressed:
+                    return
+
+        def fair_cap(m: int, k_req, b_req) -> float:
+            # claimants: masters holding step shares, plus masters with
+            # queued requests or admitted-but-idle batches (plan-row demand)
+            held_rows = {m2: states[m2].step.k_row for m2 in range(self.M)
+                         if states[m2].step is not None}
+            waiting = queue.waiting_masters() | {
+                m2 for m2 in range(self.M)
+                if states[m2].slots and states[m2].step is None}
+            held, demands = fair_demand_rows(m, planner.plan.k, online(),
+                                             waiting, held_rows)
+            return queue.fair_fraction(m, k_req, b_req, held=held,
+                                       demands=demands)
+
+        def hidden_states(m: int, st: _MasterState
+                          ) -> Tuple[np.ndarray, List[int]]:
+            import jax.numpy as jnp
+            slot_ids = sorted(st.slots)
+            cont = [s for s in slot_ids if not st.slots[s].needs_prefill]
+            H: Dict[int, np.ndarray] = {}
+            if cont:
+                B = self.slots_per_master
+                toks = np.zeros((B, 1), dtype=np.int32)
+                pos = np.zeros((B,), dtype=np.int32)
+                for s in cont:
+                    toks[s, 0] = st.slots[s].tokens[-1]
+                    pos[s] = st.slots[s].pos
+                _, st.caches, hid = mdl["decode_fn"](
+                    mdl["params"], jnp.asarray(toks), jnp.asarray(pos),
+                    st.caches)
+                hid = np.asarray(hid, dtype=np.float64)
+                for s in cont:
+                    H[s] = hid[s, 0]
+                    st.slots[s].pos += 1
+            for s in slot_ids:
+                slot = st.slots[s]
+                if not slot.needs_prefill:
+                    continue
+                batch = {"tokens": jnp.asarray(slot.prompt[None])}
+                _, c1, h1 = mdl["prefill_fn"](
+                    mdl["params"], batch, mdl["zero_caches"](1))
+                st.caches = self._write_slot(st.caches, c1, s)
+                slot.pos = len(slot.prompt)
+                slot.needs_prefill = False
+                H[s] = np.asarray(h1, dtype=np.float64)[0, 0]
+            return np.stack([H[s] for s in slot_ids]), slot_ids
+
+        def begin_step(m: int, t: float, relax: bool) -> bool:
+            st = states[m]
+            plan = planner.ensure_plan(online(), scale)
+            fair_fn = (lambda kq, bq: fair_cap(m, kq, bq)) \
+                if queue.uses_fairness and not relax else None
+            scaled = scale_shares(
+                pool, plan.k[m], plan.b[m], online(),
+                allow_scaling=self.admission.allow_scaling,
+                floor=1e-6 if relax else self.admission.min_fraction,
+                fair_fn=fair_fn)
+            if scaled is None:
+                return False
+            k_row, b_row, _f = scaled
+            l_row, _ = scaled_row_loads(sc_eff, m, k_row, b_row)
+            if l_row.sum() < L - 1e-6:
+                return False
+            l_int = coded_row_shards(l_row, L)
+            e = exp.draw()
+            d = bk.sample_delays(e[0], e[1], l_int, k_row, b_row,
+                                 sc_eff.a[m], sc_eff.u[m], sc_eff.gamma[m])
+            finish = np.where(l_int > 0, t + d, np.inf)
+            comp = float(bk.completion_times(
+                finish[None], l_int[None], np.array([float(L)]))[0])
+            if not np.isfinite(comp):
+                return False
+            pool.acquire(k_row, b_row)
+            H, slot_ids = hidden_states(m, st)
+            res = self.head.step(H, l_int, finish, comp)
+            tokens = np.argmax(res.logits, axis=1).astype(np.int64)
+            if self.verify:
+                ref = H @ self.head.W.T
+                err = float(np.abs(res.logits - ref).max()
+                            / (1.0 + np.abs(ref).max()))
+                ok = int((tokens == np.argmax(ref, axis=1)).sum())
+            else:
+                err, ok = 0.0, len(slot_ids)
+            stats["max_err"] = max(stats["max_err"], err)
+            stats["match"] += ok
+            stats["total"] += len(slot_ids)
+            stats["solves"] += int(res.used_solve)
+            st.step = _Step(k_row=k_row, b_row=b_row, l_int=l_int,
+                            finish=finish, t_start=t, t_done=comp,
+                            slot_ids=slot_ids, tokens=tokens,
+                            rows_dispatched=res.rows_dispatched,
+                            used_solve=res.used_solve, max_err=err,
+                            argmax_ok=ok)
+            heapq.heappush(heap, (comp, next(seq), _STEP, m))
+            return True
+
+        def pump(t: float, relax: bool = False) -> bool:
+            started = False
+            for m in range(self.M):
+                if states[m].step is None and states[m].slots:
+                    started |= begin_step(m, t, relax)
+            return started
+
+        def step_done(m: int, t: float) -> None:
+            st = states[m]
+            sp = st.step
+            st.step = None
+            pool.release(sp.k_row, sp.b_row)
+            metrics.record_share_interval(sp.k_row, sp.b_row, t - sp.t_start)
+            delivered = float(bk.delivered_by(
+                sp.finish[None], sp.l_int.astype(np.float64)[None],
+                np.array([t]))[0])
+            B = len(sp.slot_ids)
+            stats["tokens"] += B
+            step_log.append({
+                "master": m, "t_start": sp.t_start, "t_done": t,
+                "batch": B, "rows_dispatched": sp.rows_dispatched,
+                "rows_delivered": delivered, "used_solve": sp.used_solve,
+                "max_err": sp.max_err,
+            })
+            for sid, tok in zip(sp.slot_ids, sp.tokens):
+                slot = st.slots[sid]
+                slot.tokens.append(int(tok))
+                tokens_out.setdefault(slot.rid, []).append(int(tok))
+                rec = recs[slot.rid]
+                rec.rows_needed += L / B
+                rec.rows_total += sp.rows_dispatched / B
+                rec.rows_delivered += delivered / B
+                if len(slot.tokens) >= slot.gen_len:
+                    rec.t_complete = t
+                    metrics.record_task(rec)
+                    del st.slots[sid]
+                    st.free.append(sid)
+            admit(t)
+            pump(t)
+
+        def on_arrive(r: ServeRequest, t: float) -> None:
+            plan = planner.ensure_plan(online(), scale, event=True)
+            t_tok = float(plan.t_per_master[r.master])
+            deadline = math.inf
+            if math.isfinite(r.slack) and math.isfinite(t_tok):
+                deadline = t + r.slack * r.gen_len * t_tok
+            rec = TaskRecord(tid=r.rid, master=r.master, t_arrive=t,
+                             deadline=deadline)
+            recs[r.rid] = rec
+            if not queue.offer(r.rid, master=r.master, deadline=deadline):
+                del recs[r.rid], reqs[r.rid]    # backpressure rejection
+                return
+            admit(t)
+            pump(t)
+
+        def on_churn(ev: WorkerEvent, t: float) -> None:
+            nonlocal sc_eff
+            if ev.kind == "leave":
+                pool.set_online(ev.worker, False)
+            elif ev.kind == "join":
+                pool.set_online(ev.worker, True)
+            elif ev.kind == "degrade":
+                scale[ev.worker] *= ev.factor
+            elif ev.kind == "restore":
+                scale[ev.worker] = 1.0
+            sc_eff = planner.effective_scenario(online(), scale)
+            planner.ensure_plan(online(), scale, event=True)
+            admit(t)
+            pump(t)
+
+        # ---- event loop --------------------------------------------------
+
+        now = 0.0
+        while True:
+            if not heap:
+                # forward-progress fallback: relax fairness/min-fraction so
+                # leftover work cannot deadlock against its own reservation
+                if has_work() and pump(now, relax=True):
+                    continue
+                break
+            now, _, kind, payload = heapq.heappop(heap)
+            if kind == _ARRIVE:
+                on_arrive(payload, now)
+            elif kind == _CHURN:
+                on_churn(payload, now)
+            else:
+                step_done(payload, now)
+
+        metrics.replans = planner.replans
+        metrics.rejected = queue.rejected
+        metrics.unserved = len(queue) + sum(len(st.slots) for st in states)
+        for rid in queue.candidates():
+            metrics.record_unserved(recs[rid])
+        for st in states:
+            for slot in st.slots.values():
+                metrics.record_unserved(recs[slot.rid])
+        tol = 1e-6 if self.backend == "numpy" else 5e-4
+        match_rate = stats["match"] / max(stats["total"], 1)
+        return ServeReport(
+            metrics=metrics,
+            tokens=tokens_out,
+            steps=step_log,
+            policy=self.admission.policy,
+            max_err=stats["max_err"] if self.verify else float("nan"),
+            argmax_match_rate=match_rate,
+            decode_ok=(stats["max_err"] <= tol and match_rate == 1.0)
+            if self.verify else None,
+            wall_seconds=time.perf_counter() - t_wall,
+            tokens_generated=stats["tokens"],
+            solve_steps=stats["solves"],
+            sim_horizon_ms=max([metrics.t_end]
+                               + [s["t_done"] for s in step_log]),
+        )

@@ -13,7 +13,9 @@ from .engine import StreamingExecutor, poisson_sources
 from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, Event, EventLoop,
                      PoissonProcess, TraceProcess, WorkerEvent)
 from .metrics import StreamMetrics, TaskRecord
-from .queueing import AdmissionConfig, SharePool, WaitQueue
+from .queueing import (AdmissionConfig, AdmissionPolicy, EDFAdmission,
+                       FairShareAdmission, FIFOAdmission, SharePool,
+                       WaitQueue, make_admission_policy, maxmin_share)
 from .replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
 
 __all__ = [
@@ -21,6 +23,8 @@ __all__ = [
     "EventLoop", "Event", "PoissonProcess", "TraceProcess", "WorkerEvent",
     "ARRIVAL", "COMPLETION", "CHURN", "REPLAN",
     "AdmissionConfig", "SharePool", "WaitQueue",
+    "AdmissionPolicy", "FIFOAdmission", "EDFAdmission", "FairShareAdmission",
+    "make_admission_policy", "maxmin_share",
     "OnlinePlanner", "ReplanPolicy", "scaled_row_loads",
     "StreamMetrics", "TaskRecord",
     "completion_times", "delivered_by", "sample_delays", "decode_batch",

@@ -34,7 +34,8 @@ from . import backend as bk
 from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, ArrivalProcess,
                      EventLoop, PoissonProcess, WorkerEvent)
 from .metrics import StreamMetrics, TaskRecord
-from .queueing import AdmissionConfig, SharePool, WaitQueue
+from .queueing import (AdmissionConfig, SharePool, fair_demand_rows,
+                       make_admission_policy, scale_shares)
 from .replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
 
 __all__ = ["StreamingExecutor", "poisson_sources"]
@@ -66,6 +67,9 @@ class _InFlight:
     t_admit: float
     completion: float
     version: int = 0
+    service_pred: float = 0.0     # predicted service time at dispatch
+    speculative: bool = False     # a racing twin of an existing dispatch
+    fraction: float = 1.0         # admitted share scale (1 = full plan row)
 
 
 class StreamingExecutor:
@@ -77,8 +81,14 @@ class StreamingExecutor:
     sources:   arrival processes (defaults to ``poisson_sources(sc)``).
     policy:    "fractional" | "dedicated" | "uncoded" planning stack.
     replan:    online replanning policy (see :class:`ReplanPolicy`).
-    admission: share-scaling / backpressure configuration.  Dedicated and
-               uncoded plans force all-or-nothing admission.
+    admission: share-scaling / backpressure / waiting-order configuration.
+               ``AdmissionConfig.policy`` picks the pluggable admission
+               policy ("fifo" | "edf" | "fair"); ``speculate_factor``
+               enables speculative re-dispatch of straggling in-flight
+               tasks.  Dedicated and uncoded plans force all-or-nothing
+               admission.  Deadlines come from the arrival processes
+               (``deadline_slack`` / explicit trace deadlines) and feed
+               both EDF ordering and the ``deadline_miss_rate`` metric.
     churn:     scheduled :class:`WorkerEvent`s (join/leave/degrade/restore).
     numerics:  "none" (delay simulation only) or "verify" (synthesize per-
                task matrices and run the batched MDS encode→decode check;
@@ -138,7 +148,8 @@ class StreamingExecutor:
                                      rng=self.seed)
         self.loop = EventLoop()
         self.pool = SharePool(sc.N)
-        self.queue = WaitQueue(self.admission.max_queue)
+        self.queue = make_admission_policy(self.admission.policy,
+                                           self.admission.max_queue)
         self.metrics = StreamMetrics(sc.M, sc.N)
 
         self.scale = np.ones(sc.N + 1)
@@ -148,6 +159,7 @@ class StreamingExecutor:
             uniform_rows=1 if self.straggle_p > 0 else 0)
         self.tasks: Dict[int, TaskRecord] = {}
         self.inflight: Dict[int, _InFlight] = {}
+        self.twins: Dict[int, _InFlight] = {}   # speculative racing dispatches
         self._verify_buf: List[_InFlight] = []
         self._next_tid = 0
         self._emitted = 0
@@ -197,14 +209,28 @@ class StreamingExecutor:
                 # pending arrival/completion/churn event (at most one REPLAN
                 # exists and it was just popped) or an in-flight task.  A
                 # bare unservable queue must not keep the loop alive forever.
-                if self.inflight or len(self.loop):
+                if self.inflight or self.twins or len(self.loop):
                     self.loop.push(ev.time + pol.period, REPLAN, None)
 
         if self.numerics == "verify":
             self._run_verification()
         self.metrics.replans = self.planner.replans
         self.metrics.rejected = self.queue.rejected
-        self.metrics.unserved = len(self.queue)
+        self.metrics.unserved = len(self.queue) + len(self.inflight)
+        # an `until` cutoff censors deadlines that had not yet expired when
+        # observation stopped; a naturally-drained run leaves no censoring
+        # (nothing more can ever happen, so an unserved deadline is a miss)
+        censor = until if np.isfinite(until) else np.inf
+        for tid in self.queue.candidates():
+            self.metrics.record_unserved(self.tasks[tid], censor_after=censor)
+        # stranded in-flight work is unserved too, and its held shares are
+        # accounted up to the cutoff
+        t_stop = until if np.isfinite(until) else self.loop.now
+        for fl in self._attempts():
+            self.metrics.record_share_interval(
+                fl.k_row, fl.b_row, max(t_stop - fl.t_admit, 0.0))
+        for tid in self.inflight:
+            self.metrics.record_unserved(self.tasks[tid], censor_after=censor)
         return self.metrics
 
     # ------------------------------------------------------------- handlers
@@ -219,88 +245,145 @@ class StreamingExecutor:
         rec = TaskRecord(tid=tid, master=src.master, t_arrive=t,
                          rows_needed=float(self.sc.L[src.master]))
         self.tasks[tid] = rec
+        plan = self.planner.ensure_plan(self.online, self.scale, event=True)
+        rec.deadline = float(src.deadline_for(
+            t, float(plan.t_per_master[src.master])))
         if self._emitted < self.max_tasks:
             t_next = src.next_after(t)
             if np.isfinite(t_next):
                 self.loop.push(t_next, ARRIVAL, src_idx)
-        self.planner.ensure_plan(self.online, self.scale, event=True)
-        # FIFO fairness: earlier-queued tasks get first claim on the pool —
-        # a newcomer may not slip past a waiting queue head.
+        # Fairness: earlier-queued tasks get first claim on the pool — a
+        # newcomer may not slip past a waiting candidate the policy ranks
+        # ahead of it.
         self._drain_queue(t)
-        if len(self.queue) or not self._try_admit(tid, t):
-            if not self.queue.offer(tid):
-                del self.tasks[tid]          # backpressure: rejected outright
+        if len(self.queue) == 0 and self._try_admit(tid, t):
+            return
+        if not self.queue.offer(tid, master=rec.master, deadline=rec.deadline):
+            del self.tasks[tid]              # backpressure: rejected outright
+            return
+        if self.queue.reorders and len(self.queue) > 1:
+            # deadline/fairness policies may rank the newcomer ahead of the
+            # previously-blocked head — give it one admission attempt now
+            self._drain_queue(t)
 
     def _on_completion(self, payload: Tuple[int, int], t: float) -> None:
         tid, version = payload
         fl = self.inflight.get(tid)
-        if fl is None or fl.version != version:
+        tw = self.twins.get(tid)
+        if fl is not None and fl.version == version:
+            win, lose = fl, tw
+        elif tw is not None and tw.version == version:
+            win, lose = tw, fl
+        else:
             return                            # stale (churn retimed the task)
-        self._finalize(fl, t)
+        if lose is not None:                  # cancel the slower racing twin
+            self.pool.release(lose.k_row, lose.b_row)
+            self.metrics.record_share_interval(lose.k_row, lose.b_row,
+                                               t - lose.t_admit)
+        self.twins.pop(tid, None)
+        self.inflight[tid] = win
+        self._finalize(win, t)
         self._drain_queue(t)
+
+    def _attempts(self) -> List[_InFlight]:
+        return list(self.inflight.values()) + list(self.twins.values())
+
+    def _alive(self, fl: _InFlight) -> bool:
+        return self.inflight.get(fl.tid) is fl or self.twins.get(fl.tid) is fl
 
     def _on_churn(self, ev: WorkerEvent, t: float) -> None:
         w = ev.worker
+        undo = self.scale[w]
         if ev.kind == "leave":
             self.pool.set_online(w, False)
-            for fl in list(self.inflight.values()):
-                if fl.l_row[w] > 0 and fl.finish[w] > t:
-                    fl.finish[w] = np.inf
-                    self._retime(fl, t)
         elif ev.kind == "join":
             self.pool.set_online(w, True)
         elif ev.kind == "degrade":
             self.scale[w] *= ev.factor
-            for fl in self.inflight.values():
-                if fl.l_row[w] > 0 and np.isfinite(fl.finish[w]) \
-                        and fl.finish[w] > t:
+        elif ev.kind == "restore":
+            self.scale[w] = 1.0
+        # the effective scenario must reflect THIS event before any retime:
+        # re-dispatches and speculative twins triggered below sample their
+        # delays from it
+        self._sc_eff = self.planner.effective_scenario(self.online, self.scale)
+        if ev.kind == "leave":
+            for fl in self._attempts():
+                if self._alive(fl) and fl.l_row[w] > 0 and fl.finish[w] > t:
+                    fl.finish[w] = np.inf
+                    self._retime(fl, t)
+        elif ev.kind == "degrade":
+            for fl in self._attempts():
+                if self._alive(fl) and fl.l_row[w] > 0 \
+                        and np.isfinite(fl.finish[w]) and fl.finish[w] > t:
                     fl.finish[w] = t + (fl.finish[w] - t) * ev.factor
                     self._retime(fl, t)
         elif ev.kind == "restore":
-            undo = self.scale[w]
-            self.scale[w] = 1.0
-            for fl in self.inflight.values():
-                if fl.l_row[w] > 0 and np.isfinite(fl.finish[w]) \
-                        and fl.finish[w] > t and undo > 0:
+            for fl in self._attempts():
+                if self._alive(fl) and fl.l_row[w] > 0 \
+                        and np.isfinite(fl.finish[w]) and fl.finish[w] > t \
+                        and undo > 0:
                     fl.finish[w] = t + (fl.finish[w] - t) / undo
                     self._retime(fl, t)
-        self._sc_eff = self.planner.effective_scenario(self.online, self.scale)
         self.planner.ensure_plan(self.online, self.scale, event=True)
         self._drain_queue(t)
 
     # ------------------------------------------------------------ admission
 
-    def _try_admit(self, tid: int, t: float) -> bool:
+    def _fair_cap(self, m: int, k_req: np.ndarray,
+                  b_req: np.ndarray) -> float:
+        """Max-min fair share cap for master ``m`` (fair policy only).
+
+        Claimants are masters with in-flight shares or waiting tasks; a
+        waiting master's demand is its current plan row on the online
+        workers."""
+        held_rows: Dict[int, np.ndarray] = {}
+        for fl in self._attempts():
+            acc = held_rows.setdefault(fl.master, np.zeros_like(k_req))
+            acc += fl.k_row
+        held, demands = fair_demand_rows(
+            m, self.planner.plan.k, self.online,
+            self.queue.waiting_masters(), held_rows)
+        return self.queue.fair_fraction(m, k_req, b_req, held=held,
+                                        demands=demands)
+
+    def _dispatch(self, tid: int, t: float,
+                  min_fraction: Optional[float] = None
+                  ) -> Optional[_InFlight]:
+        """Admit ``tid``'s work onto the pool: scale shares to what fits
+        (and to the fair-share cap), derive Thm-1/3 loads, sample delivery
+        times, and acquire the ledger.  Returns the attempt, or None if the
+        task cannot run now (insufficient shares / cannot cover L_m).
+
+        ``min_fraction`` overrides the admission floor and additionally
+        masks the request to workers with *spare* shares (speculative twins
+        race on whatever capacity the pool has left — their original
+        attempt still holds its own columns)."""
         rec = self.tasks[tid]
         m = rec.master
         plan = self.planner.ensure_plan(self.online, self.scale)
-        k_req = np.where(self.online, plan.k[m], 0.0)
-        b_req = np.where(self.online, plan.b[m], 0.0)
-        k_req[0], b_req[0] = plan.k[m, 0], plan.b[m, 0]
-        f = self.pool.feasible_fraction(k_req, b_req)
-        if self.admission.allow_scaling:
-            if f < self.admission.min_fraction:
-                return False
-            f = min(f, 1.0)
-        else:
-            if f < 1.0 - 1e-9:
-                return False
-            f = 1.0
-        k_row = f * k_req
-        b_row = f * b_req
-        k_row[0] = b_row[0] = 1.0            # the master's own processor
+        fair_fn = (lambda kq, bq: self._fair_cap(m, kq, bq)) \
+            if self.queue.uses_fairness else None
+        scaled = scale_shares(
+            self.pool, plan.k[m], plan.b[m], self.online,
+            allow_scaling=self.admission.allow_scaling,
+            floor=self.admission.min_fraction if min_fraction is None
+            else min_fraction,
+            fair_fn=fair_fn, spare_only=min_fraction is not None)
+        if scaled is None:
+            return None
+        k_row, b_row, f = scaled
 
         if self.planner.needs_all:
             # uncoded: equal re-split over the plan's surviving workers
             l_row = np.zeros_like(k_row)
             w = np.nonzero(k_row[1:] > 0)[0] + 1
             if w.size == 0:
-                return False
+                return None
             l_row[w] = self.sc.L[m] / w.size
         else:
             l_row, _ = scaled_row_loads(self._sc_eff, m, k_row, b_row)
         if l_row.sum() < self.sc.L[m] - 1e-6 and not self.planner.needs_all:
-            return False                      # cannot cover L_m: wait
+            return None                      # cannot cover L_m: wait
 
         e = self._exp.draw()
         d = bk.sample_delays(e[0], e[1], l_row, k_row, b_row,
@@ -314,27 +397,69 @@ class StreamingExecutor:
             finish[None], l_row[None], np.array([self.sc.L[m]]),
             needs_all=self.planner.needs_all, backend="numpy")[0])
         if not np.isfinite(comp):
-            return False
+            return None
 
         self.pool.acquire(k_row, b_row)
-        rec.t_admit = t
-        rec.fraction = f
         rec.rows_total += float(l_row.sum())
         fl = _InFlight(tid=tid, master=m, k_row=k_row, b_row=b_row,
                        l_row=l_row, finish=finish, need=float(self.sc.L[m]),
                        t_admit=t, completion=comp,
-                       version=next(self._version_seq))
-        self.inflight[tid] = fl
+                       version=next(self._version_seq),
+                       service_pred=comp - t, fraction=f)
         self.loop.push(comp, COMPLETION, (tid, fl.version))
+        return fl
+
+    def _try_admit(self, tid: int, t: float) -> bool:
+        fl = self._dispatch(tid, t)
+        if fl is None:
+            return False
+        rec = self.tasks[tid]
+        rec.t_admit = t
+        rec.fraction = fl.fraction
+        self.inflight[tid] = fl
+        self.queue.note_admitted(rec.master)
         return True
+
+    def _maybe_speculate(self, fl: _InFlight, t: float) -> None:
+        """Race a twin dispatch against a straggling in-flight task.
+
+        Triggered when churn re-timing pushed the predicted completion past
+        ``speculate_factor ×`` the service time predicted at dispatch —
+        *before* a ``leave`` event proves the original attempt lost.  The
+        twin runs on whatever shares the pool has spare; first attempt to
+        cover L_m wins and the loser is cancelled (its rows are the waste
+        this insurance costs)."""
+        sf = self.admission.speculate_factor
+        if sf is None or fl.speculative or fl.tid in self.twins:
+            return
+        if self.inflight.get(fl.tid) is not fl:
+            return
+        if (fl.completion - fl.t_admit) <= sf * fl.service_pred:
+            return
+        tw = self._dispatch(fl.tid, t, min_fraction=1e-3)
+        if tw is not None:
+            tw.speculative = True
+            self.twins[fl.tid] = tw
+            self.tasks[fl.tid].speculated = True
+            self.metrics.speculations += 1
 
     def _drain_queue(self, t: float) -> None:
         while len(self.queue):
-            tid = self.queue.peek()
-            if self._try_admit(tid, t):
-                self.queue.take()
-            else:
-                break                         # FIFO head-of-line blocking
+            if self.queue.head_of_line:
+                # only the head can go: O(1)/O(log Q), no full reorder
+                tid = self.queue.head()
+                if tid is None or not self._try_admit(tid, t):
+                    return                    # head-of-line blocking
+                self.queue.remove(tid)
+                continue
+            admitted = False
+            for tid in self.queue.candidates():
+                if self._try_admit(tid, t):
+                    self.queue.remove(tid)
+                    admitted = True
+                    break
+            if not admitted:
+                return
 
     # ----------------------------------------------------------- completion
 
@@ -348,18 +473,30 @@ class StreamingExecutor:
         if np.isfinite(comp):
             fl.completion = comp
             self.loop.push(max(comp, t), COMPLETION, (fl.tid, fl.version))
+            self._maybe_speculate(fl, t)
         else:
-            # too many deliveries lost — release and re-dispatch
-            rec = self.tasks[fl.tid]
-            rec.retries += 1
-            self.pool.release(fl.k_row, fl.b_row)
-            self.metrics.record_share_interval(fl.k_row, fl.b_row,
-                                               t - fl.t_admit)
-            del self.inflight[fl.tid]
-            if not self._try_admit(fl.tid, t):
-                # already-admitted work re-queues past the backpressure
-                # bound — it must not be silently dropped mid-service
-                self.queue.offer(fl.tid, force=True)
+            self._drop_attempt(fl, t)
+
+    def _drop_attempt(self, fl: _InFlight, t: float) -> None:
+        """An attempt lost too many deliveries to ever cover L: release its
+        shares; keep the surviving twin, or re-dispatch from scratch."""
+        self.pool.release(fl.k_row, fl.b_row)
+        self.metrics.record_share_interval(fl.k_row, fl.b_row, t - fl.t_admit)
+        if self.twins.get(fl.tid) is fl:
+            del self.twins[fl.tid]            # twin lost; original continues
+            return
+        del self.inflight[fl.tid]
+        tw = self.twins.pop(fl.tid, None)
+        if tw is not None:
+            self.inflight[fl.tid] = tw        # promote the surviving twin
+            return
+        rec = self.tasks[fl.tid]
+        rec.retries += 1
+        if not self._try_admit(fl.tid, t):
+            # already-admitted work re-queues past the backpressure
+            # bound — it must not be silently dropped mid-service
+            self.queue.offer(fl.tid, master=rec.master,
+                             deadline=rec.deadline, force=True)
 
     def _finalize(self, fl: _InFlight, t: float) -> None:
         rec = self.tasks[fl.tid]

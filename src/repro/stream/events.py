@@ -80,12 +80,27 @@ class EventLoop:
 # ---------------------------------------------------------------------------
 
 class ArrivalProcess:
-    """One task source bound to a master; yields successive arrival times."""
+    """One task source bound to a master; yields successive arrival times.
+
+    ``deadline_slack`` optionally attaches a completion deadline to every
+    arrival: ``deadline = t_arrive + slack × t_pred`` with ``t_pred`` the
+    plan-predicted completion of the master at arrival time (so "slack 2"
+    means *twice the unloaded service time* regardless of master speed).
+    ``None`` (default) means no deadline (inf) — deadline-aware admission
+    policies then degenerate to FIFO.
+    """
 
     master: int
+    deadline_slack: Optional[float] = None
 
     def next_after(self, t: float) -> float:  # pragma: no cover - interface
         raise NotImplementedError
+
+    def deadline_for(self, t: float, t_pred: float) -> float:
+        """Absolute deadline of the arrival at ``t`` (inf = none)."""
+        if self.deadline_slack is None or not np.isfinite(t_pred):
+            return np.inf
+        return t + self.deadline_slack * t_pred
 
 
 class PoissonProcess(ArrivalProcess):
@@ -95,11 +110,13 @@ class PoissonProcess(ArrivalProcess):
     the arrival sequence is independent of event interleaving.
     """
 
-    def __init__(self, master: int, rate: float, seed: int = 0):
+    def __init__(self, master: int, rate: float, seed: int = 0,
+                 deadline_slack: Optional[float] = None):
         if rate <= 0:
             raise ValueError("rate must be > 0")
         self.master = int(master)
         self.rate = float(rate)
+        self.deadline_slack = deadline_slack
         self.rng = np.random.default_rng((int(seed), int(master), 0xA221))
 
     def next_after(self, t: float) -> float:
@@ -107,11 +124,26 @@ class PoissonProcess(ArrivalProcess):
 
 
 class TraceProcess(ArrivalProcess):
-    """Replays a fixed sequence of arrival instants (trace-driven mode)."""
+    """Replays a fixed sequence of arrival instants (trace-driven mode).
 
-    def __init__(self, master: int, times: Sequence[float]):
+    ``deadlines`` optionally gives an *absolute* deadline per traced
+    arrival (aligned with ``times`` after sorting); otherwise
+    ``deadline_slack`` applies as in :class:`ArrivalProcess`.
+    """
+
+    def __init__(self, master: int, times: Sequence[float],
+                 deadlines: Optional[Sequence[float]] = None,
+                 deadline_slack: Optional[float] = None):
         self.master = int(master)
-        self.times = sorted(float(t) for t in times)
+        self.deadline_slack = deadline_slack
+        order = np.argsort(np.asarray([float(t) for t in times]),
+                           kind="stable")
+        self.times = [float(times[i]) for i in order]
+        self.deadlines = None
+        if deadlines is not None:
+            if len(deadlines) != len(self.times):
+                raise ValueError("deadlines must align with times")
+            self.deadlines = [float(deadlines[i]) for i in order]
         self._i = 0
 
     def next_after(self, t: float) -> float:
@@ -122,6 +154,12 @@ class TraceProcess(ArrivalProcess):
         out = self.times[self._i]
         self._i += 1
         return out
+
+    def deadline_for(self, t: float, t_pred: float) -> float:
+        if self.deadlines is not None:
+            # the arrival being handled is the one next_after last yielded
+            return self.deadlines[max(self._i - 1, 0)]
+        return super().deadline_for(t, t_pred)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,8 @@ class TaskRecord:
     rows_needed: float = 0.0       # L_m
     rows_delivered: float = 0.0    # delivered by completion
     retries: int = 0               # re-dispatches after losing too many workers
+    deadline: float = math.inf     # absolute completion deadline (inf = none)
+    speculated: bool = False       # a twin dispatch raced the original
     decode_ok: Optional[bool] = None
     max_err: float = math.nan
 
@@ -63,6 +65,12 @@ class TaskRecord:
     def overshoot_rows(self) -> float:
         return max(self.rows_delivered - self.rows_needed, 0.0)
 
+    @property
+    def deadline_miss(self) -> bool:
+        """Finite deadline not met (never-completed counts as a miss)."""
+        return math.isfinite(self.deadline) and \
+            not (self.t_complete <= self.deadline)
+
     def to_dict(self) -> Dict[str, float]:
         return {
             "tid": self.tid, "master": self.master,
@@ -75,6 +83,9 @@ class TaskRecord:
             "wasted_rows": self.wasted_rows,
             "overshoot_rows": self.overshoot_rows,
             "retries": self.retries,
+            "deadline": self.deadline,
+            "deadline_miss": self.deadline_miss,
+            "speculated": self.speculated,
             "decode_ok": self.decode_ok, "max_err": self.max_err,
         }
 
@@ -85,9 +96,11 @@ class StreamMetrics:
     def __init__(self, M: int, N: int):
         self.M, self.N = int(M), int(N)
         self.completed: List[TaskRecord] = []
+        self.unserved_tasks: List[TaskRecord] = []   # never completed
         self.rejected = 0
         self.unserved = 0          # still queued when the run ended
         self.replans = 0
+        self.speculations = 0      # twin dispatches raced against stragglers
         self.busy_k = np.zeros(N + 1)      # ∫ k dt per worker column
         self.busy_b = np.zeros(N + 1)
         self.t_end = 0.0
@@ -98,6 +111,19 @@ class StreamMetrics:
         self.completed.append(rec)
         if np.isfinite(rec.t_complete):
             self.t_end = max(self.t_end, rec.t_complete)
+
+    def record_unserved(self, rec: TaskRecord,
+                        censor_after: float = math.inf) -> None:
+        """A task the run ended without serving — its expired deadline must
+        count as a miss, or a starving policy would look deadline-perfect.
+
+        ``censor_after``: observation horizon of a truncated run (engine
+        ``until=``).  A deadline beyond it is *censored* — the simulation
+        stopped before the verdict — and is excluded from the miss
+        statistic rather than counted against the policy."""
+        if math.isfinite(rec.deadline) and rec.deadline > censor_after:
+            return
+        self.unserved_tasks.append(rec)
 
     def record_share_interval(self, k_row: np.ndarray, b_row: np.ndarray,
                               dt: float) -> None:
@@ -133,8 +159,14 @@ class StreamMetrics:
             "tasks_rejected": float(self.rejected),
             "tasks_unserved": float(self.unserved),
             "replans": float(self.replans),
+            "speculations": float(self.speculations),
             "horizon": float(self.t_end),
         }
+        with_dl = [r for r in self.completed + self.unserved_tasks
+                   if math.isfinite(r.deadline)]
+        if with_dl:
+            out["deadline_miss_rate"] = float(
+                np.mean([r.deadline_miss for r in with_dl]))
         if s.size:
             fin = s[np.isfinite(s)]
             out.update({

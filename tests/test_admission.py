@@ -1,0 +1,282 @@
+"""Tests for the pluggable admission policies, deadline-aware scheduling
+and speculative re-dispatch in the streaming engine."""
+import numpy as np
+import pytest
+
+from repro.core.problem import Scenario
+from repro.stream import (AdmissionConfig, EDFAdmission, FairShareAdmission,
+                          FIFOAdmission, PoissonProcess, StreamingExecutor,
+                          TraceProcess, WorkerEvent, make_admission_policy,
+                          maxmin_share)
+
+
+def _scenario(M=2, N=8, L=96.0, seed=3):
+    rng = np.random.default_rng(seed)
+    a = np.zeros((M, N + 1))
+    a[:, 0] = 0.5
+    a[:, 1:] = rng.uniform(0.2, 0.4, size=(M, N))
+    return Scenario(a=a, u=1 / a, gamma=2 / a, L=np.full(M, L))
+
+
+# ---------------------------------------------------------------------------
+# Policy units
+# ---------------------------------------------------------------------------
+
+def test_policy_factory_and_ordering():
+    fifo = make_admission_policy("fifo")
+    assert isinstance(fifo, FIFOAdmission) and fifo.head_of_line
+    edf = make_admission_policy("edf")
+    assert isinstance(edf, EDFAdmission) and edf.reorders
+    fair = make_admission_policy("fair")
+    assert isinstance(fair, FairShareAdmission) and not fair.head_of_line
+    with pytest.raises(ValueError):
+        make_admission_policy("lifo")
+
+    # FIFO: insertion order regardless of deadline
+    fifo.offer(1, master=0, deadline=5.0)
+    fifo.offer(2, master=0, deadline=1.0)
+    assert fifo.candidates() == [1, 2]
+
+    # EDF: deadline order, arrival breaks ties, inf sorts last
+    edf.offer(1, master=0, deadline=50.0)
+    edf.offer(2, master=0, deadline=10.0)
+    edf.offer(3, master=1)                      # no deadline
+    edf.offer(4, master=1, deadline=10.0)
+    assert edf.candidates() == [2, 4, 1, 3]
+    edf.remove(2)
+    assert edf.candidates() == [4, 1, 3]
+
+    # fair: round-robin across masters' FIFO heads (least-admitted first)
+    fair.offer(10, master=0)
+    fair.offer(11, master=0)
+    fair.offer(20, master=1)
+    assert fair.candidates() == [10, 20, 11]
+    fair.remove(10)
+    fair.note_admitted(0)                       # master 0 got one admission
+    fair.offer(12, master=0)
+    assert fair.candidates()[0] == 20           # master 1 now least-admitted
+    # direct (queue-bypass) admissions count too
+    fair.note_admitted(1)
+    fair.note_admitted(1)
+    assert fair.candidates()[0] == 11           # master 0 least-admitted again
+
+
+def test_policy_backpressure_counts():
+    edf = make_admission_policy("edf", max_queue=2)
+    assert edf.offer(1, master=0) and edf.offer(2, master=0)
+    assert not edf.offer(3, master=0)
+    assert edf.rejected == 1
+    assert edf.offer(4, master=0, force=True)   # re-queued in-flight work
+    assert len(edf) == 3
+
+
+def test_maxmin_share_waterfill():
+    # two equal claimants split the column evenly
+    assert maxmin_share(1.0, 0.6, [0.6]) == pytest.approx(0.5)
+    # a small claimant releases its leftover to the big one
+    assert maxmin_share(1.0, 0.6, [0.2]) == pytest.approx(0.6)
+    # three claimants: fair line is 1/3
+    assert maxmin_share(1.0, 0.6, [0.6, 0.6]) == pytest.approx(1 / 3)
+    # never more than the demand
+    assert maxmin_share(1.0, 0.1, [0.5]) == pytest.approx(0.1)
+
+
+def test_fair_fraction_caps_contended_columns():
+    fair = FairShareAdmission()
+    k_req = np.array([1.0, 0.6, 0.0])
+    held = np.zeros(3)
+    other = np.array([0.0, 0.6, 0.0])
+    f = fair.fair_fraction(0, k_req, k_req, held=held, demands=[other])
+    assert f == pytest.approx(0.5 / 0.6)        # capped at the 0.5 fair share
+    # column 0 (the master's own processor) is never contended
+    k_local = np.array([1.0, 0.0, 0.0])
+    assert fair.fair_fraction(0, k_local, k_local, held=held,
+                              demands=[other]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# EDF vs FIFO on deadline misses
+# ---------------------------------------------------------------------------
+
+def _deadline_run(policy: str, seed: int):
+    """Saturated single master, mixed tight/loose deadlines, churn."""
+    sc = _scenario(M=1, N=4, L=64.0, seed=9)
+    rng = np.random.default_rng(seed)
+    n = 24
+    times = np.sort(rng.uniform(0.0, 120.0, size=n))
+    slack = rng.choice([160.0, 1200.0], size=n)   # tight vs loose
+    srcs = [TraceProcess(0, times, deadlines=list(times + slack))]
+    churn = [WorkerEvent(80.0, 2, "degrade", 3.0)]
+    ex = StreamingExecutor(
+        sc, srcs, policy="fractional", churn=churn, rng=seed,
+        admission=AdmissionConfig(min_fraction=0.9, policy=policy))
+    s = ex.run(max_tasks=n).summary()
+    assert s["tasks_completed"] == n, (policy, seed)
+    return s["deadline_miss_rate"]
+
+
+def test_edf_beats_fifo_on_deadline_miss_rate():
+    """Seeded churn sweep: EDF never loses to FIFO on miss rate and wins
+    in aggregate."""
+    miss_fifo, miss_edf = [], []
+    for seed in (1, 2, 3, 4, 5):
+        miss_fifo.append(_deadline_run("fifo", seed))
+        miss_edf.append(_deadline_run("edf", seed))
+    assert all(e <= f + 1e-9 for e, f in zip(miss_edf, miss_fifo)), \
+        (miss_edf, miss_fifo)
+    assert sum(miss_edf) < sum(miss_fifo), (miss_edf, miss_fifo)
+
+
+def test_unserved_expired_deadline_counts_as_miss():
+    """A starving run cannot look deadline-perfect: tasks still queued at
+    the end with finite deadlines count as misses."""
+    from repro.stream import StreamMetrics, TaskRecord
+    ms = StreamMetrics(1, 2)
+    done = TaskRecord(tid=0, master=0, t_arrive=0.0, deadline=100.0)
+    done.t_admit, done.t_complete = 1.0, 50.0
+    ms.record_task(done)
+    ms.record_unserved(TaskRecord(tid=1, master=0, t_arrive=0.0,
+                                  deadline=100.0))
+    assert ms.summary()["deadline_miss_rate"] == pytest.approx(0.5)
+
+
+def test_deadline_metric_plumbing():
+    """deadline_slack on a Poisson source lands in the records and the
+    summary; without deadlines the summary key is absent."""
+    sc = _scenario(M=2, N=8, L=48.0, seed=5)
+    srcs = [PoissonProcess(m, rate=0.01, seed=1, deadline_slack=3.0)
+            for m in range(sc.M)]
+    ex = StreamingExecutor(sc, srcs, rng=7)
+    ms = ex.run(max_tasks=30)
+    s = ms.summary()
+    assert "deadline_miss_rate" in s
+    for r in ms.to_records():
+        assert np.isfinite(r["deadline"]) and r["deadline"] > r["t_arrive"]
+    srcs2 = [PoissonProcess(m, rate=0.01, seed=1) for m in range(sc.M)]
+    s2 = StreamingExecutor(sc, srcs2, rng=7).run(max_tasks=30).summary()
+    assert "deadline_miss_rate" not in s2
+
+
+# ---------------------------------------------------------------------------
+# Max-min fair share policy through the engine
+# ---------------------------------------------------------------------------
+
+def test_fair_policy_respects_share_ledger():
+    """Bursty multi-master load under the fair policy: the column-sum ≤ 1
+    ledger constraint holds (utilization never exceeds 1, SharePool.acquire
+    never raised) and everything completes."""
+    sc = _scenario(M=3, N=6, L=48.0, seed=8)
+    srcs = [PoissonProcess(m, rate=0.05, seed=1) for m in range(sc.M)]
+    ex = StreamingExecutor(sc, srcs, policy="fractional", rng=2,
+                           admission=AdmissionConfig(policy="fair"))
+    ms = ex.run(max_tasks=60)
+    assert ms.summary()["tasks_completed"] == 60
+    assert ms.utilization().max() <= 1.0 + 1e-6
+    assert np.isfinite(ms.sojourns()).all()
+
+
+def test_fair_policy_avoids_cross_master_blocking():
+    """Master 0 floods the system; master 1's lone task must not wait for
+    the whole backlog under the fair policy (it does under FIFO)."""
+    sc = _scenario(M=2, N=4, L=64.0, seed=11)
+    times0 = [0.0] * 10
+    srcs = [TraceProcess(0, times0), TraceProcess(1, [1.0])]
+
+    def wait_of_master1(policy):
+        ex = StreamingExecutor(
+            sc, srcs_for(policy), policy="fractional", rng=3,
+            admission=AdmissionConfig(min_fraction=0.9, policy=policy))
+        ms = ex.run(max_tasks=11)
+        recs = [r for r in ms.to_records() if r["master"] == 1]
+        assert len(recs) == 1
+        return recs[0]["queue_wait"]
+
+    def srcs_for(policy):
+        return [TraceProcess(0, times0), TraceProcess(1, [1.0])]
+
+    w_fifo = wait_of_master1("fifo")
+    w_fair = wait_of_master1("fair")
+    assert w_fair < w_fifo, (w_fair, w_fifo)
+
+
+# ---------------------------------------------------------------------------
+# Speculative re-dispatch
+# ---------------------------------------------------------------------------
+
+def test_speculation_triggers_and_never_double_counts():
+    """Heavy degradation makes in-flight tasks slip; speculation races a
+    twin before any leave proves the original lost.  Every task completes
+    exactly once, with delivered ≥ needed rows."""
+    sc = _scenario(M=2, N=6, L=64.0, seed=13)
+    churn = [WorkerEvent(t, w, "degrade", 25.0)
+             for t in (40.0, 80.0, 120.0) for w in (1, 2, 3)]
+    srcs = [PoissonProcess(m, rate=0.02, seed=1) for m in range(sc.M)]
+    ex = StreamingExecutor(
+        sc, srcs, policy="fractional", churn=churn, rng=5,
+        admission=AdmissionConfig(speculate_factor=1.2))
+    ms = ex.run(max_tasks=30)
+    s = ms.summary()
+    assert s["tasks_completed"] == 30
+    assert s["speculations"] > 0
+    recs = ms.to_records()
+    tids = [r["tid"] for r in recs]
+    assert len(tids) == len(set(tids))          # one completion per task
+    assert any(r["speculated"] for r in recs)
+    for r in recs:
+        assert r["rows_delivered"] >= r["rows_needed"] - 1e-6, r
+    assert ms.utilization().max() <= 1.0 + 1e-6
+
+
+def test_speculation_improves_p99_under_degradation():
+    """The insurance pays: with heavy mid-flight slowdowns, racing a twin
+    lowers (or matches) tail sojourn on a fixed seed."""
+    sc = _scenario(M=2, N=6, L=64.0, seed=13)
+    churn = [WorkerEvent(t, w, "degrade", 25.0)
+             for t in (40.0, 80.0, 120.0) for w in (1, 2, 3)]
+
+    def p99(spec):
+        srcs = [PoissonProcess(m, rate=0.02, seed=1) for m in range(sc.M)]
+        ex = StreamingExecutor(
+            sc, srcs, policy="fractional", churn=churn, rng=5,
+            admission=AdmissionConfig(speculate_factor=spec))
+        return ex.run(max_tasks=30).summary()["sojourn_p99"]
+
+    assert p99(1.2) <= p99(None) * 1.01
+
+
+def test_speculation_with_leave_churn_survives():
+    """Speculation + worker death: whichever attempt survives finishes the
+    task; stale completions of cancelled attempts never finalize."""
+    sc = _scenario(M=1, N=4, L=64.0, seed=20)
+    srcs = [TraceProcess(0, [0.0, 1.0, 2.0, 3.0])]
+    churn = [WorkerEvent(10.0, 1, "degrade", 30.0),
+             WorkerEvent(30.0, 2, "leave"),
+             WorkerEvent(40.0, 1, "leave")]
+    ex = StreamingExecutor(
+        sc, srcs, policy="fractional", churn=churn, rng=1,
+        admission=AdmissionConfig(speculate_factor=1.1))
+    ms = ex.run(max_tasks=4)
+    recs = ms.to_records()
+    assert len(recs) == 4
+    for r in recs:
+        assert r["rows_delivered"] >= r["rows_needed"] - 1e-6, r
+        assert np.isfinite(r["t_complete"])
+
+
+def test_policy_runs_replay_deterministically():
+    """EDF + fair + speculation: same seed → identical records."""
+    sc = _scenario(M=2, N=6, L=48.0, seed=5)
+    churn = [WorkerEvent(100.0, 3, "degrade", 6.0)]
+
+    def run(policy):
+        srcs = [PoissonProcess(m, rate=0.02, seed=1, deadline_slack=2.0)
+                for m in range(sc.M)]
+        ex = StreamingExecutor(
+            sc, srcs, policy="fractional", churn=churn, rng=11,
+            admission=AdmissionConfig(policy=policy, speculate_factor=1.3))
+        return ex.run(max_tasks=40)
+
+    for policy in ("edf", "fair"):
+        a, b = run(policy), run(policy)
+        assert a.summary() == b.summary()
+        assert a.to_records() == b.to_records()

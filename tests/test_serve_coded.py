@@ -1,0 +1,180 @@
+"""Tests for the coded serving bridge: plan-scheduled real token
+generation with exact coded-head decode."""
+import numpy as np
+import pytest
+
+from repro.parallel.hetero import coded_row_shards
+from repro.serve_coded import (CodedLMHead, CodedServingBridge, ServeRequest,
+                               synthetic_requests)
+from repro.stream import AdmissionConfig, WorkerEvent
+
+jax = pytest.importorskip("jax")
+
+
+# ---------------------------------------------------------------------------
+# Shard sizing (parallel.hetero)
+# ---------------------------------------------------------------------------
+
+def test_coded_row_shards_covers_and_preserves_zeros():
+    l_row = np.array([10.4, 0.0, 7.2, 3.0, 0.0])
+    shards = coded_row_shards(l_row, 16)
+    assert shards.sum() >= 16
+    assert shards[1] == 0 and shards[4] == 0
+    assert (shards >= np.floor(l_row)).all()
+    # down-scaled loads below L get topped up over the participants
+    small = np.array([3.0, 2.0, 2.0])
+    top = coded_row_shards(small, 16)
+    assert top.sum() >= 16 and (top[small == 0] == 0).all()
+    with pytest.raises(ValueError):
+        coded_row_shards(np.zeros(3), 8)
+
+
+# ---------------------------------------------------------------------------
+# Coded head unit
+# ---------------------------------------------------------------------------
+
+def _head(L=32, D=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return CodedLMHead(rng.normal(size=(L, D)), seed=seed), rng
+
+
+def test_coded_head_systematic_prefix_exact():
+    head, rng = _head()
+    H = rng.normal(size=(3, 8))
+    l_int = np.array([8, 12, 12, 16, 16])       # Σ=64 ≥ L=32
+    finish = np.array([1.0, 2.0, 3.0, 4.0, 5.0])
+    res = head.step(H, l_int, finish, t_complete=3.0)
+    # nodes 0..2 hold the systematic rows 0..31 → scatter path, no solve
+    assert not res.used_solve
+    np.testing.assert_allclose(res.logits, H @ head.W.T, rtol=1e-10)
+
+
+def test_coded_head_parity_solve_exact():
+    head, rng = _head()
+    H = rng.normal(size=(2, 8))
+    l_int = np.array([8, 12, 12, 16, 16])
+    # the first systematic node is a straggler: parity rows fill the prefix
+    finish = np.array([99.0, 2.0, 3.0, 1.0, 4.0])
+    res = head.step(H, l_int, finish, t_complete=4.0)
+    assert res.used_solve
+    assert 0 not in res.workers_used
+    np.testing.assert_allclose(res.logits, H @ head.W.T, atol=1e-8)
+
+
+def test_coded_head_needs_coverage():
+    head, rng = _head()
+    H = rng.normal(size=(1, 8))
+    l_int = np.array([8, 12, 12, 16, 16])
+    finish = np.full(5, np.inf)
+    finish[0] = 1.0                              # only 8 of 32 rows arrive
+    with pytest.raises(RuntimeError):
+        head.step(H, l_int, finish, t_complete=10.0)
+
+
+# ---------------------------------------------------------------------------
+# The bridge end-to-end
+# ---------------------------------------------------------------------------
+
+def _serve(policy="edf", n=6, gen=3, seed=0, churn=(), slots=2):
+    bridge = CodedServingBridge(
+        masters=2, seed=seed, slots_per_master=slots,
+        admission=AdmissionConfig(policy=policy))
+    bridge._setup_model(16 + gen + 8)
+    reqs = synthetic_requests(
+        n, masters=2, vocab=bridge._model["cfg"].vocab, prompt_len=16,
+        gen_len=gen, rate=0.02, seed=seed)
+    return bridge.serve(reqs, churn=churn)
+
+
+def test_bridge_smoke_all_policies_decode_exact():
+    """Every policy serves the workload; every token batch decodes to the
+    uncoded forward pass; every request finishes with all tokens."""
+    for policy in ("fifo", "edf", "fair"):
+        rep = _serve(policy=policy)
+        assert rep.decode_ok, (policy, rep.max_err, rep.argmax_match_rate)
+        assert rep.argmax_match_rate == 1.0
+        assert rep.max_err < 1e-6
+        s = rep.summary()
+        assert s["tasks_completed"] == 6
+        assert s["tasks_unserved"] == 0
+        assert rep.tokens_generated == 6 * 3
+        assert len(rep.steps) > 0                  # plan-scheduled batches
+        for toks in rep.tokens.values():
+            assert len(toks) == 3
+        # the share ledger held across concurrent tenant steps
+        assert rep.metrics.utilization().max() <= 1.0 + 1e-6
+
+
+def test_bridge_survives_churn():
+    churn = [WorkerEvent(100.0, 2, "degrade", 4.0),
+             WorkerEvent(300.0, 5, "leave"),
+             WorkerEvent(2500.0, 5, "join")]
+    rep = _serve(policy="fair", n=8, gen=3, churn=churn)
+    assert rep.decode_ok
+    assert rep.summary()["tasks_completed"] == 8
+    assert rep.summary()["replans"] >= 2
+
+
+def test_bridge_deterministic_replay():
+    a = _serve(policy="edf", n=6, gen=3, seed=4)
+    b = _serve(policy="edf", n=6, gen=3, seed=4)
+    assert a.tokens == b.tokens
+    assert a.metrics.summary() == b.metrics.summary()
+    assert a.steps == b.steps
+
+
+def test_bridge_reuse_grows_caches_for_longer_requests():
+    """A second serve() with longer prompts/generations must regrow the KV
+    caches (sized by the first call) instead of silently clamping writes."""
+    bridge = CodedServingBridge(masters=2, seed=0, slots_per_master=2,
+                                admission=AdmissionConfig(policy="fifo"))
+    bridge._setup_model(16 + 2 + 8)
+    vocab = bridge._model["cfg"].vocab
+    short = synthetic_requests(4, masters=2, vocab=vocab, prompt_len=16,
+                               gen_len=2, rate=0.02, seed=0)
+    rep1 = bridge.serve(short)
+    assert rep1.decode_ok
+    longer = synthetic_requests(4, masters=2, vocab=vocab, prompt_len=40,
+                                gen_len=6, rate=0.02, seed=1)
+    rep2 = bridge.serve(longer)
+    assert rep2.decode_ok
+    assert rep2.tokens_generated == 4 * 6
+    # and the regrown run matches a fresh bridge with the same workload
+    fresh = CodedServingBridge(masters=2, seed=0, slots_per_master=2,
+                               admission=AdmissionConfig(policy="fifo"))
+    fresh._setup_model(40 + 6 + 8)
+    rep3 = fresh.serve(synthetic_requests(4, masters=2, vocab=vocab,
+                                          prompt_len=40, gen_len=6,
+                                          rate=0.02, seed=1))
+    assert rep2.tokens == rep3.tokens
+
+
+def test_bridge_verify_off_still_generates():
+    bridge = CodedServingBridge(masters=2, seed=0, slots_per_master=2,
+                                verify=False,
+                                admission=AdmissionConfig(policy="edf"))
+    bridge._setup_model(16 + 3 + 8)
+    reqs = synthetic_requests(4, masters=2, vocab=bridge._model["cfg"].vocab,
+                              prompt_len=16, gen_len=3, rate=0.02, seed=0)
+    rep = bridge.serve(reqs)
+    assert rep.decode_ok is None and np.isnan(rep.max_err)
+    assert rep.tokens_generated == 4 * 3
+    # tokens come from the decoded coded logits either way: same seed with
+    # verification on produces the identical sequences
+    on = CodedServingBridge(masters=2, seed=0, slots_per_master=2,
+                            admission=AdmissionConfig(policy="edf"))
+    on._setup_model(16 + 3 + 8)
+    rep_on = on.serve(synthetic_requests(
+        4, masters=2, vocab=bridge._model["cfg"].vocab, prompt_len=16,
+        gen_len=3, rate=0.02, seed=0))
+    assert rep.tokens == rep_on.tokens
+
+
+def test_bridge_deadlines_feed_edf():
+    """Requests carry deadlines derived from the plan's per-token time;
+    the summary reports a miss rate when deadlines are finite."""
+    rep = _serve(policy="edf", n=8, gen=3, slots=1)
+    s = rep.summary()
+    assert "deadline_miss_rate" in s
+    for rec in rep.metrics.completed:
+        assert np.isfinite(rec.deadline)
