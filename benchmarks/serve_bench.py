@@ -1,4 +1,5 @@
-"""Coded serving benchmark: admission policies vs the FIFO baseline.
+"""Coded serving benchmark: admission policies vs the FIFO baseline, and
+coding scopes vs head-only.
 
 Serves one seeded contended workload (more requests than batch slots,
 mixed tight/loose deadlines, mid-run churn) through the coded serving
@@ -7,9 +8,16 @@ wall clock), p50/p99 request sojourn and the deadline-miss rate into
 ``BENCH_serve.json`` (env knob ``REPRO_BENCH_SERVE_JSON``), with the
 EDF/fair numbers expressed relative to FIFO.
 
+A second sweep serves the same workload once per ``coding_scope``
+(head | ffn | trunk, default pool, EDF) — per-scope tokens/s rows with
+the trunk scope's throughput expressed relative to head-only (the deeper
+scopes turn one step into 7/15 concurrent per-layer coded tasks; the
+barrier completes at their max, so the slowdown is bounded by the
+per-task delay tail, not the task count).
+
     PYTHONPATH=src python -m benchmarks.serve_bench \
         [--requests 24] [--gen-len 8] [--slots 2] [--rate 0.02] \
-        [--backend numpy] [--seed 0]
+        [--backend numpy] [--steps-per-dispatch 1] [--seed 0]
 """
 from __future__ import annotations
 
@@ -17,45 +25,73 @@ import argparse
 import json
 import os
 
-from repro.serve_coded import (CodedServingBridge, serve_policy_sweep,
-                               synthetic_requests)
-from repro.stream import WorkerEvent
+from repro.serve_coded import (CODING_SCOPES, CodedServingBridge,
+                               serve_policy_sweep, synthetic_requests)
+from repro.stream import AdmissionConfig, WorkerEvent
 
 from .common import emit
 
 POLICIES = ("fifo", "edf", "fair")
 
 
+def _report_row(rep) -> dict:
+    s = rep.summary()
+    return {
+        "tokens_per_sim_second": round(s["tokens_per_sim_second"], 2),
+        "tokens_per_wall_second": round(s["tokens_per_wall_second"], 1),
+        "p50_sojourn_ms": round(s.get("sojourn_p50", float("nan")), 1),
+        "p99_sojourn_ms": round(s.get("sojourn_p99", float("nan")), 1),
+        "deadline_miss_rate": round(s.get("deadline_miss_rate", 0.0), 4),
+        "coded_steps": int(s["coded_steps"]),
+        "solve_steps": int(s["solve_steps"]),
+        "decode_max_err": rep.max_err,
+        "wall_seconds": round(rep.wall_seconds, 3),
+    }
+
+
 def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
                     slots: int = 2, rate: float = 0.02, prompt_len: int = 16,
-                    backend: str = "numpy", seed: int = 0,
-                    json_path: str | None = None) -> dict:
+                    backend: str = "numpy", steps_per_dispatch: int = 1,
+                    seed: int = 0, json_path: str | None = None) -> dict:
     churn = [WorkerEvent(400.0, 2, "degrade", 4.0),
              WorkerEvent(1500.0, 5, "leave"),
              WorkerEvent(6000.0, 5, "join"),
              WorkerEvent(8000.0, 2, "restore")]
     per_policy = {}
     bridge = CodedServingBridge(masters=masters, backend=backend, seed=seed,
-                                slots_per_master=slots)
+                                slots_per_master=slots,
+                                steps_per_dispatch=steps_per_dispatch)
     bridge._setup_model(prompt_len + gen_len + 8)
     reqs = synthetic_requests(
         requests, masters=masters, vocab=bridge._model["cfg"].vocab,
         prompt_len=prompt_len, gen_len=gen_len, rate=rate, seed=seed)
     reports = serve_policy_sweep(bridge, reqs, POLICIES, churn=churn)
     for policy, rep in reports.items():
-        s = rep.summary()
-        per_policy[policy] = {
-            "tokens_per_sim_second": round(s["tokens_per_sim_second"], 2),
-            "tokens_per_wall_second": round(s["tokens_per_wall_second"], 1),
-            "p50_sojourn_ms": round(s.get("sojourn_p50", float("nan")), 1),
-            "p99_sojourn_ms": round(s.get("sojourn_p99", float("nan")), 1),
-            "deadline_miss_rate": round(s.get("deadline_miss_rate", 0.0), 4),
-            "coded_steps": int(s["coded_steps"]),
-            "solve_steps": int(s["solve_steps"]),
-            "decode_max_err": rep.max_err,
-            "wall_seconds": round(rep.wall_seconds, 3),
-        }
+        per_policy[policy] = _report_row(rep)
+
+    # scope sweep: same workload, same pool, EDF, one bridge per scope.
+    # The head row *is* the policy sweep's EDF run (same bridge config) —
+    # reuse it instead of re-serving.
+    per_scope = {}
+    for scope in CODING_SCOPES:
+        if scope == "head":
+            srep = reports["edf"]
+        else:
+            sbridge = CodedServingBridge(
+                masters=masters, backend=backend, seed=seed,
+                slots_per_master=slots, coding_scope=scope,
+                steps_per_dispatch=steps_per_dispatch,
+                admission=AdmissionConfig(policy="edf"))
+            sbridge._setup_model(prompt_len + gen_len + 8)
+            srep = sbridge.serve(reqs, churn=churn)
+        assert srep.decode_ok, (scope, srep.max_err)
+        row = _report_row(srep)
+        row["tasks_per_step"] = \
+            int(srep.steps[0]["n_tasks"]) if srep.steps else 0
+        per_scope[scope] = row
+
     base = per_policy["fifo"]
+    head = per_scope["head"]
     record = {
         "bench": "coded_serving_policies",
         "requests": requests,
@@ -63,6 +99,7 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
         "masters": masters,
         "slots_per_master": slots,
         "backend": backend,
+        "steps_per_dispatch": steps_per_dispatch,
         "baseline": "fifo",
         "policies": per_policy,
         "edf_miss_vs_fifo": round(
@@ -71,6 +108,10 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
         "fair_throughput_vs_fifo": round(
             per_policy["fair"]["tokens_per_sim_second"]
             / max(base["tokens_per_sim_second"], 1e-12), 3),
+        "scopes": per_scope,
+        "trunk_throughput_vs_head": round(
+            per_scope["trunk"]["tokens_per_sim_second"]
+            / max(head["tokens_per_sim_second"], 1e-12), 3),
     }
     path = json_path or os.environ.get("REPRO_BENCH_SERVE_JSON",
                                        "BENCH_serve.json")
@@ -81,6 +122,7 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
          f"fifo_tok_per_sim_s={base['tokens_per_sim_second']};"
          f"edf_miss_vs_fifo={record['edf_miss_vs_fifo']};"
          f"fair_throughput_vs_fifo={record['fair_throughput_vs_fifo']};"
+         f"trunk_vs_head={record['trunk_throughput_vs_head']};"
          f"json={path}")
     return record
 
@@ -94,11 +136,14 @@ def main(argv=None):
     p.add_argument("--rate", type=float, default=0.02)
     p.add_argument("--backend", default="numpy",
                    choices=("numpy", "jax", "pallas"))
+    p.add_argument("--steps-per-dispatch", type=int, default=1)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
     run_serve_bench(requests=args.requests, gen_len=args.gen_len,
                     masters=args.masters, slots=args.slots, rate=args.rate,
-                    backend=args.backend, seed=args.seed)
+                    backend=args.backend,
+                    steps_per_dispatch=args.steps_per_dispatch,
+                    seed=args.seed)
 
 
 if __name__ == "__main__":

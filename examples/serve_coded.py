@@ -1,18 +1,22 @@
 """Coded serving bridge demo: the StreamingExecutor plan as the admission/
 batching policy of a real continuous-batching inference server.
 
-Every generated token batch's output-head matmul runs as MDS-coded shards
+Every generated token batch's large matmuls run as MDS-coded shards
 across a heterogeneous EC2-fitted worker pool, sized by the paper's
 Theorem-1/3 load allocation and admitted through the shared-worker ledger;
-decoded logits are verified exact against the uncoded forward pass.  The
-same seeded workload (two tenants, mixed tight/loose deadlines, mid-run
-worker degradation + death) is served under all three admission policies
-so the columns are directly comparable.
+decoded outputs are verified exact against the uncoded pipeline.
+``--coding-scope`` picks how deep the coding reaches (the output head
+only, +FFN projections, or the full trunk incl. attention q/k/v/o), and
+``--steps-per-dispatch`` batches several decode tokens per admission.
+The same seeded workload (two tenants, mixed tight/loose deadlines,
+mid-run worker degradation + death) is served under all three admission
+policies so the columns are directly comparable.
 
     PYTHONPATH=src python examples/serve_coded.py \
         [--arch llama3.2-1b] [--requests 16] [--prompt-len 16] \
         [--gen-len 8] [--masters 2] [--slots 2] [--rate 0.02] \
-        [--policies fifo,edf,fair] [--backend numpy|jax|pallas] [--seed 0]
+        [--policies fifo,edf,fair] [--coding-scope head|ffn|trunk] \
+        [--steps-per-dispatch 1] [--backend numpy|jax|pallas] [--seed 0]
 """
 import argparse
 import sys
@@ -34,6 +38,12 @@ def main(argv=None) -> int:
     ap.add_argument("--rate", type=float, default=0.02,
                     help="per-master arrival rate (requests per sim-ms)")
     ap.add_argument("--policies", default="fifo,edf,fair")
+    ap.add_argument("--coding-scope", default="head",
+                    choices=("head", "ffn", "trunk"),
+                    help="code the output head only, +FFN projections, or "
+                         "the full trunk (attention q/k/v/o too)")
+    ap.add_argument("--steps-per-dispatch", type=int, default=1,
+                    help="decode tokens generated per coded admission")
     ap.add_argument("--backend", default="numpy",
                     choices=("numpy", "jax", "pallas"))
     ap.add_argument("--seed", type=int, default=0)
@@ -51,10 +61,14 @@ def main(argv=None) -> int:
 
     print(f"[demo] {args.requests} requests x {args.gen_len} tokens, "
           f"{args.masters} tenants, {args.slots} slots/tenant, "
+          f"scope={args.coding_scope}, "
+          f"steps/dispatch={args.steps_per_dispatch}, "
           f"churn={'on' if churn else 'off'}")
     bridge = CodedServingBridge(
         masters=args.masters, arch=args.arch, backend=args.backend,
-        seed=args.seed, slots_per_master=args.slots)
+        seed=args.seed, slots_per_master=args.slots,
+        coding_scope=args.coding_scope,
+        steps_per_dispatch=args.steps_per_dispatch)
     bridge._setup_model(args.prompt_len + args.gen_len + 8)
     reqs = synthetic_requests(
         args.requests, masters=args.masters,
@@ -62,9 +76,9 @@ def main(argv=None) -> int:
         gen_len=args.gen_len, rate=args.rate, seed=args.seed)
     reports = serve_policy_sweep(bridge, reqs, policies, churn=churn)
     print_policy_table(reports)
-    print("(sojourn in sim-ms; every token batch was scheduled by a "
+    print("(sojourn in sim-ms; every coded matmul was scheduled by a "
           "StreamingExecutor plan and decode-verified against the uncoded "
-          "forward pass)")
+          "pipeline)")
     return 0
 
 

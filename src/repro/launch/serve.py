@@ -8,13 +8,16 @@ shared jitted decode step and per-request completion, reporting throughput
 and verifying the decode path against the full forward pass.
 
 With ``--coded`` the same model is served through the coded-computation
-bridge (:mod:`repro.serve_coded`): the output-head matmul of every token
-batch is MDS-encoded and executed as per-worker shards scheduled by the
+bridge (:mod:`repro.serve_coded`): per ``--coding-scope`` the output-head
+matmul (``head``), the FFN up/down projections too (``ffn``), or the whole
+trunk including attention q/k/v/o (``trunk``) of every token batch is
+MDS-encoded and executed as per-worker shards scheduled by the
 ``StreamingExecutor`` plan, with ``--policy fifo|edf|fair`` picking the
-admission policy:
+admission policy and ``--steps-per-dispatch`` batching several decode
+tokens per admission:
 
     PYTHONPATH=src python -m repro.launch.serve --coded --policy edf \
-        --requests 12 --gen-len 8
+        --coding-scope trunk --requests 12 --gen-len 8
 
 The building blocks (``build_model`` / ``serving_fns`` / ``zero_caches`` /
 ``head_matrix``) are shared with the bridge so both paths serve the exact
@@ -32,28 +35,47 @@ __all__ = ["build_model", "serving_fns", "zero_caches", "head_matrix",
            "main"]
 
 
+_MODEL_CACHE: dict = {}
+
+
 def build_model(arch: str, *, smoke: bool = True, seed: int = 0):
-    """Config + initialised parameters for ``arch`` (smoke-sized or full)."""
-    import jax
-    from repro.configs import get_config, get_smoke_config
-    from repro.models import init_model
-    cfg = get_smoke_config(arch) if smoke else get_config(arch)
-    params = init_model(jax.random.PRNGKey(seed), cfg)
-    return cfg, params
+    """Config + initialised parameters for ``arch`` (smoke-sized or full).
+
+    Memoised per (arch, smoke, seed): init is deterministic and params are
+    treated as read-only everywhere, so repeated bridge/test construction
+    shares one copy instead of re-initialising the model."""
+    key = (arch, bool(smoke), int(seed))
+    if key not in _MODEL_CACHE:
+        import jax
+        from repro.configs import get_config, get_smoke_config
+        from repro.models import init_model
+        cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        params = init_model(jax.random.PRNGKey(seed), cfg)
+        _MODEL_CACHE[key] = (cfg, params)
+    return _MODEL_CACHE[key]
 
 
 def serving_fns(cfg, *, return_hidden: bool = False):
     """Jitted (prefill_fn, decode_fn) closures over ``cfg``.
 
     ``return_hidden`` threads the final-norm hidden states out of both —
-    the input the coded output head distributes across workers."""
-    import jax
-    from repro.models import decode_step, prefill
-    prefill_fn = jax.jit(lambda p, b, c: prefill(
-        p, b, c, cfg=cfg, return_hidden=return_hidden))
-    decode_fn = jax.jit(lambda p, t, pos, c: decode_step(
-        p, t, pos, c, cfg=cfg, return_hidden=return_hidden))
-    return prefill_fn, decode_fn
+    the input the coded output head distributes across workers.  Memoised
+    per (cfg, return_hidden): ArchConfig is a frozen dataclass, so repeated
+    bridge construction reuses the compiled functions instead of
+    re-tracing."""
+    key = (cfg, bool(return_hidden))
+    if key not in _FNS_CACHE:
+        import jax
+        from repro.models import decode_step, prefill
+        prefill_fn = jax.jit(lambda p, b, c: prefill(
+            p, b, c, cfg=cfg, return_hidden=return_hidden))
+        decode_fn = jax.jit(lambda p, t, pos, c: decode_step(
+            p, t, pos, c, cfg=cfg, return_hidden=return_hidden))
+        _FNS_CACHE[key] = (prefill_fn, decode_fn)
+    return _FNS_CACHE[key]
+
+
+_FNS_CACHE: dict = {}
 
 
 def zero_caches(cfg, batch: int, max_len: int):
@@ -91,6 +113,14 @@ def main(argv=None) -> int:
     ap.add_argument("--policy", default="edf",
                     choices=("fifo", "edf", "fair"),
                     help="admission policy for --coded serving")
+    ap.add_argument("--coding-scope", default="head",
+                    choices=("head", "ffn", "trunk"),
+                    help="which matmuls run coded: the output head only, "
+                         "+FFN up/down, or the full trunk incl. attention "
+                         "q/k/v/o (--coded serving)")
+    ap.add_argument("--steps-per-dispatch", type=int, default=1,
+                    help="decode tokens generated per coded admission "
+                         "(--coded serving)")
     args = ap.parse_args(argv)
 
     if args.coded:
@@ -99,7 +129,9 @@ def main(argv=None) -> int:
                                policies=(args.policy,),
                                n_requests=args.requests,
                                prompt_len=args.prompt_len,
-                               gen_len=args.gen_len, seed=args.seed)
+                               gen_len=args.gen_len, seed=args.seed,
+                               coding_scope=args.coding_scope,
+                               steps_per_dispatch=args.steps_per_dispatch)
 
     import jax
     import jax.numpy as jnp

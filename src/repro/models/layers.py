@@ -10,7 +10,21 @@ import jax.numpy as jnp
 from .config import ArchConfig
 
 __all__ = ["rms_norm", "init_rms", "init_ffn", "apply_ffn",
-           "init_embedding", "embed", "logits"]
+           "ffn_weight_names", "init_embedding", "embed", "logits"]
+
+
+def ffn_weight_names(act: str) -> tuple:
+    """The dense-FFN weight matrices of ``act``, in application order.
+
+    This is the layout contract between :func:`init_ffn`/:func:`apply_ffn`
+    and consumers that re-execute the matmuls elsewhere (the coded serving
+    bridge row-shards each of these across workers under
+    ``coding_scope="ffn"``/``"trunk"``)."""
+    if act == "swiglu":
+        return ("w_in", "w_gate", "w_out")
+    if act in ("gelu", "relu2"):
+        return ("w_in", "w_out")
+    raise ValueError(act)
 
 
 def init_rms(d: int, dtype) -> jnp.ndarray:

@@ -177,28 +177,43 @@ def _apply_layer(p: dict, x, *, cfg: ArchConfig, spec: LayerSpec,
 
 
 def _run_stack(params, x, *, cfg: ArchConfig, specs, stacked, ctx: ModelCtx,
-               positions=None, caches=None, enc_out=None):
-    """Run ``prefix`` (list of layer params) or scanned ``blocks``."""
+               positions=None, caches=None, enc_out=None,
+               collect_layers: bool = False):
+    """Run ``prefix`` (list of layer params) or scanned ``blocks``.
+
+    ``collect_layers`` additionally threads each layer's post-residual
+    hidden state out of the stack — a list of (B, T, d) arrays for the
+    unstacked prefix, a (n_repeats, len(specs), B, T, d) array for the
+    scanned blocks (the scan's ``ys`` output) — so callers can compare an
+    external re-execution of the trunk layer by layer."""
     if not stacked:
         new_caches = []
+        hiddens = []
         for i, (p, spec) in enumerate(zip(params, specs)):
             c = caches[i] if caches is not None else None
             x, nc = _apply_layer(p, x, cfg=cfg, spec=spec, ctx=ctx,
                                  positions=positions, cache=c,
                                  enc_out=enc_out)
             new_caches.append(nc)
+            hiddens.append(x)
+        if collect_layers:
+            return x, new_caches, hiddens
         return x, new_caches
 
     def body(carry, xs):
         h = carry
         block_params, block_cache = xs
         new_block_cache = {}
+        layer_h = []
         for i, spec in enumerate(specs):
             c = block_cache.get(f"layer{i}") if block_cache else None
             h, nc = _apply_layer(block_params[f"layer{i}"], h, cfg=cfg,
                                  spec=spec, ctx=ctx, positions=positions,
                                  cache=c, enc_out=enc_out)
             new_block_cache[f"layer{i}"] = nc
+            layer_h.append(h)
+        if collect_layers:
+            return h, (new_block_cache, jnp.stack(layer_h))
         return h, new_block_cache
 
     if caches is None:
@@ -208,9 +223,12 @@ def _run_stack(params, x, *, cfg: ArchConfig, specs, stacked, ctx: ModelCtx,
                 policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
         else:
             body = jax.checkpoint(body)
-    x, new_caches = jax.lax.scan(
+    x, ys = jax.lax.scan(
         body, x, (params, caches if caches is not None else {}))
-    return x, new_caches
+    if collect_layers:
+        new_caches, hiddens = ys
+        return x, new_caches, hiddens
+    return x, ys
 
 
 # ---------------------------------------------------------------------------
@@ -225,20 +243,36 @@ def _encoder(params, feats, *, cfg: ArchConfig, ctx: ModelCtx):
 
 
 def _trunk(params, x, *, cfg: ArchConfig, ctx: ModelCtx, positions=None,
-           caches=None, enc_out=None):
+           caches=None, enc_out=None, collect_layers: bool = False):
+    """``collect_layers`` returns a third output: every layer's
+    post-residual hidden state, flattened into one list over prefix +
+    repeated-block layers (each entry (B, T, d), *before* the final
+    norm)."""
     new_caches = {}
+    layer_h = []
     if cfg.prefix:
-        x, nc = _run_stack(params["prefix"], x, cfg=cfg, specs=cfg.prefix,
-                           stacked=False, positions=positions, ctx=ctx,
-                           caches=caches.get("prefix") if caches else None,
-                           enc_out=enc_out)
+        out = _run_stack(params["prefix"], x, cfg=cfg, specs=cfg.prefix,
+                         stacked=False, positions=positions, ctx=ctx,
+                         caches=caches.get("prefix") if caches else None,
+                         enc_out=enc_out, collect_layers=collect_layers)
+        x, nc = out[0], out[1]
+        if collect_layers:
+            layer_h.extend(out[2])
         new_caches["prefix"] = nc
-    x, nc = _run_stack(params["blocks"], x, cfg=cfg, specs=cfg.block,
-                       stacked=True, positions=positions, ctx=ctx,
-                       caches=caches.get("blocks") if caches else None,
-                       enc_out=enc_out)
+    out = _run_stack(params["blocks"], x, cfg=cfg, specs=cfg.block,
+                     stacked=True, positions=positions, ctx=ctx,
+                     caches=caches.get("blocks") if caches else None,
+                     enc_out=enc_out, collect_layers=collect_layers)
+    x, nc = out[0], out[1]
     new_caches["blocks"] = nc
-    return ly.rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches
+    x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if collect_layers:
+        stacked_h = out[2]           # (n_repeats, n_specs, B, T, d)
+        for r in range(stacked_h.shape[0]):
+            for i in range(stacked_h.shape[1]):
+                layer_h.append(stacked_h[r, i])
+        return x, new_caches, layer_h
+    return x, new_caches
 
 
 def model_fwd(params, batch: Dict[str, jnp.ndarray], *, cfg: ArchConfig,
@@ -312,13 +346,20 @@ def init_cache_shapes(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def prefill(params, batch, caches, *, cfg: ArchConfig,
-            ctx: ModelCtx = ModelCtx(), return_hidden: bool = False):
+            ctx: ModelCtx = ModelCtx(), return_hidden: bool = False,
+            collect_layers: bool = False):
     """Process the prompt, fill the cache, return last-position logits.
 
     ``return_hidden`` additionally returns the final-norm hidden state of
     the last position (B, 1, d_model) — the input of the output-head
     matmul, which coded serving executes as a distributed MDS-coded
-    product instead of the local ``ly.logits`` contraction."""
+    product instead of the local ``ly.logits`` contraction.
+
+    ``collect_layers`` appends one more output: the list of *per-layer*
+    post-residual hidden states (B, T, d_model) — the activations feeding
+    each layer's q/k/v/o and FFN matmuls, which ``coding_scope="trunk"``
+    serving distributes too (and which its tests compare layer by
+    layer)."""
     tokens = batch["tokens"]
     B, T = tokens.shape
     x = sharded_embed(params["embed"]["tok"], tokens, ctx.mesh,
@@ -327,31 +368,42 @@ def prefill(params, batch, caches, *, cfg: ArchConfig,
     if cfg.enc_dec:
         enc_out = _encoder(params, batch["enc_feats"], cfg=cfg, ctx=ctx)
     positions = jnp.broadcast_to(jnp.arange(T), (B, T))
-    x, new_caches = _trunk(params, x, cfg=cfg, ctx=ctx, positions=positions,
-                           caches=caches, enc_out=enc_out)
+    out = _trunk(params, x, cfg=cfg, ctx=ctx, positions=positions,
+                 caches=caches, enc_out=enc_out,
+                 collect_layers=collect_layers)
+    x, new_caches = out[0], out[1]
     hidden = x[:, -1:]
     logits = ly.logits(params["embed"], hidden,
                        dataclasses.replace(cfg, vocab=padded_vocab(cfg)))
+    result = (logits, new_caches)
     if return_hidden:
-        return logits, new_caches, hidden
-    return logits, new_caches
+        result += (hidden,)
+    if collect_layers:
+        result += (out[2],)
+    return result
 
 
 def decode_step(params, tokens, pos, caches, *, cfg: ArchConfig,
                 ctx: ModelCtx = ModelCtx(), enc_out=None,
-                return_hidden: bool = False):
+                return_hidden: bool = False, collect_layers: bool = False):
     """One decode step.  tokens (B, 1), pos (B,) absolute positions.
 
     ``return_hidden`` additionally returns the final-norm hidden state
-    (B, 1, d_model) feeding the output head (see :func:`prefill`)."""
+    (B, 1, d_model) feeding the output head; ``collect_layers`` the
+    per-layer hidden states (see :func:`prefill`)."""
     B = tokens.shape[0]
     x = sharded_embed(params["embed"]["tok"], tokens, ctx.mesh,
                       ctx.model_axis)
     positions = pos[:, None]
-    x, new_caches = _trunk(params, x, cfg=cfg, ctx=ctx, positions=positions,
-                           caches=caches, enc_out=enc_out)
+    out = _trunk(params, x, cfg=cfg, ctx=ctx, positions=positions,
+                 caches=caches, enc_out=enc_out,
+                 collect_layers=collect_layers)
+    x, new_caches = out[0], out[1]
     logits = ly.logits(params["embed"], x,
                        dataclasses.replace(cfg, vocab=padded_vocab(cfg)))
+    result = (logits, new_caches)
     if return_hidden:
-        return logits, new_caches, x
-    return logits, new_caches
+        result += (x,)
+    if collect_layers:
+        result += (out[2],)
+    return result

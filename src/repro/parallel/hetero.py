@@ -25,7 +25,7 @@ from ..core.allocation import markov_loads
 from ..sim.cluster import ClusterProfile
 
 __all__ = ["hetero_split", "replan_on_failure", "coded_batch_plan",
-           "coded_row_shards"]
+           "coded_row_shards", "rescaled_row_shards"]
 
 
 def _theta_of_profile(profile: ClusterProfile) -> np.ndarray:
@@ -62,6 +62,26 @@ def coded_row_shards(l_row: np.ndarray, L: int) -> np.ndarray:
         top_up = _largest_remainder_round(l_row[active], deficit)
         shards[active] += top_up
     return shards
+
+
+def rescaled_row_shards(l_row: np.ndarray, L_plan: float,
+                        L_mat: int) -> np.ndarray:
+    """Shard an ``L_mat``-row coded matrix by a load row planned for
+    ``L_plan`` rows.
+
+    The serving planner solves one Scenario (L = the padded vocabulary,
+    the output head's row count), but per-layer coding distributes many
+    weight matrices of different heights (d_ff, d_model, n_heads×d_head).
+    The Theorem-1/3 load row fixes the per-worker *proportions* and the
+    redundancy ratio — both scale-free (Kim et al. 2019's heterogeneous
+    allocation is per unit row) — so a matrix of ``L_mat`` rows reuses the
+    row scaled by ``L_mat / L_plan`` and integerised the usual way.
+    """
+    l_row = np.asarray(l_row, dtype=np.float64)
+    if L_plan <= 0:
+        raise ValueError("L_plan must be positive")
+    return coded_row_shards(l_row * (float(L_mat) / float(L_plan)),
+                            int(L_mat))
 
 
 def hetero_split(profile: ClusterProfile, global_batch: int) -> np.ndarray:

@@ -228,8 +228,12 @@ class CodedExecutor:
             else:
                 y_sel = self._encode_products_dev(group)
             rows = np.stack([p.rows_L for p in group])
+            # "prefix" (scatter fast path only, full solve for mixed tasks)
+            # keeps the bit-for-bit contract with the legacy _run_loop's
+            # per-task mds.decode; the mixed-row substitution path is for
+            # the streaming/serving decoders, which verify by tolerance.
             y_hat = decode_batch(
-                [p.G for p in group], rows, y_sel,
+                [p.G for p in group], rows, y_sel, systematic="prefix",
                 backend="numpy" if self.backend == "numpy" else "jax")
             for i, p in enumerate(group):
                 truth = p.A @ p.x

@@ -1,24 +1,31 @@
 """repro.serve_coded — coded computation as the inference server's policy.
 
 The bridge (:class:`CodedServingBridge`) serves real prefill/decode token
-generation (``repro.launch.serve`` model stack) where every token batch's
-output-head matmul is an MDS-coded task planned by the streaming machinery
+generation (``repro.launch.serve`` model stack) where the large matmuls of
+every token batch are MDS-coded tasks planned by the streaming machinery
 (``repro.stream``): the OnlinePlanner's (k, b, l) allocation picks the
 worker shards, the SharePool enforces the paper's column-sum ≤ 1 ledger
 across tenants' concurrent steps, and a pluggable admission policy
 ("fifo" | "edf" | "fair") arbitrates which waiting requests join a batch.
-Decoded logits are exact — greedy tokens match the uncoded forward pass.
+``coding_scope`` picks how deep the coding reaches — the output head
+("head"), plus the FFN up/down projections ("ffn"), or the whole trunk
+including attention q/k/v/o ("trunk") — and decoded outputs are exact:
+greedy tokens are bit-identical to the uncoded pipeline at every scope.
 
 See ``src/repro/stream/README.md`` (serving-bridge section) for the
-architecture and the admission-policy selection table.
+architecture, the coding-scope table and the admission-policy table.
 """
-from .bridge import CodedServingBridge, ServeReport, default_pool
+from .bridge import (CODING_SCOPES, CodedServingBridge, ServeReport,
+                     default_pool)
 from .coded_head import CodedLMHead, HeadStep
+from .coded_linear import CodedLinear, LinearStep
 from .requests import ServeRequest, synthetic_requests
+from .trunk import HostTrunk, trunk_matmul_keys
 
 __all__ = [
-    "CodedServingBridge", "ServeReport", "default_pool",
-    "CodedLMHead", "HeadStep",
+    "CodedServingBridge", "ServeReport", "default_pool", "CODING_SCOPES",
+    "CodedLMHead", "HeadStep", "CodedLinear", "LinearStep",
+    "HostTrunk", "trunk_matmul_keys",
     "ServeRequest", "synthetic_requests",
     "serve_policy_sweep", "print_policy_table", "run_coded_smoke",
 ]
@@ -28,11 +35,11 @@ def serve_policy_sweep(bridge: CodedServingBridge, requests, policies,
                        churn=()):
     """Serve the same workload once per admission policy on one bridge.
 
-    The model, jitted step functions and encoded head are
+    The model, jitted step functions and encoded layers are
     policy-independent, so only the admission config swaps between runs —
     the columns of the resulting reports are directly comparable.  With the
     bridge's ``verify`` on (numpy backend), each run is asserted to decode
-    every token batch to the uncoded forward pass.
+    every coded matmul to the uncoded product.
     """
     from ..stream.queueing import AdmissionConfig
     reports = {}
@@ -41,8 +48,8 @@ def serve_policy_sweep(bridge: CodedServingBridge, requests, policies,
         rep = bridge.serve(requests, churn=churn)
         if rep.decode_ok is not None:
             assert rep.decode_ok, (
-                f"{policy}: coded decode diverged from the uncoded forward "
-                f"pass (max_err={rep.max_err:.2e}, "
+                f"{policy}: coded decode diverged from the uncoded "
+                f"pipeline (max_err={rep.max_err:.2e}, "
                 f"match={rep.argmax_match_rate:.3f})")
         assert rep.tokens_generated > 0 and len(rep.steps) > 0
         reports[policy] = rep
@@ -70,16 +77,19 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
                     n_requests: int = 12, prompt_len: int = 16,
                     gen_len: int = 8, masters: int = 2,
                     slots_per_master: int = 3, rate: float = 0.004,
+                    coding_scope: str = "head",
+                    steps_per_dispatch: int = 1,
                     backend: str = "numpy", seed: int = 0,
                     verbose: bool = True):
     """Serve one synthetic workload under each admission policy.
 
-    Returns 0 on success (CLI-friendly); asserts that every decoded logits
-    batch matched the uncoded forward pass (numpy backend).
+    Returns 0 on success (CLI-friendly); asserts that every decoded coded
+    matmul matched the uncoded product (numpy backend).
     """
     bridge = CodedServingBridge(
         masters=masters, arch=arch, smoke=smoke, backend=backend, seed=seed,
-        slots_per_master=slots_per_master)
+        slots_per_master=slots_per_master, coding_scope=coding_scope,
+        steps_per_dispatch=steps_per_dispatch)
     bridge._setup_model(prompt_len + gen_len + 8)
     reqs = synthetic_requests(
         n_requests, masters=masters, vocab=bridge._model["cfg"].vocab,
@@ -88,8 +98,9 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
     if verbose:
         print(f"[serve_coded] arch={arch} requests={n_requests} "
               f"gen={gen_len} masters={masters} "
-              f"slots/master={slots_per_master} backend={backend}")
+              f"slots/master={slots_per_master} scope={coding_scope} "
+              f"steps/dispatch={steps_per_dispatch} backend={backend}")
         print_policy_table(reports)
-        print("[serve_coded] all decoded token batches matched the uncoded "
-              "forward pass")
+        print("[serve_coded] all decoded coded matmuls matched the uncoded "
+              "pipeline")
     return 0

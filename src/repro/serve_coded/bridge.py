@@ -4,7 +4,7 @@ admission/batching policy of the real inference server.
 ``launch/serve.py`` runs prefill → continuous-batched decode;
 ``repro.stream`` plans coded matrix products over shared heterogeneous
 workers.  This module welds them together: every token batch the server
-generates is one of the paper's coded tasks, scheduled by the *same*
+generates is a set of the paper's coded tasks, scheduled by the *same*
 machinery the streaming engine uses —
 
 * the :class:`~repro.stream.replan.OnlinePlanner` supplies the (k, b, l)
@@ -15,19 +15,44 @@ machinery the streaming engine uses —
   ("fifo" | "edf" | "fair") decides which waiting requests join a batch
   when slots free up, and (fair policy) caps a step's admitted shares at
   the max-min fair entitlement;
-* :func:`repro.parallel.hetero.coded_row_shards` turns the fractional plan
-  row into integer per-worker shard sizes;
-* the :class:`~repro.serve_coded.coded_head.CodedLMHead` physically
-  executes each arrived shard's matmul and decodes the exact logits from
-  the earliest prefix covering L rows.
+* :func:`repro.parallel.hetero.coded_row_shards` /
+  ``rescaled_row_shards`` turn the fractional plan row into integer
+  per-worker shard sizes for each coded weight matrix;
+* a :class:`~repro.serve_coded.coded_linear.CodedLinear` per in-scope
+  matmul physically executes each arrived shard's product and decodes the
+  exact output from the earliest prefix covering its L rows.
+
+**Coding scope.**  ``coding_scope="head"`` (the historical bridge) runs
+the jitted trunk locally and codes only the output-head product.
+``"ffn"`` re-executes the trunk on the host (:class:`HostTrunk`) and
+additionally codes every FFN up/gate/down projection; ``"trunk"`` codes
+the attention q/k/v/o projections too — the paper's assumption that the
+*entire* matmul workload of a master is MDS-encoded across the shared
+workers.  One serving step is then a *multi-task dispatch*: all in-scope
+matmuls share one admission (one (k, b) acquisition, one queue cycle) and
+complete through a :class:`~repro.stream.barrier.StepBarrier` at the max
+of the per-task earliest-prefix times.
+
+**Batched dispatch.**  ``steps_per_dispatch`` generates up to that many
+sequential decode tokens per admission: the per-matmul row shards (the
+workers' encoded weights) are shipped once and the extra token columns
+ride the same deliveries, amortizing encode/queue overhead — the paper's
+task is A·x per column; the row allocation (what the delay model loads)
+is column-count-free.
+
+**Churn.**  Worker leave/degrade/restore re-times every in-flight step's
+per-layer tasks through the stream engine's own re-timing arithmetic
+(:func:`~repro.stream.barrier.churn_finish_update`), re-scheduling the
+step's completion event under a fresh version (stale completions are
+dropped, as in the engine).  A step that can no longer cover some
+matrix's rows re-dispatches its *timing* on the post-churn plan — the
+already-decoded tokens are provably unchanged (MDS decode is exact for
+any covering prefix), only when they land moves.
 
 Time model: request arrivals, worker delays and deadlines live in
 *simulation* milliseconds (sampled from the paper's shifted-exponential /
 exponential model via the stream backend); the model forwards and shard
 matmuls are real computations timed separately in wall-clock seconds.
-In-flight steps are not re-timed by churn (a step is short; churn lands on
-the next step's plan) — the streaming engine covers mid-flight re-timing
-and speculative re-dispatch for the abstract task model.
 """
 from __future__ import annotations
 
@@ -40,20 +65,26 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..parallel.hetero import coded_row_shards
+from ..parallel.hetero import coded_row_shards, rescaled_row_shards
 from ..sim.cluster import ClusterProfile, ec2_cluster
 from ..stream import backend as bk
+from ..stream.barrier import BarrierTask, StepBarrier
 from ..stream.events import WorkerEvent
 from ..stream.metrics import StreamMetrics, TaskRecord
 from ..stream.queueing import (AdmissionConfig, SharePool, fair_demand_rows,
                                make_admission_policy, scale_shares)
 from ..stream.replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
 from .coded_head import CodedLMHead
+from .coded_linear import CodedLinear
 from .requests import ServeRequest
+from .trunk import HostTrunk, trunk_matmul_keys
 
-__all__ = ["CodedServingBridge", "ServeReport", "default_pool"]
+__all__ = ["CodedServingBridge", "ServeReport", "default_pool",
+           "CODING_SCOPES"]
 
 _ARRIVE, _CHURN, _STEP = "arrive", "churn", "step"
+
+CODING_SCOPES = ("head", "ffn", "trunk")
 
 
 def default_pool(N: int = 8, n_fast: int = 2, seed: int = 0) -> ClusterProfile:
@@ -75,16 +106,19 @@ class _Slot:
 class _Step:
     k_row: np.ndarray
     b_row: np.ndarray
-    l_int: np.ndarray
-    finish: np.ndarray
+    barrier: StepBarrier
     t_start: float
+    t_acquire: float              # last share acquisition (re-dispatch moves it)
     t_done: float
-    slot_ids: List[int]
-    tokens: np.ndarray
-    rows_dispatched: int
+    version: int
+    tok_by_slot: Dict[int, List[int]]
+    rows_dispatched: int          # Σ shard rows over all (re-)dispatches
+    rows_needed: float            # Σ per-task L over the dispatch's matmuls
     used_solve: bool
     max_err: float
     argmax_ok: int
+    redispatches: int = 0
+    stalled: bool = False         # lost coverage; holds no shares, retried
 
 
 class _MasterState:
@@ -102,12 +136,14 @@ class ServeReport:
     tokens: Dict[int, List[int]]         # rid → generated token ids
     steps: List[Dict[str, float]]        # per coded-step log
     policy: str
+    coding_scope: str
     max_err: float                       # NaN when verification was off
     argmax_match_rate: float
     decode_ok: Optional[bool]            # None when verification was off
     wall_seconds: float
     tokens_generated: int
     solve_steps: int
+    redispatches: int = 0                # in-flight steps re-timed off-plan
     sim_horizon_ms: float = 0.0          # last step/request completion
 
     def summary(self) -> Dict[str, float]:
@@ -116,6 +152,7 @@ class ServeReport:
             "tokens_generated": float(self.tokens_generated),
             "coded_steps": float(len(self.steps)),
             "solve_steps": float(self.solve_steps),
+            "redispatches": float(self.redispatches),
             "tokens_per_sim_second":
                 self.tokens_generated / (self.sim_horizon_ms / 1e3)
                 if self.sim_horizon_ms > 0 else 0.0,
@@ -128,12 +165,14 @@ class ServeReport:
 
 
 class CodedServingBridge:
-    """Serves generation requests with plan-scheduled coded head matmuls.
+    """Serves generation requests with plan-scheduled coded matmuls.
 
     Parameters
     ----------
     profile:   worker pool (:class:`ClusterProfile`); ``None`` = the demo
-               EC2 pool.  The Scenario's L is the model's padded vocab.
+               EC2 pool.  The Scenario's L is the model's padded vocab
+               (per-layer matrices reuse the plan row rescaled to their
+               own height).
     masters:   number of tenants (plan rows); requests carry a master id.
     arch/seed: model selection (smoke-sized) and init seed.
     admission: stream :class:`AdmissionConfig` — ``policy`` picks the
@@ -142,11 +181,18 @@ class CodedServingBridge:
     plan_policy / replan: forwarded to :class:`OnlinePlanner`.
     slots_per_master: continuous-batching capacity per tenant (the
                contended resource the admission policy arbitrates).
-    backend:   "numpy" | "jax" | "pallas" for the head encode/decode.
-    verify:    compare every decoded logits batch against the local
-               uncoded head product (CI/tests).  Off, the bridge skips the
-               (B×L×D) reference matmul per step — the honest serving
-               configuration, since distributing that product is the point.
+    coding_scope: "head" | "ffn" | "trunk" — which matmuls run coded (see
+               module docstring).
+    steps_per_dispatch: decode tokens generated per admission (≥ 1).
+    backend:   "numpy" | "jax" | "pallas" for the coded encode/decode.
+    coded:     False serves the identical pipeline with every in-scope
+               matmul computed locally (the *uncoded baseline*: same
+               scheduling, same sim timing, no shard execution) — the
+               reference the parity tests compare greedy tokens against.
+    verify:    compare every decoded matmul against the local uncoded
+               product (CI/tests).  Off, the bridge skips the reference
+               matmuls — the honest serving configuration, since
+               distributing those products is the point.
     """
 
     def __init__(self, profile: Optional[ClusterProfile] = None, *,
@@ -155,8 +201,17 @@ class CodedServingBridge:
                  admission: Optional[AdmissionConfig] = None,
                  plan_policy: str = "fractional",
                  replan: Optional[ReplanPolicy] = None,
-                 slots_per_master: int = 4, backend: str = "numpy",
+                 slots_per_master: int = 4,
+                 coding_scope: str = "head",
+                 steps_per_dispatch: int = 1,
+                 backend: str = "numpy",
+                 coded: bool = True,
                  verify: bool = True, seed: int = 0):
+        if coding_scope not in CODING_SCOPES:
+            raise ValueError(f"unknown coding_scope {coding_scope!r}; "
+                             f"expected one of {CODING_SCOPES}")
+        if steps_per_dispatch < 1:
+            raise ValueError("steps_per_dispatch must be >= 1")
         self.profile = profile or default_pool(seed=seed)
         self.M = int(masters)
         self.arch = arch
@@ -165,7 +220,10 @@ class CodedServingBridge:
         self.plan_policy = plan_policy
         self.replan = replan
         self.slots_per_master = int(slots_per_master)
+        self.coding_scope = coding_scope
+        self.steps_per_dispatch = int(steps_per_dispatch)
         self.backend = backend
+        self.coded = bool(coded)
         self.verify = bool(verify)
         self.seed = int(seed)
         self._model = None
@@ -182,18 +240,34 @@ class CodedServingBridge:
                 raise NotImplementedError("coded bridge serves decoder-only "
                                           "archs (enc-dec prefill needs "
                                           "feats)")
-            prefill_fn, decode_fn = serving_fns(cfg, return_hidden=True)
             W = head_matrix(cfg, params)
-            self._model = dict(cfg=cfg, params=params, prefill_fn=prefill_fn,
-                               decode_fn=decode_fn, W=W)
+            self._model = dict(cfg=cfg, params=params, W=W)
             self.sc = self.profile.scenario(self.M, L=float(W.shape[0]))
             self.head = CodedLMHead(W, seed=self.seed, backend=self.backend)
+            self._linears: Dict[str, CodedLinear] = {"head": self.head}
+            self.runner: Optional[HostTrunk] = None
+            if self.coding_scope == "head":
+                prefill_fn, decode_fn = serving_fns(cfg, return_hidden=True)
+                self._model.update(prefill_fn=prefill_fn, decode_fn=decode_fn)
+            else:
+                self.runner = HostTrunk(cfg, params, W)
+                for key in trunk_matmul_keys(cfg, self.coding_scope):
+                    self._linears[key] = CodedLinear(
+                        self.runner.weights[key], name=key, seed=self.seed,
+                        backend=self.backend)
+            self._coded_keys = [k for k in self._linears if k != "head"] \
+                + ["head"]
         if max_len > self._max_len:
             # caches must cover the longest request this bridge ever saw —
             # a later serve() with longer requests regrows them
-            from ..launch.serve import zero_caches
-            cfg, ml = self._model["cfg"], int(max_len)
-            self._model["zero_caches"] = lambda b: zero_caches(cfg, b, ml)
+            ml = int(max_len)
+            cfg = self._model["cfg"]
+            if self.coding_scope == "head":
+                from ..launch.serve import zero_caches
+                self._model["zero_caches"] = lambda b: zero_caches(cfg, b, ml)
+            else:
+                self._model["zero_caches"] = \
+                    lambda b: self.runner.zero_caches(b, ml)
             self._max_len = ml
 
     @staticmethod
@@ -246,12 +320,14 @@ class CodedServingBridge:
         step_log: List[Dict[str, float]] = []
         tokens_out: Dict[int, List[int]] = {}
         seq = itertools.count()
+        version_seq = itertools.count()
         heap: List[Tuple[float, int, str, Any]] = []
         for r in requests:
             heapq.heappush(heap, (r.t_arrive, next(seq), _ARRIVE, r))
         for ev in churn:
             heapq.heappush(heap, (ev.time, next(seq), _CHURN, ev))
-        stats = dict(max_err=0.0, match=0, total=0, solves=0, tokens=0)
+        stats = dict(max_err=0.0, match=0, total=0, solves=0, tokens=0,
+                     redispatches=0)
 
         # ---- helpers bound to this serve run -----------------------------
 
@@ -286,7 +362,8 @@ class CodedServingBridge:
             # claimants: masters holding step shares, plus masters with
             # queued requests or admitted-but-idle batches (plan-row demand)
             held_rows = {m2: states[m2].step.k_row for m2 in range(self.M)
-                         if states[m2].step is not None}
+                         if states[m2].step is not None
+                         and not states[m2].step.stalled}
             waiting = queue.waiting_masters() | {
                 m2 for m2 in range(self.M)
                 if states[m2].slots and states[m2].step is None}
@@ -295,10 +372,11 @@ class CodedServingBridge:
             return queue.fair_fraction(m, k_req, b_req, held=held,
                                        demands=demands)
 
-        def hidden_states(m: int, st: _MasterState
-                          ) -> Tuple[np.ndarray, List[int]]:
+        # ---- hidden-state computation (scope-aware) ----------------------
+
+        def hidden_states_jit(st: _MasterState, slot_ids: List[int]
+                              ) -> np.ndarray:
             import jax.numpy as jnp
-            slot_ids = sorted(st.slots)
             cont = [s for s in slot_ids if not st.slots[s].needs_prefill]
             H: Dict[int, np.ndarray] = {}
             if cont:
@@ -326,10 +404,41 @@ class CodedServingBridge:
                 slot.pos = len(slot.prompt)
                 slot.needs_prefill = False
                 H[s] = np.asarray(h1, dtype=np.float64)[0, 0]
-            return np.stack([H[s] for s in slot_ids]), slot_ids
+            return np.stack([H[s] for s in slot_ids])
 
-        def begin_step(m: int, t: float, relax: bool) -> bool:
-            st = states[m]
+        def hidden_states_host(st: _MasterState, slot_ids: List[int],
+                               mm) -> np.ndarray:
+            cont = [s for s in slot_ids if not st.slots[s].needs_prefill]
+            H: Dict[int, np.ndarray] = {}
+            if cont:
+                toks = np.array([[st.slots[s].tokens[-1]] for s in cont],
+                                dtype=np.int64)
+                pos = np.array([[st.slots[s].pos] for s in cont],
+                               dtype=np.int64)
+                hid = self.runner.forward(toks, pos, np.array(cont),
+                                          st.caches, mm)
+                for i, s in enumerate(cont):
+                    H[s] = hid[i, 0]
+                    st.slots[s].pos += 1
+            for s in slot_ids:
+                slot = st.slots[s]
+                if not slot.needs_prefill:
+                    continue
+                P = len(slot.prompt)
+                hid = self.runner.forward(
+                    np.asarray(slot.prompt)[None].astype(np.int64),
+                    np.arange(P, dtype=np.int64)[None], np.array([s]),
+                    st.caches, mm)
+                slot.pos = P
+                slot.needs_prefill = False
+                H[s] = hid[0, -1]
+            return np.stack([H[s] for s in slot_ids])
+
+        # ---- step timing + dispatch --------------------------------------
+
+        def make_timing(m: int, t: float, relax: bool):
+            """Shares + per-matmul delivery schedule, or None if it cannot
+            run now.  Draws one ExponentialBlock row per coded matmul."""
             plan = planner.ensure_plan(online(), scale)
             fair_fn = (lambda kq, bq: fair_cap(m, kq, bq)) \
                 if queue.uses_fairness and not relax else None
@@ -339,76 +448,175 @@ class CodedServingBridge:
                 floor=1e-6 if relax else self.admission.min_fraction,
                 fair_fn=fair_fn)
             if scaled is None:
-                return False
+                return None
             k_row, b_row, _f = scaled
             l_row, _ = scaled_row_loads(sc_eff, m, k_row, b_row)
             if l_row.sum() < L - 1e-6:
+                return None
+            tasks = []
+            for key in self._coded_keys:
+                L_mat = self._linears[key].L
+                l_int = coded_row_shards(l_row, L) if L_mat == L else \
+                    rescaled_row_shards(l_row, L, L_mat)
+                e = exp.draw()
+                d = bk.sample_delays(e[0], e[1], l_int, k_row, b_row,
+                                     sc_eff.a[m], sc_eff.u[m],
+                                     sc_eff.gamma[m])
+                tasks.append(BarrierTask(
+                    name=key, l_int=l_int,
+                    finish=np.where(l_int > 0, t + d, np.inf),
+                    need=float(L_mat)))
+            barrier = StepBarrier(tasks)
+            if not np.isfinite(barrier.completion):
+                return None
+            return k_row, b_row, barrier
+
+        def begin_step(m: int, t: float, relax: bool) -> bool:
+            st = states[m]
+            if not any(len(s.tokens) < s.gen_len
+                       for s in st.slots.values()):
                 return False
-            l_int = coded_row_shards(l_row, L)
-            e = exp.draw()
-            d = bk.sample_delays(e[0], e[1], l_int, k_row, b_row,
-                                 sc_eff.a[m], sc_eff.u[m], sc_eff.gamma[m])
-            finish = np.where(l_int > 0, t + d, np.inf)
-            comp = float(bk.completion_times(
-                finish[None], l_int[None], np.array([float(L)]))[0])
-            if not np.isfinite(comp):
+            timing = make_timing(m, t, relax)
+            if timing is None:
                 return False
+            k_row, b_row, barrier = timing
             pool.acquire(k_row, b_row)
-            H, slot_ids = hidden_states(m, st)
-            res = self.head.step(H, l_int, finish, comp)
-            tokens = np.argmax(res.logits, axis=1).astype(np.int64)
-            if self.verify:
-                ref = H @ self.head.W.T
-                err = float(np.abs(res.logits - ref).max()
-                            / (1.0 + np.abs(ref).max()))
-                ok = int((tokens == np.argmax(ref, axis=1)).sum())
-            else:
-                err, ok = 0.0, len(slot_ids)
-            stats["max_err"] = max(stats["max_err"], err)
-            stats["match"] += ok
-            stats["total"] += len(slot_ids)
-            stats["solves"] += int(res.used_solve)
-            st.step = _Step(k_row=k_row, b_row=b_row, l_int=l_int,
-                            finish=finish, t_start=t, t_done=comp,
-                            slot_ids=slot_ids, tokens=tokens,
-                            rows_dispatched=res.rows_dispatched,
-                            used_solve=res.used_solve, max_err=err,
-                            argmax_ok=ok)
-            heapq.heappush(heap, (comp, next(seq), _STEP, m))
+            task_map = {task.name: task for task in barrier.tasks}
+            step_stats = dict(max_err=0.0, used_solve=False, argmax_ok=0)
+
+            def mm(key: str, X: np.ndarray) -> np.ndarray:
+                if key not in task_map:             # out-of-scope: local
+                    return self.runner.local_matmul(key, X)
+                lin = self._linears[key]
+                task = task_map[key]
+                if self.coded:
+                    res = lin.step(X, task.l_int, task.finish,
+                                   task.completion)
+                    out = res.out
+                    step_stats["used_solve"] |= res.used_solve
+                else:
+                    out = lin.local(X)
+                if self.verify:
+                    ref = lin.local(X) if self.coded else out
+                    if self.coded:
+                        err = float(np.abs(out - ref).max()
+                                    / (1.0 + np.abs(ref).max()))
+                        step_stats["max_err"] = max(step_stats["max_err"],
+                                                    err)
+                    if key == "head":
+                        # reused below for the greedy argmax check — the
+                        # head product is the model's largest matmul
+                        step_stats["head_ref"] = ref
+                return out
+
+            tok_by_slot: Dict[int, List[int]] = {}
+            for _j in range(self.steps_per_dispatch):
+                slot_ids = [s for s in sorted(st.slots)
+                            if len(st.slots[s].tokens)
+                            < st.slots[s].gen_len]
+                if not slot_ids:
+                    break
+                if self.coding_scope == "head":
+                    H = hidden_states_jit(st, slot_ids)
+                else:
+                    H = hidden_states_host(st, slot_ids, mm)
+                logits = mm("head", H)
+                tokens = np.argmax(logits, axis=1).astype(np.int64)
+                if self.verify:
+                    ref = step_stats.pop("head_ref")
+                    ok = int((tokens == np.argmax(ref, axis=1)).sum())
+                else:
+                    ok = len(slot_ids)
+                step_stats["argmax_ok"] += ok
+                stats["total"] += len(slot_ids)
+                for sid, tok in zip(slot_ids, tokens):
+                    st.slots[sid].tokens.append(int(tok))
+                    tok_by_slot.setdefault(sid, []).append(int(tok))
+
+            comp = barrier.completion
+            stats["max_err"] = max(stats["max_err"], step_stats["max_err"])
+            stats["match"] += step_stats["argmax_ok"]
+            stats["solves"] += int(step_stats["used_solve"])
+            st.step = _Step(
+                k_row=k_row, b_row=b_row, barrier=barrier, t_start=t,
+                t_acquire=t, t_done=comp, version=next(version_seq),
+                tok_by_slot=tok_by_slot,
+                rows_dispatched=barrier.rows_dispatched(),
+                rows_needed=float(sum(task.need for task in barrier.tasks)),
+                used_solve=step_stats["used_solve"],
+                max_err=step_stats["max_err"],
+                argmax_ok=step_stats["argmax_ok"])
+            heapq.heappush(heap, (comp, next(seq), _STEP,
+                                  (m, st.step.version)))
+            return True
+
+        def redispatch_step(m: int, t: float) -> bool:
+            """Re-time a coverage-lost in-flight step on the current plan.
+
+            The step's tokens were decoded from an exactly-covering prefix
+            and MDS decode is prefix-independent, so only the *timing* is
+            re-dispatched: fresh shards, fresh delays, new completion.
+            The caller has already released the old shares."""
+            st = states[m]
+            sp = st.step
+            timing = make_timing(m, t, relax=True)
+            sp.version = next(version_seq)
+            if timing is None:
+                sp.stalled = True
+                return False
+            k_row, b_row, barrier = timing
+            pool.acquire(k_row, b_row)
+            sp.k_row, sp.b_row, sp.barrier = k_row, b_row, barrier
+            sp.t_acquire = t
+            sp.t_done = barrier.completion
+            sp.rows_dispatched += barrier.rows_dispatched()
+            sp.stalled = False
+            sp.redispatches += 1
+            stats["redispatches"] += 1
+            heapq.heappush(heap, (sp.t_done, next(seq), _STEP,
+                                  (m, sp.version)))
             return True
 
         def pump(t: float, relax: bool = False) -> bool:
             started = False
             for m in range(self.M):
-                if states[m].step is None and states[m].slots:
+                st = states[m]
+                if st.step is not None and st.step.stalled:
+                    started |= redispatch_step(m, t)
+                elif st.step is None and st.slots:
                     started |= begin_step(m, t, relax)
             return started
 
-        def step_done(m: int, t: float) -> None:
+        def step_done(payload: Tuple[int, int], t: float) -> None:
+            m, version = payload
             st = states[m]
             sp = st.step
+            if sp is None or sp.version != version:
+                return                      # stale (churn re-timed the step)
             st.step = None
             pool.release(sp.k_row, sp.b_row)
-            metrics.record_share_interval(sp.k_row, sp.b_row, t - sp.t_start)
-            delivered = float(bk.delivered_by(
-                sp.finish[None], sp.l_int.astype(np.float64)[None],
-                np.array([t]))[0])
-            B = len(sp.slot_ids)
-            stats["tokens"] += B
+            metrics.record_share_interval(sp.k_row, sp.b_row,
+                                          t - sp.t_acquire)
+            delivered = sp.barrier.rows_delivered_by(t)
+            ntok = sum(len(v) for v in sp.tok_by_slot.values())
+            stats["tokens"] += ntok
             step_log.append({
-                "master": m, "t_start": sp.t_start, "t_done": t,
-                "batch": B, "rows_dispatched": sp.rows_dispatched,
+                "master": m, "scope": self.coding_scope,
+                "t_start": sp.t_start, "t_done": t,
+                "batch": len(sp.tok_by_slot), "tokens": ntok,
+                "n_tasks": len(sp.barrier.tasks),
+                "rows_dispatched": sp.rows_dispatched,
                 "rows_delivered": delivered, "used_solve": sp.used_solve,
-                "max_err": sp.max_err,
+                "redispatches": sp.redispatches, "max_err": sp.max_err,
             })
-            for sid, tok in zip(sp.slot_ids, sp.tokens):
+            for sid, toks in sp.tok_by_slot.items():
                 slot = st.slots[sid]
-                slot.tokens.append(int(tok))
-                tokens_out.setdefault(slot.rid, []).append(int(tok))
+                tokens_out.setdefault(slot.rid, []).extend(toks)
                 rec = recs[slot.rid]
-                rec.rows_needed += L / B
-                rec.rows_total += sp.rows_dispatched / B
-                rec.rows_delivered += delivered / B
+                share = len(toks) / max(ntok, 1)
+                rec.rows_needed += sp.rows_needed * share
+                rec.rows_total += sp.rows_dispatched * share
+                rec.rows_delivered += delivered * share
                 if len(slot.tokens) >= slot.gen_len:
                     rec.t_complete = t
                     metrics.record_task(rec)
@@ -434,6 +642,7 @@ class CodedServingBridge:
 
         def on_churn(ev: WorkerEvent, t: float) -> None:
             nonlocal sc_eff
+            undo = scale[ev.worker]
             if ev.kind == "leave":
                 pool.set_online(ev.worker, False)
             elif ev.kind == "join":
@@ -444,6 +653,27 @@ class CodedServingBridge:
                 scale[ev.worker] = 1.0
             sc_eff = planner.effective_scenario(online(), scale)
             planner.ensure_plan(online(), scale, event=True)
+            # re-time in-flight steps' per-layer tasks (the engine's path)
+            if ev.kind in ("leave", "degrade", "restore"):
+                for m2 in range(self.M):
+                    sp = states[m2].step
+                    if sp is None or sp.stalled:
+                        continue
+                    if not sp.barrier.retime(ev.worker, ev.kind, t,
+                                             factor=ev.factor, undo=undo):
+                        continue
+                    sp.version = next(version_seq)
+                    comp = sp.barrier.completion
+                    if np.isfinite(comp):
+                        sp.t_done = max(comp, t)
+                        heapq.heappush(heap, (sp.t_done, next(seq), _STEP,
+                                              (m2, sp.version)))
+                    else:
+                        # coverage lost: release and re-dispatch the timing
+                        pool.release(sp.k_row, sp.b_row)
+                        metrics.record_share_interval(
+                            sp.k_row, sp.b_row, t - sp.t_acquire)
+                        redispatch_step(m2, t)
             admit(t)
             pump(t)
 
@@ -473,20 +703,30 @@ class CodedServingBridge:
         for st in states:
             for slot in st.slots.values():
                 metrics.record_unserved(recs[slot.rid])
-        tol = 1e-6 if self.backend == "numpy" else 5e-4
+        # float64 end to end on numpy; jax/pallas encode the parity block in
+        # float32, and the deeper scopes add many small solves whose random
+        # submatrices have a fatter conditioning tail than the head's — so
+        # their verify tolerance is looser (tokens are still bit-checked).
+        if self.backend == "numpy":
+            tol = 1e-6
+        else:
+            tol = 5e-4 if self.coding_scope == "head" else 2e-3
         match_rate = stats["match"] / max(stats["total"], 1)
+        verifying = self.verify and self.coded
         return ServeReport(
             metrics=metrics,
             tokens=tokens_out,
             steps=step_log,
             policy=self.admission.policy,
-            max_err=stats["max_err"] if self.verify else float("nan"),
+            coding_scope=self.coding_scope,
+            max_err=stats["max_err"] if verifying else float("nan"),
             argmax_match_rate=match_rate,
             decode_ok=(stats["max_err"] <= tol and match_rate == 1.0)
-            if self.verify else None,
+            if verifying else None,
             wall_seconds=time.perf_counter() - t_wall,
             tokens_generated=stats["tokens"],
             solve_steps=stats["solves"],
+            redispatches=stats["redispatches"],
             sim_horizon_ms=max([metrics.t_end]
                                + [s["t_done"] for s in step_log]),
         )

@@ -1,161 +1,35 @@
-"""MDS-coded execution of the output-head matmul across worker shards.
+"""The MDS-coded output head — now a named :class:`CodedLinear`.
 
-The serving bridge treats every token batch's head product
-``logits = H @ W.T`` as one of the paper's coded tasks: the rows of W (one
-per vocabulary entry, L = padded_vocab of them) are encoded with a
-systematic MDS generator ``G = [I; R]``, split into per-node contiguous
-shards sized by the Theorem-1/3 load row (integerised by
-:func:`repro.parallel.hetero.coded_row_shards`), and each *arrived* shard's
-product is physically computed as its own matmul — exactly what that
-worker would return.  The earliest prefix of shard deliveries covering L
-rows decodes the exact logits through
-:func:`repro.stream.backend.decode_batch` (permutation scatter when only
-systematic rows arrived, one stacked solve otherwise).
-
-Only the parity block ``R @ W`` needs encoding work; the systematic prefix
-*is* W (the same identity-skipping trick the Pallas ``mds_encode`` kernel
-uses).  Parity rows are generated lazily in seeded chunks, so the encoded
-head grows with the largest redundancy any plan requests.
-
-Numerics: shard products and the decode run in float64 on the host, so the
-decoded logits match the uncoded head product to solver precision and the
-greedy argmax is bit-stable.  ``backend="jax"``/``"pallas"`` route the
-parity encode through the device / Pallas kernel path (float32 — verify
-with the looser tolerance, as in the streaming engine).
+Historically the bridge coded only the output-head matmul and this module
+held the whole implementation; the per-layer generalisation lives in
+:mod:`repro.serve_coded.coded_linear` (``coding_scope`` in the bridge picks
+how much of the trunk rides the same machinery).  ``CodedLMHead`` remains
+the public name for the head layer: a ``CodedLinear`` whose W is
+``launch.serve.head_matrix`` (L = padded vocab) and whose step result
+exposes the decoded product as ``.logits``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
-
 import numpy as np
 
-from ..core import mds
-from ..stream import backend as bk
+from .coded_linear import CodedLinear, LinearStep
 
 __all__ = ["CodedLMHead", "HeadStep"]
 
-
-@dataclasses.dataclass
-class HeadStep:
-    """Result of one coded head execution."""
-    logits: np.ndarray          # (B, L) decoded — exact A·x per request
-    rows: np.ndarray            # (L,) coded-row ids used by the decode
-    workers_used: np.ndarray    # node columns whose shards fed the decode
-    rows_dispatched: int        # Σ integer shard sizes
-    used_solve: bool            # parity rows in the prefix → general solve
+#: Result of one coded head execution (``.logits`` aliases ``.out``).
+HeadStep = LinearStep
 
 
-class CodedLMHead:
+class CodedLMHead(CodedLinear):
     """Systematic-MDS-encoded output head, executed shard-by-shard.
 
     W: (L, D) float weight matrix (``launch.serve.head_matrix``).
     seed: parity-generator seed (one head = one generator stream).
-    backend: "numpy" | "jax" | "pallas" for the parity encode + decode solve.
+    backend: "numpy" | "jax" | "pallas" for the parity encode + decode
+    solve.
     """
 
     def __init__(self, W: np.ndarray, *, seed: int = 0,
                  backend: str = "numpy", parity_chunk: int = 256):
-        bk.check_backend(backend)
-        if backend != "numpy" and not bk.has_jax():
-            backend = "numpy"
-        self.W = np.asarray(W, dtype=np.float64)
-        self.L, self.D = self.W.shape
-        self.backend = backend
-        self.parity_chunk = int(parity_chunk)
-        self._rng = np.random.default_rng((int(seed), 0xC0DE))
-        self.R = np.zeros((0, self.L))            # parity generator rows
-        self.WR = np.zeros((0, self.D))           # encoded parity shards
-        self._G_cache: Optional[np.ndarray] = None
-
-    # -- encoding ------------------------------------------------------------
-
-    def _encode_parity(self, R_new: np.ndarray) -> np.ndarray:
-        if self.backend == "numpy":
-            return R_new @ self.W
-        import jax.numpy as jnp
-        if self.backend == "pallas":
-            from ..kernels import ops
-            G_blk = np.concatenate([np.eye(self.L), R_new]).astype(np.float32)
-            full = np.asarray(ops.mds_encode(jnp.asarray(G_blk),
-                                             jnp.asarray(self.W, jnp.float32)))
-            return full[self.L:].astype(np.float64)
-        return np.asarray(jnp.asarray(R_new, jnp.float32)
-                          @ jnp.asarray(self.W, jnp.float32),
-                          dtype=np.float64)
-
-    def ensure_parity(self, n_parity: int) -> None:
-        """Grow the encoded parity block to ≥ ``n_parity`` rows."""
-        while self.R.shape[0] < n_parity:
-            R_new = self._rng.normal(0.0, 1.0 / np.sqrt(self.L),
-                                     size=(self.parity_chunk, self.L))
-            self.R = np.concatenate([self.R, R_new])
-            self.WR = np.concatenate([self.WR, self._encode_parity(R_new)])
-            self._G_cache = None
-
-    def generator(self, L_tilde: int) -> np.ndarray:
-        """The systematic generator [I; R] truncated to ``L_tilde`` rows."""
-        self.ensure_parity(max(L_tilde - self.L, 0))
-        if self._G_cache is None or self._G_cache.shape[0] < L_tilde:
-            self._G_cache = np.concatenate([np.eye(self.L), self.R])
-        return self._G_cache[:L_tilde]
-
-    def encoded_rows(self, rows: np.ndarray) -> np.ndarray:
-        """Gather encoded weight rows (systematic prefix = W itself)."""
-        rows = np.asarray(rows)
-        out = np.empty((rows.size, self.D))
-        sys_m = rows < self.L
-        out[sys_m] = self.W[rows[sys_m]]
-        out[~sys_m] = self.WR[rows[~sys_m] - self.L]
-        return out
-
-    # -- one step ------------------------------------------------------------
-
-    def step(self, H: np.ndarray, l_int: np.ndarray, finish: np.ndarray,
-             t_complete: float) -> HeadStep:
-        """Execute one coded head product for a token batch.
-
-        H:      (B, D) hidden states of the batch (float64).
-        l_int:  (N+1,) integer shard sizes (Σ ≥ L; contiguous row slices in
-                node order, exactly the executor's dispatch layout).
-        finish: (N+1,) absolute delivery times (inf = never); the earliest
-                prefix covering L by ``t_complete`` feeds the decode.
-        """
-        H = np.asarray(H, dtype=np.float64)
-        l_int = np.asarray(l_int, dtype=np.int64)
-        total = int(l_int.sum())
-        if total < self.L:
-            raise ValueError(f"shards cover {total} < L={self.L} rows")
-        self.ensure_parity(total - self.L)
-        active = np.nonzero(l_int > 0)[0]
-        slices = mds.split_loads(total, l_int[active])
-        order = np.argsort(np.where(np.isfinite(finish[active]),
-                                    finish[active], np.inf), kind="stable")
-        got_rows: List[np.ndarray] = []
-        got_y: List[np.ndarray] = []
-        used: List[int] = []
-        acc = 0
-        for j in order:
-            if not np.isfinite(finish[active[j]]) or \
-                    finish[active[j]] > t_complete + 1e-9:
-                continue
-            rows_j = slices[j]
-            # the per-worker shard execution: this node's encoded rows × H
-            got_y.append(self.encoded_rows(rows_j) @ H.T)
-            got_rows.append(rows_j)
-            used.append(int(active[j]))
-            acc += rows_j.size
-            if acc >= self.L:
-                break
-        if acc < self.L:
-            raise RuntimeError("deliveries do not cover L by t_complete")
-        rows = np.concatenate(got_rows)[:self.L]
-        y = np.concatenate(got_y)[:self.L]            # (L, B)
-        used_solve = bool((rows >= self.L).any())
-        G = self.generator(total)
-        z = bk.decode_batch(
-            G, rows[None], y[None],
-            backend="numpy" if self.backend == "numpy" else "jax")[0]
-        return HeadStep(logits=z.T, rows=rows,
-                        workers_used=np.asarray(used),
-                        rows_dispatched=total, used_solve=used_solve)
+        super().__init__(W, name="head", seed=seed, backend=backend,
+                         parity_chunk=parity_chunk)

@@ -1,0 +1,183 @@
+"""MDS-coded execution of an arbitrary row-sharded linear layer.
+
+The serving bridge treats every large matmul ``out = X @ W.T`` — the output
+head, the attention q/k/v/o projections, the FFN up/down projections — as
+one of the paper's coded tasks: the rows of W (L of them — padded_vocab for
+the head, d_ff for the FFN up projection, d_model for the down projection,
+…) are encoded with a systematic MDS generator ``G = [I; R]``, split into
+per-node contiguous shards sized by the Theorem-1/3 load row (integerised
+by :func:`repro.parallel.hetero.coded_row_shards` /
+``rescaled_row_shards``), and each *arrived* shard's product is physically
+computed as its own matmul — exactly what that worker would return.  The
+earliest prefix of shard deliveries covering L rows decodes the exact
+output through :func:`repro.stream.backend.decode_batch` (permutation
+scatter when only systematic rows arrived, mixed-row substitution
+otherwise).
+
+Only the parity block ``R @ W`` needs encoding work; the systematic prefix
+*is* W (the same identity-skipping trick the Pallas ``mds_encode`` kernel
+uses).  Parity rows are generated lazily in seeded chunks, so each encoded
+layer grows with the largest redundancy any plan requests.
+
+Numerics: shard products and the decode run in float64 on the host, so the
+decoded output matches the uncoded product to solver precision and greedy
+argmax is bit-stable.  ``backend="jax"``/``"pallas"`` route the parity
+encode through the device / Pallas kernel path (float32 — verify with the
+looser tolerance, as in the streaming engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import List, Optional
+
+import numpy as np
+
+from ..core import mds
+from ..stream import backend as bk
+
+__all__ = ["CodedLinear", "LinearStep"]
+
+
+@dataclasses.dataclass
+class LinearStep:
+    """Result of one coded linear execution."""
+    out: np.ndarray             # (B, L) decoded — exact X @ W.T per row of X
+    rows: np.ndarray            # (L,) coded-row ids used by the decode
+    workers_used: np.ndarray    # node columns whose shards fed the decode
+    rows_dispatched: int        # Σ integer shard sizes
+    used_solve: bool            # parity rows in the prefix → general solve
+
+    @property
+    def logits(self) -> np.ndarray:
+        """Head-layer alias: the decoded product *is* the logits batch."""
+        return self.out
+
+
+class CodedLinear:
+    """Systematic-MDS-encoded linear layer, executed shard-by-shard.
+
+    W: (L, D) float weight matrix, row-sharded across workers.
+    name: label used by the bridge's step log ("head", "blk0.wq", ...).
+    seed: parity-generator seed (one layer = one generator stream).
+    backend: "numpy" | "jax" | "pallas" for the parity encode + decode
+    solve.
+    """
+
+    def __init__(self, W: np.ndarray, *, name: str = "linear",
+                 seed: int = 0, backend: str = "numpy",
+                 parity_chunk: int = 256):
+        bk.check_backend(backend)
+        if backend != "numpy" and not bk.has_jax():
+            backend = "numpy"
+        self.W = np.asarray(W, dtype=np.float64)
+        self.L, self.D = self.W.shape
+        self.name = name
+        self.backend = backend
+        self.parity_chunk = int(parity_chunk)
+        # crc32, not hash(): parity streams must replay across processes
+        self._rng = np.random.default_rng((int(seed), 0xC0DE,
+                                           zlib.crc32(name.encode())))
+        self.R = np.zeros((0, self.L))            # parity generator rows
+        self.WR = np.zeros((0, self.D))           # encoded parity shards
+        self._G_cache: Optional[np.ndarray] = None
+
+    # -- encoding ------------------------------------------------------------
+
+    def _encode_parity(self, R_new: np.ndarray) -> np.ndarray:
+        if self.backend == "numpy":
+            return R_new @ self.W
+        import jax.numpy as jnp
+        if self.backend == "pallas":
+            from ..kernels import ops
+            G_blk = np.concatenate([np.eye(self.L), R_new]).astype(np.float32)
+            full = np.asarray(ops.mds_encode(jnp.asarray(G_blk),
+                                             jnp.asarray(self.W, jnp.float32)))
+            return full[self.L:].astype(np.float64)
+        return np.asarray(jnp.asarray(R_new, jnp.float32)
+                          @ jnp.asarray(self.W, jnp.float32),
+                          dtype=np.float64)
+
+    def ensure_parity(self, n_parity: int) -> None:
+        """Grow the encoded parity block to ≥ ``n_parity`` rows."""
+        while self.R.shape[0] < n_parity:
+            R_new = self._rng.normal(0.0, 1.0 / np.sqrt(self.L),
+                                     size=(self.parity_chunk, self.L))
+            self.R = np.concatenate([self.R, R_new])
+            self.WR = np.concatenate([self.WR, self._encode_parity(R_new)])
+            self._G_cache = None
+
+    def generator(self, L_tilde: int) -> np.ndarray:
+        """The systematic generator [I; R] truncated to ``L_tilde`` rows."""
+        self.ensure_parity(max(L_tilde - self.L, 0))
+        if self._G_cache is None or self._G_cache.shape[0] < L_tilde:
+            self._G_cache = np.concatenate([np.eye(self.L), self.R])
+        return self._G_cache[:L_tilde]
+
+    def encoded_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Gather encoded weight rows (systematic prefix = W itself)."""
+        rows = np.asarray(rows)
+        out = np.empty((rows.size, self.D))
+        sys_m = rows < self.L
+        out[sys_m] = self.W[rows[sys_m]]
+        out[~sys_m] = self.WR[rows[~sys_m] - self.L]
+        return out
+
+    # -- reference -----------------------------------------------------------
+
+    def local(self, X: np.ndarray) -> np.ndarray:
+        """The uncoded product X @ W.T (float64) — the verify reference and
+        the matmul the ``coded=False`` bridge serves with."""
+        return np.asarray(X, dtype=np.float64) @ self.W.T
+
+    # -- one step ------------------------------------------------------------
+
+    def step(self, X: np.ndarray, l_int: np.ndarray, finish: np.ndarray,
+             t_complete: float) -> LinearStep:
+        """Execute one coded product for an activation batch.
+
+        X:      (B, D) input activations (float64); each row is one token/
+                position of the step's batch.
+        l_int:  (N+1,) integer shard sizes (Σ ≥ L; contiguous row slices in
+                node order, exactly the executor's dispatch layout).
+        finish: (N+1,) absolute delivery times (inf = never); the earliest
+                prefix covering L by ``t_complete`` feeds the decode.
+        """
+        X = np.asarray(X, dtype=np.float64)
+        l_int = np.asarray(l_int, dtype=np.int64)
+        total = int(l_int.sum())
+        if total < self.L:
+            raise ValueError(f"shards cover {total} < L={self.L} rows")
+        self.ensure_parity(total - self.L)
+        active = np.nonzero(l_int > 0)[0]
+        slices = mds.split_loads(total, l_int[active])
+        order = np.argsort(np.where(np.isfinite(finish[active]),
+                                    finish[active], np.inf), kind="stable")
+        got_rows: List[np.ndarray] = []
+        got_y: List[np.ndarray] = []
+        used: List[int] = []
+        acc = 0
+        for j in order:
+            if not np.isfinite(finish[active[j]]) or \
+                    finish[active[j]] > t_complete + 1e-9:
+                continue
+            rows_j = slices[j]
+            # the per-worker shard execution: this node's encoded rows × X
+            got_y.append(self.encoded_rows(rows_j) @ X.T)
+            got_rows.append(rows_j)
+            used.append(int(active[j]))
+            acc += rows_j.size
+            if acc >= self.L:
+                break
+        if acc < self.L:
+            raise RuntimeError("deliveries do not cover L by t_complete")
+        rows = np.concatenate(got_rows)[:self.L]
+        y = np.concatenate(got_y)[:self.L]            # (L, B)
+        used_solve = bool((rows >= self.L).any())
+        G = self.generator(total)
+        z = bk.decode_batch(
+            G, rows[None], y[None],
+            backend="numpy" if self.backend == "numpy" else "jax")[0]
+        return LinearStep(out=z.T, rows=rows,
+                          workers_used=np.asarray(used),
+                          rows_dispatched=total, used_solve=used_solve)

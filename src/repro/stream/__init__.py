@@ -9,6 +9,7 @@ metrics.  See ``src/repro/stream/README.md`` for the event model.
 """
 from .backend import (ExponentialBlock, completion_times, decode_batch,
                       delivered_by, sample_delays)
+from .barrier import BarrierTask, StepBarrier, churn_finish_update
 from .engine import StreamingExecutor, poisson_sources
 from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, Event, EventLoop,
                      PoissonProcess, TraceProcess, WorkerEvent)
@@ -29,4 +30,5 @@ __all__ = [
     "StreamMetrics", "TaskRecord",
     "completion_times", "delivered_by", "sample_delays", "decode_batch",
     "ExponentialBlock",
+    "BarrierTask", "StepBarrier", "churn_finish_update",
 ]

@@ -440,6 +440,17 @@ def _identity_prefix(G: np.ndarray) -> bool:
     return bool((top == eye).all())
 
 
+def _gather_generator_rows(G, glist: bool, idx: np.ndarray,
+                           rows: np.ndarray) -> np.ndarray:
+    """Stack G[rows[i]] for the selected task indices → (len(idx), R, L)."""
+    if glist:
+        return np.stack([np.asarray(G[i], dtype=np.float64)[rows[j]]
+                         for j, i in enumerate(idx)])
+    if G.ndim == 2:
+        return G[rows]
+    return G[idx[:, None], rows]
+
+
 def decode_batch(G: np.ndarray, rows: np.ndarray, y: np.ndarray,
                  *, backend: str = "numpy",
                  systematic: str = "auto") -> np.ndarray:
@@ -451,20 +462,30 @@ def decode_batch(G: np.ndarray, rows: np.ndarray, y: np.ndarray,
     rows: (B, L) int — received coded-row indices per task.
     y:    (B, L) or (B, L, C) received results.
 
-    systematic="auto" (default) takes the no-straggler fast path: when G's
-    top L rows are the identity and a task received only those rows, G[rows]
-    is a permutation matrix, so the solution is ``out[rows] = y`` — a
-    scatter, bit-identical to the general solve (LU of a permutation matrix
-    is exact) at O(L) instead of O(L³).  "never" forces the general solve
-    (the benchmark baseline).
+    systematic="auto" (default) exploits an identity prefix (G's top L rows
+    are exactly I_L) at every straggler pattern:
 
-    Mixed tasks (any parity row received) use one stacked solve:
-    ``np.linalg.solve`` on the numpy backend, a cached jitted
-    ``jnp.linalg.solve`` on jax/pallas.
+    * a task that received *only* systematic rows is a permutation decode —
+      ``out[rows] = y``, a scatter, bit-identical to the general solve (LU
+      of a permutation matrix is exact) at O(L) instead of O(L³);
+    * a task with ``0 < s < L`` systematic rows *substitutes* the known
+      coordinates (each received systematic row pins one entry of x
+      exactly) and solves only the (L−s)-sized parity block for the rest —
+      tasks are grouped by s so each group is one stacked solve.  The
+      pinned coordinates are bit-identical to the received values; the
+      parity block agrees with the full L×L solve to solver precision.
+
+    "prefix" keeps only the pure-systematic scatter and sends every mixed
+    task through the full solve (the pre-substitution behaviour; the
+    benchmark baseline for the substitution speedup).  "never" forces the
+    general solve for everything.
+
+    Solves run as ``np.linalg.solve`` on the numpy backend and a cached
+    jitted ``jnp.linalg.solve`` on jax/pallas.
     """
     check_backend(backend)
-    if systematic not in ("auto", "never"):
-        raise ValueError(f"systematic must be 'auto' or 'never', "
+    if systematic not in ("auto", "prefix", "never"):
+        raise ValueError(f"systematic must be 'auto', 'prefix' or 'never', "
                          f"got {systematic!r}")
     rows = np.asarray(rows)
     glist = isinstance(G, (list, tuple))
@@ -475,29 +496,53 @@ def decode_batch(G: np.ndarray, rows: np.ndarray, y: np.ndarray,
     if squeeze:
         y = y[..., None]
     B, L = rows.shape
-    out = np.empty((B, L, y.shape[-1]))
-    if systematic == "auto" and B:
+    C = y.shape[-1]
+    out = np.empty((B, L, C))
+
+    def solve(A: np.ndarray, b: np.ndarray) -> np.ndarray:
+        if _use_jax(backend):
+            return np.asarray(_solve_jit()(A, b))
+        return np.linalg.solve(A, b)
+
+    sys_ok = False
+    if systematic != "never" and B:
         sys_ok = (all(_identity_prefix(np.asarray(g)) for g in G) if glist
                   else _identity_prefix(G))
-        fast = (rows < L).all(axis=1) if sys_ok else np.zeros(B, dtype=bool)
-    else:
-        fast = np.zeros(B, dtype=bool)
+    sys_counts = (rows < L).sum(axis=1) if sys_ok else np.zeros(B, dtype=int)
+    fast = sys_counts == L
     fi = np.nonzero(fast)[0]
     if fi.size:
         # permutation decode: out[b, rows[b, i]] = y[b, i]
         out[fi[:, None], rows[fi]] = y[fi]
-    si = np.nonzero(~fast)[0]
-    if si.size:
-        if glist:
-            Gs = np.stack([np.asarray(G[i], dtype=np.float64)[rows[i]]
-                           for i in si])                   # (S, L, L)
-        elif G.ndim == 2:
-            Gs = G[rows[si]]                               # (S, L, L)
-        else:
-            Gs = G[si[:, None], rows[si]]                  # (S, L, L)
-        ys = y[si]
-        if _use_jax(backend):
-            out[si] = np.asarray(_solve_jit()(Gs, ys))
-        else:
-            out[si] = np.linalg.solve(Gs, ys)
+
+    if systematic == "auto" and sys_ok:
+        full = np.nonzero(sys_counts == 0)[0]
+    else:
+        full = np.nonzero(~fast)[0]
+    if full.size:
+        Gs = _gather_generator_rows(G, glist, full, rows[full])
+        out[full] = solve(Gs, y[full])
+
+    if systematic == "auto" and sys_ok:
+        mixed = (sys_counts > 0) & (sys_counts < L)
+        for s in np.unique(sys_counts[mixed]):
+            grp = np.nonzero(sys_counts == s)[0]
+            g = grp.size
+            m_sys = rows[grp] < L                            # (g, L)
+            # boolean indexing is row-major, so per-task receive order is
+            # preserved inside both partitions
+            sys_rows = rows[grp][m_sys].reshape(g, s)
+            sys_y = y[grp][m_sys].reshape(g, s, C)
+            par_rows = rows[grp][~m_sys].reshape(g, L - s)
+            par_y = y[grp][~m_sys].reshape(g, L - s, C)
+            # unknown coordinates: per-task complement of the pinned ones
+            known = np.zeros((g, L), dtype=bool)
+            known[np.arange(g)[:, None], sys_rows] = True
+            unk = np.nonzero(~known)[1].reshape(g, L - s)
+            Gp = _gather_generator_rows(G, glist, grp, par_rows)
+            Gk = np.take_along_axis(Gp, sys_rows[:, None, :], axis=2)
+            A = np.take_along_axis(Gp, unk[:, None, :], axis=2)
+            sol = solve(A, par_y - Gk @ sys_y)
+            out[grp[:, None], sys_rows] = sys_y              # exact pins
+            out[grp[:, None], unk] = sol
     return out[..., 0] if squeeze else out

@@ -1,0 +1,140 @@
+"""Churn re-timing of in-flight coded tasks, and multi-task step barriers.
+
+Two consumers share this module so their delivery semantics cannot drift:
+
+* the :class:`~repro.stream.engine.StreamingExecutor` re-times each
+  in-flight task's per-node delivery vector when a worker leaves, degrades
+  or restores (``churn_finish_update`` is the single implementation of that
+  arithmetic, factored out of the engine's ``_on_churn``);
+* the coded serving bridge (:mod:`repro.serve_coded`), whose one "step" is
+  now *several* concurrent coded tasks — one per trunk matmul per the
+  configured coding scope — joined by a :class:`StepBarrier`: the step
+  completes when every member task's earliest covering prefix has landed,
+  and churn re-times every member through the same
+  ``churn_finish_update`` path the engine uses.
+
+Semantics (identical to the engine's historical in-line behaviour):
+
+* ``leave``    — undelivered rows on that worker are lost (delivery → ∞);
+* ``degrade``  — the *remaining* time of undelivered rows stretches by the
+  event factor (work already under way is slowed, not restarted);
+* ``restore``  — the remaining time shrinks by the accumulated slowdown
+  being cleared (``undo``);
+* ``join``     — no effect on in-flight deliveries (new capacity only
+  helps future dispatches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from . import backend as bk
+
+__all__ = ["churn_finish_update", "BarrierTask", "StepBarrier"]
+
+
+def churn_finish_update(finish: np.ndarray, loads: np.ndarray, worker: int,
+                        kind: str, t: float, *, factor: float = 1.0,
+                        undo: float = 1.0) -> bool:
+    """Apply one churn event to an absolute delivery vector, in place.
+
+    ``finish``/``loads`` are (N+1,) per-node arrays (column 0 = the
+    master's local processor, which churn never touches by construction —
+    worker events carry n ≥ 1).  Only *pending* deliveries move: a shard
+    that already landed (``finish <= t``) is history.  Returns True when
+    the vector changed (the caller should re-derive the completion time).
+    """
+    w = int(worker)
+    if loads[w] <= 0 or finish[w] <= t:
+        return False
+    if kind == "leave":
+        if not np.isfinite(finish[w]):
+            return False
+        finish[w] = np.inf
+        return True
+    if not np.isfinite(finish[w]):
+        return False
+    if kind == "degrade":
+        finish[w] = t + (finish[w] - t) * factor
+        return True
+    if kind == "restore":
+        if undo <= 0:
+            return False
+        finish[w] = t + (finish[w] - t) / undo
+        return True
+    return False                                  # "join": in-flight unmoved
+
+
+@dataclasses.dataclass
+class BarrierTask:
+    """One coded matmul of a serving dispatch, delivery-timed per node.
+
+    name:   log label ("head", "blk1.wq", ...).
+    l_int:  (N+1,) integer shard sizes dispatched per node.
+    finish: (N+1,) absolute delivery times (inf = never arrives).
+    need:   rows whose earliest covering prefix completes this task
+            (the coded matrix's own L, not the plan scenario's).
+    """
+    name: str
+    l_int: np.ndarray
+    finish: np.ndarray
+    need: float
+    completion: float = np.inf
+
+
+class StepBarrier:
+    """Completion barrier over the coded tasks of one serving dispatch.
+
+    All member tasks are dispatched together (the workers hold the encoded
+    weight shards; the step's activations stream to them as one admission),
+    and the step's result is usable only when *every* task has decoded —
+    so the barrier completes at the max of the per-task earliest-prefix
+    completion times.  ``retime`` runs the engine's churn arithmetic over
+    every member and re-derives the completions in one batched
+    ``completion_times`` call.
+    """
+
+    def __init__(self, tasks: Sequence[BarrierTask]):
+        if not tasks:
+            raise ValueError("a StepBarrier needs at least one task")
+        self.tasks: List[BarrierTask] = list(tasks)
+        self.recompute()
+
+    @property
+    def completion(self) -> float:
+        """Absolute step completion: max over member tasks (inf when any
+        member can no longer cover its rows)."""
+        return max(task.completion for task in self.tasks)
+
+    def recompute(self) -> float:
+        F = np.stack([task.finish for task in self.tasks])
+        l = np.stack([task.l_int.astype(np.float64) for task in self.tasks])
+        need = np.array([task.need for task in self.tasks])
+        comp = bk.completion_times(F, l, need)
+        for task, c in zip(self.tasks, comp):
+            task.completion = float(c)
+        return self.completion
+
+    def retime(self, worker: int, kind: str, t: float, *,
+               factor: float = 1.0, undo: float = 1.0) -> bool:
+        """Apply a churn event to every member's pending deliveries.
+
+        Returns True when any delivery moved (completions were re-derived
+        and the caller must reschedule its step event)."""
+        changed = [churn_finish_update(task.finish, task.l_int, worker, kind,
+                                       t, factor=factor, undo=undo)
+                   for task in self.tasks]
+        if any(changed):
+            self.recompute()
+            return True
+        return False
+
+    def rows_dispatched(self) -> int:
+        return int(sum(int(task.l_int.sum()) for task in self.tasks))
+
+    def rows_delivered_by(self, t: float) -> float:
+        F = np.stack([task.finish for task in self.tasks])
+        l = np.stack([task.l_int.astype(np.float64) for task in self.tasks])
+        return float(bk.delivered_by(F, l, np.full(len(self.tasks), t)).sum())

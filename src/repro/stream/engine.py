@@ -31,6 +31,7 @@ import numpy as np
 from ..core import mds
 from ..core.problem import Scenario
 from . import backend as bk
+from .barrier import churn_finish_update
 from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, ArrivalProcess,
                      EventLoop, PoissonProcess, WorkerEvent)
 from .metrics import StreamMetrics, TaskRecord
@@ -306,23 +307,11 @@ class StreamingExecutor:
         # re-dispatches and speculative twins triggered below sample their
         # delays from it
         self._sc_eff = self.planner.effective_scenario(self.online, self.scale)
-        if ev.kind == "leave":
+        if ev.kind in ("leave", "degrade", "restore"):
             for fl in self._attempts():
-                if self._alive(fl) and fl.l_row[w] > 0 and fl.finish[w] > t:
-                    fl.finish[w] = np.inf
-                    self._retime(fl, t)
-        elif ev.kind == "degrade":
-            for fl in self._attempts():
-                if self._alive(fl) and fl.l_row[w] > 0 \
-                        and np.isfinite(fl.finish[w]) and fl.finish[w] > t:
-                    fl.finish[w] = t + (fl.finish[w] - t) * ev.factor
-                    self._retime(fl, t)
-        elif ev.kind == "restore":
-            for fl in self._attempts():
-                if self._alive(fl) and fl.l_row[w] > 0 \
-                        and np.isfinite(fl.finish[w]) and fl.finish[w] > t \
-                        and undo > 0:
-                    fl.finish[w] = t + (fl.finish[w] - t) / undo
+                if self._alive(fl) and churn_finish_update(
+                        fl.finish, fl.l_row, w, ev.kind, t,
+                        factor=ev.factor, undo=undo):
                     self._retime(fl, t)
         self.planner.ensure_plan(self.online, self.scale, event=True)
         self._drain_queue(t)

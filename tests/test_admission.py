@@ -263,6 +263,47 @@ def test_speculation_with_leave_churn_survives():
         assert np.isfinite(r["t_complete"])
 
 
+def test_twin_losing_after_original_completion_never_double_counts():
+    """Regression pin for the COMPLETION version check: a speculative twin
+    whose completion event fires *after* the original already finalized
+    must be a no-op — no second completion record, no share-ledger
+    underflow, no extra throughput or deadline-miss accounting."""
+    sc = _scenario(M=1, N=4, L=64.0, seed=20)
+    srcs = [TraceProcess(0, [0.0], deadlines=[5000.0])]
+    ex = StreamingExecutor(
+        sc, srcs, policy="fractional", rng=1,
+        admission=AdmissionConfig(speculate_factor=1.1))
+    ex._ran = True
+    ex.max_tasks = 1
+    ex._on_arrival(0, 0.0)
+    assert 0 in ex.inflight and not ex.twins
+    fl = ex.inflight[0]
+    # race a twin on the spare columns (what _maybe_speculate dispatches)
+    tw = ex._dispatch(0, 1.0, min_fraction=1e-3)
+    assert tw is not None and tw.version != fl.version
+    tw.speculative = True
+    ex.twins[0] = tw
+    k_used = ex.pool.k_used.copy()
+    assert (k_used[1:] > 0).any()
+    # the original completes first: twin must be cancelled and released
+    ex._on_completion((0, fl.version), fl.completion)
+    assert ex.metrics.summary()["tasks_completed"] == 1
+    assert 0 not in ex.twins and 0 not in ex.inflight
+    assert (ex.pool.k_used == 0).all() and (ex.pool.b_used == 0).all()
+    # the loser's stale completion event fires later: pure no-op
+    before = (len(ex.metrics.completed), ex.pool.k_used.copy())
+    ex._on_completion((0, tw.version), tw.completion)
+    ex._on_completion((0, fl.version), fl.completion + 1.0)   # double-fire
+    assert len(ex.metrics.completed) == before[0]
+    assert (ex.pool.k_used == before[1]).all()
+    s = ex.metrics.summary()
+    assert s["tasks_completed"] == 1
+    assert s["deadline_miss_rate"] == 0.0        # one verdict, not two
+    recs = ex.metrics.to_records()
+    assert [r["tid"] for r in recs] == [0]
+    assert recs[0]["rows_delivered"] >= recs[0]["rows_needed"] - 1e-6
+
+
 def test_policy_runs_replay_deterministically():
     """EDF + fair + speculation: same seed → identical records."""
     sc = _scenario(M=2, N=6, L=48.0, seed=5)

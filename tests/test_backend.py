@@ -81,13 +81,76 @@ def test_decode_fast_path_bitwise_equals_solve():
     G, rows, y, x_true = _decode_case()
     out_auto = decode_batch(G, rows, y)
     out_solve = decode_batch(G, rows, y, systematic="never")
+    out_prefix = decode_batch(G, rows, y, systematic="prefix")
     np.testing.assert_allclose(out_auto, x_true, atol=1e-8)
     pure = (rows < G.shape[1]).all(axis=1)
     assert pure.any() and not pure.all()
     # LU of a permutation matrix is exact, so scatter == solve bit-for-bit
     assert (out_auto[pure] == out_solve[pure]).all()
-    # mixed tasks always go through the solve
-    assert (out_auto[~pure] == out_solve[~pure]).all()
+    # "prefix" keeps the pre-substitution behaviour: mixed tasks take the
+    # full L×L solve, bit-for-bit
+    assert (out_prefix[~pure] == out_solve[~pure]).all()
+    # "auto" substitutes; it still agrees with the full solve to solver
+    # precision on the mixed tasks
+    np.testing.assert_allclose(out_auto[~pure], out_solve[~pure],
+                               rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# decode_batch: mixed-row substitution (s < L systematic rows)
+# ---------------------------------------------------------------------------
+
+def _mixed_case(seed, L, counts):
+    """One task per entry of ``counts``: s systematic + (L-s) parity rows."""
+    rng = np.random.default_rng(seed)
+    Lt = 2 * L + 3
+    G = np.vstack([np.eye(L), rng.normal(0, 1 / np.sqrt(L), (Lt - L, L))])
+    x_true = rng.normal(size=(len(counts), L))
+    rows = np.stack([
+        np.concatenate([rng.permutation(L)[:s],
+                        L + rng.permutation(Lt - L)[:L - s]])
+        for s in counts])
+    for r in rows:                      # interleave systematic/parity order
+        rng.shuffle(r)
+    y = np.einsum("bij,bj->bi", G[rows], x_true)
+    return G, rows, y, x_true
+
+
+@pytest.mark.parametrize("counts", [
+    (3,), (0, 5, 5, 12), (1, 1, 7, 0, 16, 7, 3), tuple(range(17))])
+def test_decode_mixed_substitution_group_shapes(counts):
+    """Substitution solves only the (L-s)-sized parity block, grouped by s:
+    every group shape decodes to the truth, the pinned systematic
+    coordinates are bit-identical to the received values, and the result
+    agrees with the full solve to solver precision."""
+    L = 16
+    G, rows, y, x_true = _mixed_case(seed=7 + len(counts), L=L, counts=counts)
+    out = decode_batch(G, rows, y)
+    out_full = decode_batch(G, rows, y, systematic="prefix")
+    np.testing.assert_allclose(out, x_true, atol=1e-9)
+    np.testing.assert_allclose(out, out_full, rtol=1e-9, atol=1e-9)
+    for b in range(rows.shape[0]):
+        sys_m = rows[b] < L
+        # each received systematic row pins x[row] = y exactly (scatter)
+        assert (out[b, rows[b][sys_m]] == y[b, sys_m]).all()
+    # matrix right-hand sides ride the same substitution path
+    y3 = np.stack([y, -0.5 * y], axis=-1)
+    out3 = decode_batch(G, rows, y3)
+    np.testing.assert_allclose(out3[..., 0], x_true, atol=1e-9)
+    np.testing.assert_allclose(out3[..., 1], -0.5 * x_true, atol=1e-9)
+
+
+def test_decode_mixed_substitution_generator_forms_and_jax():
+    counts = (0, 2, 9, 9, 15, 16)
+    L = 16
+    G, rows, y, x_true = _mixed_case(seed=3, L=L, counts=counts)
+    B = rows.shape[0]
+    base = decode_batch(G, rows, y)
+    assert (decode_batch(np.stack([G] * B), rows, y) == base).all()
+    assert (decode_batch([G] * B, rows, y) == base).all()
+    if has_jax():
+        np.testing.assert_allclose(decode_batch(G, rows, y, backend="jax"),
+                                   x_true, rtol=1e-4, atol=1e-4)
 
 
 def test_decode_batch_matrix_rhs_and_stacked_generators():

@@ -4,6 +4,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import decode, decode_ls, encode, make_generator, split_loads
 from repro.core.mds import integer_loads
+from repro.stream.backend import BACKENDS, decode_batch, has_jax
 
 
 @settings(max_examples=25, deadline=None)
@@ -41,6 +42,76 @@ def test_ls_decode_overdetermined_beats_noise():
     err_ls = np.abs(decode_ls(G, rows, y) - A @ x).max()
     err_sq = np.abs(decode(G, rows[:L], y[:L]) - A @ x).max()
     assert err_ls <= err_sq * 1.5
+
+
+# ---------------------------------------------------------------------------
+# Property: encode→receive→decode round-trip with partial systematic
+# prefixes, across all backends
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(4, 20),            # L: task size
+       st.integers(1, 14),            # n_parity: redundancy rows available
+       st.data())
+def test_roundtrip_partial_systematic_prefix_all_backends(L, n_parity, data):
+    """decode(encode(A)·x received rows) == A·x for random (L, n, s): a
+    systematic generator with n parity rows, a task that received s
+    systematic rows (0 ≤ s ≤ L) and L−s parity rows — the exact shape of a
+    partially-straggled serving prefix — on every backend."""
+    seed = data.draw(st.integers(0, 10_000))
+    s = data.draw(st.integers(max(L - n_parity, 0), L))
+    rng = np.random.default_rng(seed)
+    Lt = L + n_parity
+    G = make_generator(L, Lt, kind="systematic", rng=rng, dtype=np.float64)
+    G = np.asarray(G, dtype=np.float64)
+    A = rng.normal(size=(L, 5))
+    x = rng.normal(size=5)
+    y_full = encode(G, A) @ x                      # every coded row's result
+    rows = np.concatenate([
+        rng.permutation(L)[:s],                    # received systematic rows
+        L + rng.permutation(Lt - L)[:L - s],       # received parity rows
+    ]).astype(np.int64)
+    rng.shuffle(rows)                              # interleaved arrivals
+    truth = A @ x
+    for backend in BACKENDS:
+        if backend != "numpy" and not has_jax():
+            continue
+        out = decode_batch(G, rows[None], np.asarray(y_full)[rows][None],
+                           backend=backend)[0]
+        # jax/pallas solve in float32 (no x64): looser tolerance, as in
+        # the streaming engine's verification
+        tol = dict(rtol=1e-6, atol=1e-7) if backend == "numpy" \
+            else dict(rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(out, truth, **tol,
+                                   err_msg=f"{backend} (L={L}, s={s})")
+        # received systematic rows pin their coordinates bit-exactly
+        sys_m = rows < L
+        assert (out[rows[sys_m]] == np.asarray(y_full)[rows[sys_m]]).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 12), st.integers(2, 6), st.integers(0, 1000))
+def test_roundtrip_batched_mixed_groups(L, B, seed):
+    """A batch of tasks with different systematic counts s decodes each
+    task independently (grouped substitution must not cross-contaminate)."""
+    rng = np.random.default_rng(seed)
+    Lt = 2 * L
+    G = np.asarray(make_generator(L, Lt, kind="systematic", rng=rng,
+                                  dtype=np.float64), dtype=np.float64)
+    A = rng.normal(size=(B, L, 3))
+    x = rng.normal(size=(B, 3))
+    truth = np.einsum("bls,bs->bl", A, x)
+    rows = np.empty((B, L), dtype=np.int64)
+    y = np.empty((B, L))
+    for b in range(B):
+        s = int(rng.integers(0, L + 1))
+        r = np.concatenate([rng.permutation(L)[:s],
+                            L + rng.permutation(Lt - L)[:L - s]])
+        rng.shuffle(r)
+        rows[b] = r
+        y[b] = (G[r] @ A[b]) @ x[b]
+    out = decode_batch(G, rows, y)
+    np.testing.assert_allclose(out, truth, rtol=1e-6, atol=1e-7)
 
 
 def test_integer_loads_and_split():
