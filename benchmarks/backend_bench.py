@@ -15,6 +15,10 @@ REPRO_BENCH_BACKEND_JSON) so the perf trajectory is machine-readable:
     matmul at serving-path sizes.  Off-TPU the kernel runs in interpret
     mode — correctness-scale numbers only, recorded with the flag so the
     JSON is honest about what was measured.
+(d) The batched shard-execution kernel: one ``coded_shard_matmul_batch``
+    pass over a serving step's packed 128-aligned shard tiles vs the
+    per-tile loop (numpy einsum reference, jax vmap fallback, Pallas
+    one-launch path).
 """
 from __future__ import annotations
 
@@ -128,6 +132,46 @@ def run_pallas_encode(L: int = 256, S: int = 256, seed: int = 0) -> dict:
     return rec
 
 
+def run_shard_matmul(tiles: int = 12, tile: int = 128, D: int = 128,
+                     cols: int = 4, seed: int = 0) -> dict:
+    """The batched serving kernel: every packed shard tile of a step in
+    one pass (``kernels.ops.coded_shard_matmul_batch``) vs the per-tile
+    loop it replaces — numpy einsum loop, jax vmap, Pallas one-launch
+    (interpret off-TPU: correctness-scale numbers, flagged)."""
+    if not has_jax():  # pragma: no cover
+        return {}
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    T = np.asarray(rng.normal(size=(tiles, tile, D)), np.float32)
+    x = np.asarray(rng.normal(size=(D, cols)), np.float32)
+    Td, xd = jnp.asarray(T), jnp.asarray(x)
+    t_np = _best(lambda: [np.einsum("ld,dc->lc", T[i], x)
+                          for i in range(tiles)])
+    vm = lambda: np.asarray(ops.coded_shard_matmul_batch(Td, xd,
+                                                         mode="vmap"))
+    pl = lambda: np.asarray(ops.coded_shard_matmul_batch(Td, xd,
+                                                         mode="pallas"))
+    vm(), pl()                                 # compile outside the timing
+    t_vm, t_pl = _best(vm), _best(pl)
+    interp = ops.default_interpret()
+    err = float(np.abs(vm() - np.stack([T[i] @ x
+                                        for i in range(tiles)])).max())
+    rec = {
+        "tiles": tiles, "tile": tile, "D": D, "cols": cols,
+        "numpy_loop_seconds": round(t_np, 5),
+        "vmap_seconds": round(t_vm, 5),
+        "pallas_seconds": round(t_pl, 5),
+        "vmap_speedup_vs_loop": round(t_np / t_vm, 2),
+        "interpret_mode": bool(interp),
+        "max_err": err,
+    }
+    emit("backend/shard_matmul_batch", t_vm * 1e6,
+         f"tiles={tiles}x{tile}x{D};vmap_speedup={rec['vmap_speedup_vs_loop']}"
+         f"x;interpret={interp};max_err={err:.2e}")
+    return rec
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--trials", type=int, default=100_000,
@@ -140,6 +184,7 @@ def main(argv=None):
         "montecarlo": run_montecarlo(args.trials),
         "decode": run_decode(),
         "pallas_encode": run_pallas_encode(),
+        "shard_matmul": run_shard_matmul(),
     }
     path = args.json or os.environ.get("REPRO_BENCH_BACKEND_JSON",
                                        "BENCH_backend.json")

@@ -17,6 +17,19 @@ committed the baselines, which is exactly why the gate is a *ratio*: a
 genuine 2x throughput regression trips it, runner-to-runner noise does
 not.  ``REPRO_REGRESSION_FACTOR`` overrides the factor without a workflow
 edit.
+
+``--min KEY=VALUE`` adds an *absolute floor* on a fresh metric —
+machine-independent ratios recorded inside one bench JSON (e.g.
+``BENCH_serve.json``'s ``trunk_wall_vs_head``: trunk and head wall
+throughput come from the same process on the same runner, so their ratio
+must hold anywhere) are gated against a constant instead of the committed
+copy:
+
+    python -m benchmarks.check_regression \
+        --baseline BENCH_serve.json --fresh fresh_BENCH_serve.json \
+        --key scopes.trunk.batched.tokens_per_wall_second \
+        --min trunk_wall_vs_head=0.4 \
+        --min batched_wall_speedup.trunk=1.0
 """
 from __future__ import annotations
 
@@ -41,14 +54,20 @@ def main(argv=None) -> int:
                    help="committed bench JSON (the reference)")
     p.add_argument("--fresh", required=True,
                    help="freshly produced bench JSON")
-    p.add_argument("--key", action="append", required=True, dest="keys",
+    p.add_argument("--key", action="append", default=[], dest="keys",
                    help="dotted path to a higher-is-better metric "
                         "(repeatable)")
+    p.add_argument("--min", action="append", default=[], dest="mins",
+                   metavar="KEY=VALUE",
+                   help="absolute floor on a fresh metric (dotted path "
+                        "= number; repeatable; no baseline comparison)")
     p.add_argument("--factor", type=float,
                    default=float(os.environ.get("REPRO_REGRESSION_FACTOR",
                                                 "2.0")),
                    help="maximum tolerated slowdown ratio (default 2.0)")
     args = p.parse_args(argv)
+    if not args.keys and not args.mins:
+        p.error("need at least one --key or --min")
 
     with open(args.baseline) as f:
         base = json.load(f)
@@ -56,20 +75,31 @@ def main(argv=None) -> int:
         fresh = json.load(f)
 
     failed = False
-    print(f"{'metric':<40} {'baseline':>12} {'fresh':>12} {'ratio':>7}  gate")
+    print(f"{'metric':<44} {'baseline':>12} {'fresh':>12} {'ratio':>7}  gate")
     for key in args.keys:
         b, fval = get_path(base, key), get_path(fresh, key)
         ratio = fval / b if b > 0 else float("inf")
         ok = fval >= b / args.factor
         failed |= not ok
-        print(f"{key:<40} {b:12.2f} {fval:12.2f} {ratio:7.2f}  "
+        print(f"{key:<44} {b:12.2f} {fval:12.2f} {ratio:7.2f}  "
               f"{'ok' if ok else f'REGRESSION >{args.factor}x'}")
+    for spec in args.mins:
+        key, _, floor_s = spec.partition("=")
+        if not floor_s:
+            p.error(f"--min needs KEY=VALUE, got {spec!r}")
+        floor = float(floor_s)
+        fval = get_path(fresh, key)
+        ok = fval >= floor
+        failed |= not ok
+        print(f"{key:<44} {floor:>12.2f} {fval:12.2f} {'':>7}  "
+              f"{'ok' if ok else 'BELOW FLOOR'}")
     if failed:
         print(f"[check_regression] FAILED: fresh metrics regressed more "
-              f"than {args.factor}x vs {args.baseline}", file=sys.stderr)
+              f"than {args.factor}x vs {args.baseline} or fell below a "
+              f"--min floor", file=sys.stderr)
         return 1
     print(f"[check_regression] ok (factor {args.factor}x, "
-          f"{len(args.keys)} metrics)")
+          f"{len(args.keys)} ratio + {len(args.mins)} floor metrics)")
     return 0
 
 

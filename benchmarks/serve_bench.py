@@ -1,5 +1,5 @@
 """Coded serving benchmark: admission policies vs the FIFO baseline, and
-coding scopes vs head-only.
+coding scopes × shard-execution engines vs head-only.
 
 Serves one seeded contended workload (more requests than batch slots,
 mixed tight/loose deadlines, mid-run churn) through the coded serving
@@ -9,15 +9,25 @@ wall clock), p50/p99 request sojourn and the deadline-miss rate into
 EDF/fair numbers expressed relative to FIFO.
 
 A second sweep serves the same workload once per ``coding_scope``
-(head | ffn | trunk, default pool, EDF) — per-scope tokens/s rows with
-the trunk scope's throughput expressed relative to head-only (the deeper
-scopes turn one step into 7/15 concurrent per-layer coded tasks; the
-barrier completes at their max, so the slowdown is bounded by the
-per-task delay tail, not the task count).
+(head | ffn | trunk, default pool, EDF) × ``execution`` engine
+(``serial`` shard-by-shard reference | ``batched`` packed step-barrier
+passes).  Each cell reports two wall-clock numbers:
+
+* ``tokens_per_wall_second`` — the *serving configuration* (``verify``
+  off: no reference matmuls ride along; distributing the products is the
+  point), best of ``--reps`` runs to damp CI-runner noise;
+* a verification pass (``verify`` on, same workload) contributing
+  ``decode_max_err`` / ``argmax_match_rate`` and asserting every decoded
+  matmul matched the uncoded product bit-for-bit at the greedy argmax.
+
+Headline ratios: ``trunk_wall_vs_head`` (batched trunk wall throughput
+over batched head — the "Wall-clock shard execution" gap this records),
+``batched_wall_speedup`` per scope (batched over serial), and the
+sim-time ``trunk_throughput_vs_head``.
 
     PYTHONPATH=src python -m benchmarks.serve_bench \
         [--requests 24] [--gen-len 8] [--slots 2] [--rate 0.02] \
-        [--backend numpy] [--steps-per-dispatch 1] [--seed 0]
+        [--backend numpy] [--steps-per-dispatch 1] [--reps 3] [--seed 0]
 """
 from __future__ import annotations
 
@@ -25,8 +35,9 @@ import argparse
 import json
 import os
 
-from repro.serve_coded import (CODING_SCOPES, CodedServingBridge,
-                               serve_policy_sweep, synthetic_requests)
+from repro.serve_coded import (CODING_SCOPES, EXECUTION_MODES,
+                               CodedServingBridge, serve_policy_sweep,
+                               synthetic_requests)
 from repro.stream import AdmissionConfig, WorkerEvent
 
 from .common import emit
@@ -49,14 +60,19 @@ def _report_row(rep) -> dict:
     }
 
 
+def _default_churn():
+    return [WorkerEvent(400.0, 2, "degrade", 4.0),
+            WorkerEvent(1500.0, 5, "leave"),
+            WorkerEvent(6000.0, 5, "join"),
+            WorkerEvent(8000.0, 2, "restore")]
+
+
 def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
                     slots: int = 2, rate: float = 0.02, prompt_len: int = 16,
                     backend: str = "numpy", steps_per_dispatch: int = 1,
-                    seed: int = 0, json_path: str | None = None) -> dict:
-    churn = [WorkerEvent(400.0, 2, "degrade", 4.0),
-             WorkerEvent(1500.0, 5, "leave"),
-             WorkerEvent(6000.0, 5, "join"),
-             WorkerEvent(8000.0, 2, "restore")]
+                    reps: int = 3, seed: int = 0,
+                    json_path: str | None = None) -> dict:
+    churn = _default_churn()
     per_policy = {}
     bridge = CodedServingBridge(masters=masters, backend=backend, seed=seed,
                                 slots_per_master=slots,
@@ -69,29 +85,59 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
     for policy, rep in reports.items():
         per_policy[policy] = _report_row(rep)
 
-    # scope sweep: same workload, same pool, EDF, one bridge per scope.
-    # The head row *is* the policy sweep's EDF run (same bridge config) —
-    # reuse it instead of re-serving.
-    per_scope = {}
-    for scope in CODING_SCOPES:
-        if scope == "head":
-            srep = reports["edf"]
-        else:
-            sbridge = CodedServingBridge(
-                masters=masters, backend=backend, seed=seed,
-                slots_per_master=slots, coding_scope=scope,
-                steps_per_dispatch=steps_per_dispatch,
-                admission=AdmissionConfig(policy="edf"))
-            sbridge._setup_model(prompt_len + gen_len + 8)
-            srep = sbridge.serve(reqs, churn=churn)
-        assert srep.decode_ok, (scope, srep.max_err)
-        row = _report_row(srep)
+    # scope × execution sweep: same workload, same pool, EDF.  The wall
+    # numbers come from the serving configuration (verify off — the
+    # reference matmuls exist only for CI assertions); a separate
+    # verified run per cell contributes decode_max_err and the argmax
+    # assertion, so the JSON carries both honesty and throughput.
+    per_scope: dict = {}
+    cells = [(scope, execution) for scope in CODING_SCOPES
+             for execution in EXECUTION_MODES]
+    timers = {}
+    for scope, execution in cells:
+        vbridge = CodedServingBridge(
+            masters=masters, backend=backend, seed=seed,
+            slots_per_master=slots, coding_scope=scope,
+            steps_per_dispatch=steps_per_dispatch, execution=execution,
+            admission=AdmissionConfig(policy="edf"))
+        vbridge._setup_model(prompt_len + gen_len + 8)
+        vrep = vbridge.serve(reqs, churn=churn)
+        assert vrep.decode_ok, (scope, execution, vrep.max_err)
+        row = _report_row(vrep)
+        row["verified_tokens_per_wall_second"] = \
+            row.pop("tokens_per_wall_second")
+        row["verified_wall_seconds"] = row.pop("wall_seconds")
+        row["execution"] = execution
+        row["decode_backend"] = vrep.decode_backend
         row["tasks_per_step"] = \
-            int(srep.steps[0]["n_tasks"]) if srep.steps else 0
-        per_scope[scope] = row
+            int(vrep.steps[0]["n_tasks"]) if vrep.steps else 0
+        per_scope.setdefault(scope, {})[execution] = row
+        tbridge = CodedServingBridge(
+            masters=masters, backend=backend, seed=seed,
+            slots_per_master=slots, coding_scope=scope,
+            steps_per_dispatch=steps_per_dispatch, execution=execution,
+            verify=False,
+            admission=AdmissionConfig(policy="edf"))
+        tbridge._setup_model(prompt_len + gen_len + 8)
+        trep = tbridge.serve(reqs, churn=churn)       # warm the engine
+        assert trep.tokens == vrep.tokens    # engines + verify agree
+        timers[(scope, execution)] = tbridge
+    # serving-configuration timing, reps round-robined across the cells
+    # so a noise burst on a shared CI runner degrades every cell alike —
+    # the cross-scope wall ratios stay comparable even when absolute
+    # throughput wobbles
+    for _ in range(max(reps, 1)):
+        for cell, tbridge in timers.items():
+            trep = tbridge.serve(reqs, churn=churn)
+            tps = trep.summary()["tokens_per_wall_second"]
+            row = per_scope[cell[0]][cell[1]]
+            if tps > row.get("tokens_per_wall_second", 0.0):
+                row["tokens_per_wall_second"] = round(tps, 1)
+                row["wall_seconds"] = round(trep.wall_seconds, 3)
 
     base = per_policy["fifo"]
-    head = per_scope["head"]
+    head_b = per_scope["head"]["batched"]
+    trunk_b = per_scope["trunk"]["batched"]
     record = {
         "bench": "coded_serving_policies",
         "requests": requests,
@@ -100,6 +146,7 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
         "slots_per_master": slots,
         "backend": backend,
         "steps_per_dispatch": steps_per_dispatch,
+        "timing_reps": reps,
         "baseline": "fifo",
         "policies": per_policy,
         "edf_miss_vs_fifo": round(
@@ -110,8 +157,17 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
             / max(base["tokens_per_sim_second"], 1e-12), 3),
         "scopes": per_scope,
         "trunk_throughput_vs_head": round(
-            per_scope["trunk"]["tokens_per_sim_second"]
-            / max(head["tokens_per_sim_second"], 1e-12), 3),
+            trunk_b["tokens_per_sim_second"]
+            / max(head_b["tokens_per_sim_second"], 1e-12), 3),
+        "trunk_wall_vs_head": round(
+            trunk_b["tokens_per_wall_second"]
+            / max(head_b["tokens_per_wall_second"], 1e-12), 3),
+        "batched_wall_speedup": {
+            scope: round(per_scope[scope]["batched"]
+                         ["tokens_per_wall_second"]
+                         / max(per_scope[scope]["serial"]
+                               ["tokens_per_wall_second"], 1e-12), 3)
+            for scope in CODING_SCOPES},
     }
     path = json_path or os.environ.get("REPRO_BENCH_SERVE_JSON",
                                        "BENCH_serve.json")
@@ -123,6 +179,9 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
          f"edf_miss_vs_fifo={record['edf_miss_vs_fifo']};"
          f"fair_throughput_vs_fifo={record['fair_throughput_vs_fifo']};"
          f"trunk_vs_head={record['trunk_throughput_vs_head']};"
+         f"trunk_wall_vs_head={record['trunk_wall_vs_head']};"
+         f"batched_speedup_trunk="
+         f"{record['batched_wall_speedup']['trunk']};"
          f"json={path}")
     return record
 
@@ -137,13 +196,15 @@ def main(argv=None):
     p.add_argument("--backend", default="numpy",
                    choices=("numpy", "jax", "pallas"))
     p.add_argument("--steps-per-dispatch", type=int, default=1)
+    p.add_argument("--reps", type=int, default=3,
+                   help="timing repetitions per cell (best wall wins)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
     run_serve_bench(requests=args.requests, gen_len=args.gen_len,
                     masters=args.masters, slots=args.slots, rate=args.rate,
                     backend=args.backend,
                     steps_per_dispatch=args.steps_per_dispatch,
-                    seed=args.seed)
+                    reps=args.reps, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -44,6 +44,10 @@ def main(argv=None) -> int:
                          "the full trunk (attention q/k/v/o too)")
     ap.add_argument("--steps-per-dispatch", type=int, default=1,
                     help="decode tokens generated per coded admission")
+    ap.add_argument("--execution", default="batched",
+                    choices=("serial", "batched"),
+                    help="shard-execution engine: packed per-stage passes "
+                         "or the shard-by-shard serial reference")
     ap.add_argument("--backend", default="numpy",
                     choices=("numpy", "jax", "pallas"))
     ap.add_argument("--seed", type=int, default=0)
@@ -68,7 +72,8 @@ def main(argv=None) -> int:
         masters=args.masters, arch=args.arch, backend=args.backend,
         seed=args.seed, slots_per_master=args.slots,
         coding_scope=args.coding_scope,
-        steps_per_dispatch=args.steps_per_dispatch)
+        steps_per_dispatch=args.steps_per_dispatch,
+        execution=args.execution)
     bridge._setup_model(args.prompt_len + args.gen_len + 8)
     reqs = synthetic_requests(
         args.requests, masters=args.masters,

@@ -18,7 +18,8 @@ from .mds_encode import mds_encode_pallas
 from .wkv6 import wkv6_pallas
 
 __all__ = ["matmul", "mds_encode", "mds_encode_batch", "coded_matvec",
-           "coded_matvec_batch", "wkv6", "default_interpret"]
+           "coded_matvec_batch", "coded_shard_matmul_batch", "wkv6",
+           "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -88,6 +89,40 @@ def coded_matvec_batch(a_tilde: jnp.ndarray, x: jnp.ndarray, *,
     mv = functools.partial(coded_matvec, block_rows=block_rows,
                            block_k=block_k, interpret=interpret)
     return jax.vmap(mv)(a_tilde, x)
+
+
+def coded_shard_matmul_batch(tiles: jnp.ndarray, x: jnp.ndarray, *,
+                             block_rows: int = 128, block_k: int = 128,
+                             mode: str = "pallas",
+                             interpret: bool | None = None) -> jnp.ndarray:
+    """Every packed shard tile of a serving step against one operand, in
+    one pass: ``tiles`` (T, R, K) 128-aligned encoded-row tiles (the
+    ragged per-worker shard slices of a whole step barrier, bucketed and
+    zero-padded by ``repro.serve_coded.packing``), ``x`` (K, C) the shared
+    right-hand activations → (T, R, C).
+
+    ``mode="pallas"`` flattens the tile axis into the row grid of the
+    ``coded_matvec`` kernel — because R and K are already block-aligned,
+    the whole stack is exactly one kernel launch with a (T·R/block_rows,
+    K/block_k) grid (the same block layout ``coded_matvec_batch`` uses,
+    without the vmap-added grid dimension).  ``mode="vmap"`` is the plain
+    jnp fallback for the jax backend.  Per-row results are independent of
+    the tile bucketing (each output row is one dot), which is what lets
+    the packing layer re-bucket ragged shards freely.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    T, R, K = tiles.shape
+    if mode == "vmap":
+        return jax.vmap(lambda t: t @ x)(tiles)
+    if mode != "pallas":
+        raise ValueError(f"unknown mode {mode!r}; expected pallas | vmap")
+    if R % block_rows or K % block_k:
+        raise ValueError(f"tiles must be block-aligned, got R={R} K={K} "
+                         f"for block ({block_rows}, {block_k})")
+    flat = coded_matvec_pallas(tiles.reshape(T * R, K), x,
+                               block_rows=block_rows, block_k=block_k,
+                               interpret=interpret)
+    return flat.reshape(T, R, -1)
 
 
 def coded_matvec(a_tilde: jnp.ndarray, x: jnp.ndarray, *,

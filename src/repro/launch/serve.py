@@ -121,6 +121,11 @@ def main(argv=None) -> int:
     ap.add_argument("--steps-per-dispatch", type=int, default=1,
                     help="decode tokens generated per coded admission "
                          "(--coded serving)")
+    ap.add_argument("--execution", default="batched",
+                    choices=("serial", "batched"),
+                    help="shard-execution engine: packed per-stage passes "
+                         "(batched) or the shard-by-shard reference "
+                         "(serial) (--coded serving)")
     args = ap.parse_args(argv)
 
     if args.coded:
@@ -131,7 +136,8 @@ def main(argv=None) -> int:
                                prompt_len=args.prompt_len,
                                gen_len=args.gen_len, seed=args.seed,
                                coding_scope=args.coding_scope,
-                               steps_per_dispatch=args.steps_per_dispatch)
+                               steps_per_dispatch=args.steps_per_dispatch,
+                               execution=args.execution)
 
     import jax
     import jax.numpy as jnp

@@ -15,16 +15,19 @@ greedy tokens are bit-identical to the uncoded pipeline at every scope.
 See ``src/repro/stream/README.md`` (serving-bridge section) for the
 architecture, the coding-scope table and the admission-policy table.
 """
-from .bridge import (CODING_SCOPES, CodedServingBridge, ServeReport,
-                     default_pool)
+from .bridge import (CODING_SCOPES, EXECUTION_MODES, CodedServingBridge,
+                     ServeReport, default_pool)
 from .coded_head import CodedLMHead, HeadStep
-from .coded_linear import CodedLinear, LinearStep
+from .coded_linear import CodedLinear, LinearStep, PrefixPlan, shard_products
+from .packing import PackedShards, PackedStage, ShardProblem
 from .requests import ServeRequest, synthetic_requests
 from .trunk import HostTrunk, trunk_matmul_keys
 
 __all__ = [
     "CodedServingBridge", "ServeReport", "default_pool", "CODING_SCOPES",
-    "CodedLMHead", "HeadStep", "CodedLinear", "LinearStep",
+    "EXECUTION_MODES",
+    "CodedLMHead", "HeadStep", "CodedLinear", "LinearStep", "PrefixPlan",
+    "shard_products", "PackedShards", "PackedStage", "ShardProblem",
     "HostTrunk", "trunk_matmul_keys",
     "ServeRequest", "synthetic_requests",
     "serve_policy_sweep", "print_policy_table", "run_coded_smoke",
@@ -79,6 +82,7 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
                     slots_per_master: int = 3, rate: float = 0.004,
                     coding_scope: str = "head",
                     steps_per_dispatch: int = 1,
+                    execution: str = "batched",
                     backend: str = "numpy", seed: int = 0,
                     verbose: bool = True):
     """Serve one synthetic workload under each admission policy.
@@ -89,7 +93,7 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
     bridge = CodedServingBridge(
         masters=masters, arch=arch, smoke=smoke, backend=backend, seed=seed,
         slots_per_master=slots_per_master, coding_scope=coding_scope,
-        steps_per_dispatch=steps_per_dispatch)
+        steps_per_dispatch=steps_per_dispatch, execution=execution)
     bridge._setup_model(prompt_len + gen_len + 8)
     reqs = synthetic_requests(
         n_requests, masters=masters, vocab=bridge._model["cfg"].vocab,
@@ -99,7 +103,8 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
         print(f"[serve_coded] arch={arch} requests={n_requests} "
               f"gen={gen_len} masters={masters} "
               f"slots/master={slots_per_master} scope={coding_scope} "
-              f"steps/dispatch={steps_per_dispatch} backend={backend}")
+              f"steps/dispatch={steps_per_dispatch} "
+              f"execution={execution} backend={backend}")
         print_policy_table(reports)
         print("[serve_coded] all decoded coded matmuls matched the uncoded "
               "pipeline")

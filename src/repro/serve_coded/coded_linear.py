@@ -12,18 +12,35 @@ computed as its own matmul — exactly what that worker would return.  The
 earliest prefix of shard deliveries covering L rows decodes the exact
 output through :func:`repro.stream.backend.decode_batch` (permutation
 scatter when only systematic rows arrived, mixed-row substitution
-otherwise).
+otherwise); *within* that prefix the decoder prefers the received
+systematic rows — any L delivered coded rows recover the product, so
+picking identity rows first shrinks the parity solve to the coverage
+shortfall (see :meth:`CodedLinear.prefix_plan`).
 
-Only the parity block ``R @ W`` needs encoding work; the systematic prefix
-*is* W (the same identity-skipping trick the Pallas ``mds_encode`` kernel
-uses).  Parity rows are generated lazily in seeded chunks, so each encoded
-layer grows with the largest redundancy any plan requests.
+**Persistent encoded-weight cache.**  The encoded matrix ``[W; WR]`` lives
+in one packed row-major buffer per layer, grown *incrementally*: the
+systematic prefix is W itself (the identity-skipping trick the Pallas
+``mds_encode`` kernel uses), and each lazily-drawn parity chunk appends
+``R_chunk @ W`` without re-encoding anything already cached.  Shard
+execution in both the serial and the batched engine is a gather from this
+cache — ``device_rows`` maintains the float32 device-resident mirror the
+same incremental way for the jax/pallas batched kernel path.
 
-Numerics: shard products and the decode run in float64 on the host, so the
-decoded output matches the uncoded product to solver precision and greedy
-argmax is bit-stable.  ``backend="jax"``/``"pallas"`` route the parity
-encode through the device / Pallas kernel path (float32 — verify with the
-looser tolerance, as in the streaming engine).
+**Prefix planning vs execution.**  :meth:`prefix_plan` derives the
+earliest covering prefix (which coded rows, from which workers, in
+delivery order) from the dispatch timing alone — no activations needed —
+so the batched engine plans every matmul of a step barrier up front and
+executes the packed products in one pass.  :meth:`step` is the serial
+reference: the same plan, executed shard-by-shard.
+
+Numerics: decode-feeding shard products run through
+:func:`shard_products` — a float64 ``np.einsum`` contraction whose
+per-row bits are independent of how the rows are batched (unlike BLAS
+GEMM, whose edge-panel handling changes with the row count), so the
+batched engine is bit-identical to the serial loop by construction.
+``backend="jax"``/``"pallas"`` route the parity encode and the decode
+solve through the device / Pallas kernel path (float32 encode — verify
+with the looser tolerance, as in the streaming engine).
 """
 from __future__ import annotations
 
@@ -36,7 +53,46 @@ import numpy as np
 from ..core import mds
 from ..stream import backend as bk
 
-__all__ = ["CodedLinear", "LinearStep"]
+__all__ = ["CodedLinear", "LinearStep", "PrefixPlan", "shard_products"]
+
+#: the decode solve engine each backend actually runs ("pallas" has encode
+#: and product kernels but no solve kernel — its decode runs the jitted
+#: jax solve, and benches report that honestly instead of silently
+#: relabelling it)
+DECODE_ENGINE = {"numpy": "numpy", "jax": "jax", "pallas": "jax"}
+
+#: smallest mixed-row parity solve block (see ``prefix_plan``): blocks
+#: below this swap in extra delivered parity rows for the last systematic
+#: pins, bounding the inverse-norm tail of tiny Gaussian sub-blocks
+MIN_PARITY_BLOCK = 8
+
+
+def shard_products(W_rows: np.ndarray, X: np.ndarray) -> np.ndarray:
+    """Per-shard products ``W_rows @ X.T`` (rows, B) in float64.
+
+    This is the one product primitive both execution engines share.  It is
+    deliberately an ``np.einsum`` contraction, not BLAS ``@``: einsum's
+    per-row reduction order depends only on the contraction length D, so
+    computing a shard's rows alone, per worker, or packed into a step-wide
+    buffer gives bit-identical rows — the property the batched engine's
+    exactness tests rely on (BLAS GEMM edge panels break it).
+    """
+    return np.einsum("ld,bd->lb", W_rows, X)
+
+
+@dataclasses.dataclass
+class PrefixPlan:
+    """The earliest covering prefix of one dispatched coded matmul.
+
+    Pure timing — derived from shard sizes and delivery times before any
+    activation exists, which is what lets the batched engine pack a whole
+    step barrier's gathers and decode structure at dispatch time.
+    """
+    rows: np.ndarray            # (L,) coded-row ids feeding the decode
+    slices: List[np.ndarray]    # per-used-worker row ids, delivery order
+    used: np.ndarray            # worker columns, delivery order
+    total: int                  # Σ integer shard sizes dispatched
+    used_solve: bool            # parity rows in the prefix → general solve
 
 
 @dataclasses.dataclass
@@ -47,6 +103,7 @@ class LinearStep:
     workers_used: np.ndarray    # node columns whose shards fed the decode
     rows_dispatched: int        # Σ integer shard sizes
     used_solve: bool            # parity rows in the prefix → general solve
+    decode_backend: str = "numpy"   # effective decode-solve engine
 
     @property
     def logits(self) -> np.ndarray:
@@ -55,7 +112,7 @@ class LinearStep:
 
 
 class CodedLinear:
-    """Systematic-MDS-encoded linear layer, executed shard-by-shard.
+    """Systematic-MDS-encoded linear layer with a persistent encoded cache.
 
     W: (L, D) float weight matrix, row-sharded across workers.
     name: label used by the bridge's step log ("head", "blk0.wq", ...).
@@ -74,13 +131,31 @@ class CodedLinear:
         self.L, self.D = self.W.shape
         self.name = name
         self.backend = backend
+        self.decode_backend = DECODE_ENGINE[backend]
         self.parity_chunk = int(parity_chunk)
         # crc32, not hash(): parity streams must replay across processes
         self._rng = np.random.default_rng((int(seed), 0xC0DE,
                                            zlib.crc32(name.encode())))
         self.R = np.zeros((0, self.L))            # parity generator rows
-        self.WR = np.zeros((0, self.D))           # encoded parity shards
+        # packed encoded cache [W; WR]: rows [0, L) are W itself (the
+        # systematic prefix needs no encode), parity rows append below
+        self._enc = np.empty((self.L, self.D))
+        self._enc[:] = self.W
+        self._n_enc = self.L
+        self.parity_redraws = 0                   # conditioning-guard hits
         self._G_cache: Optional[np.ndarray] = None
+        self._W_dev = None                        # f32 device copy of W
+        self._enc_dev = None                      # f32 device [W; WR] mirror
+        self._n_dev = 0
+
+    @property
+    def WR(self) -> np.ndarray:
+        """Encoded parity rows — a view into the packed cache."""
+        return self._enc[self.L:self._n_enc]
+
+    @property
+    def n_parity(self) -> int:
+        return self._n_enc - self.L
 
     # -- encoding ------------------------------------------------------------
 
@@ -88,23 +163,43 @@ class CodedLinear:
         if self.backend == "numpy":
             return R_new @ self.W
         import jax.numpy as jnp
+        if self._W_dev is None:
+            # uploaded once per matrix; parity chunks reuse it
+            self._W_dev = jnp.asarray(self.W, jnp.float32)
+        R_dev = jnp.asarray(R_new, jnp.float32)
         if self.backend == "pallas":
             from ..kernels import ops
-            G_blk = np.concatenate([np.eye(self.L), R_new]).astype(np.float32)
-            full = np.asarray(ops.mds_encode(jnp.asarray(G_blk),
-                                             jnp.asarray(self.W, jnp.float32)))
-            return full[self.L:].astype(np.float64)
-        return np.asarray(jnp.asarray(R_new, jnp.float32)
-                          @ jnp.asarray(self.W, jnp.float32),
-                          dtype=np.float64)
+            return np.asarray(ops.matmul(R_dev, self._W_dev),
+                              dtype=np.float64)
+        return np.asarray(R_dev @ self._W_dev, dtype=np.float64)
+
+    def _grow_enc(self, n_new: int) -> None:
+        need = self._n_enc + n_new
+        if need > self._enc.shape[0]:
+            cap = max(need, 2 * self._enc.shape[0])
+            grown = np.empty((cap, self.D))
+            grown[:self._n_enc] = self._enc[:self._n_enc]
+            self._enc = grown
 
     def ensure_parity(self, n_parity: int) -> None:
-        """Grow the encoded parity block to ≥ ``n_parity`` rows."""
-        while self.R.shape[0] < n_parity:
+        """Grow the encoded parity block to ≥ ``n_parity`` rows.
+
+        Each fresh chunk passes the :func:`repro.core.mds.parity_cond`
+        conditioning guard (a collapsed singular spectrum is the symptom
+        of every degenerate decode minor) — a degenerate draw is redrawn
+        from the same seeded stream, so replay stays deterministic."""
+        while self.n_parity < n_parity:
             R_new = self._rng.normal(0.0, 1.0 / np.sqrt(self.L),
                                      size=(self.parity_chunk, self.L))
+            while mds.parity_cond(R_new) > mds.PARITY_COND_LIMIT:
+                self.parity_redraws += 1
+                R_new = self._rng.normal(0.0, 1.0 / np.sqrt(self.L),
+                                         size=(self.parity_chunk, self.L))
             self.R = np.concatenate([self.R, R_new])
-            self.WR = np.concatenate([self.WR, self._encode_parity(R_new)])
+            enc = self._encode_parity(R_new)
+            self._grow_enc(enc.shape[0])
+            self._enc[self._n_enc:self._n_enc + enc.shape[0]] = enc
+            self._n_enc += enc.shape[0]
             self._G_cache = None
 
     def generator(self, L_tilde: int) -> np.ndarray:
@@ -115,13 +210,26 @@ class CodedLinear:
         return self._G_cache[:L_tilde]
 
     def encoded_rows(self, rows: np.ndarray) -> np.ndarray:
-        """Gather encoded weight rows (systematic prefix = W itself)."""
-        rows = np.asarray(rows)
-        out = np.empty((rows.size, self.D))
-        sys_m = rows < self.L
-        out[sys_m] = self.W[rows[sys_m]]
-        out[~sys_m] = self.WR[rows[~sys_m] - self.L]
-        return out
+        """Gather encoded weight rows from the packed cache."""
+        return self._enc[:self._n_enc][np.asarray(rows)]
+
+    def device_rows(self, n_rows: int):
+        """Float32 device-resident ``[W; WR]`` prefix of ``n_rows`` rows.
+
+        Uploaded once and grown *incrementally*: only parity rows encoded
+        since the last call transfer to the device — the persistent cache
+        the batched kernel path gathers its shard tiles from."""
+        import jax.numpy as jnp
+        self.ensure_parity(max(n_rows - self.L, 0))
+        if self._enc_dev is None:
+            self._enc_dev = jnp.asarray(self._enc[:self._n_enc], jnp.float32)
+            self._n_dev = self._n_enc
+        elif self._n_dev < self._n_enc:
+            fresh = jnp.asarray(self._enc[self._n_dev:self._n_enc],
+                                jnp.float32)
+            self._enc_dev = jnp.concatenate([self._enc_dev, fresh])
+            self._n_dev = self._n_enc
+        return self._enc_dev[:n_rows]
 
     # -- reference -----------------------------------------------------------
 
@@ -130,54 +238,136 @@ class CodedLinear:
         the matmul the ``coded=False`` bridge serves with."""
         return np.asarray(X, dtype=np.float64) @ self.W.T
 
-    # -- one step ------------------------------------------------------------
+    # -- prefix planning -----------------------------------------------------
 
-    def step(self, X: np.ndarray, l_int: np.ndarray, finish: np.ndarray,
-             t_complete: float) -> LinearStep:
-        """Execute one coded product for an activation batch.
+    def prefix_plan(self, l_int: np.ndarray, finish: np.ndarray,
+                    t_complete: float,
+                    order: Optional[np.ndarray] = None,
+                    assign: Optional[np.ndarray] = None) -> PrefixPlan:
+        """Derive the earliest covering prefix of a dispatch — timing only.
 
-        X:      (B, D) input activations (float64); each row is one token/
-                position of the step's batch.
-        l_int:  (N+1,) integer shard sizes (Σ ≥ L; contiguous row slices in
-                node order, exactly the executor's dispatch layout).
+        l_int:  (N+1,) integer shard sizes (Σ ≥ L; contiguous row slices,
+                exactly the executor's dispatch layout).
         finish: (N+1,) absolute delivery times (inf = never); the earliest
                 prefix covering L by ``t_complete`` feeds the decode.
+        order:  optional pre-computed stable argsort of the active nodes'
+                finish times (the step barrier computes all tasks' orders
+                in one batched call).
+        assign: optional (N+1,) sort key fixing which node holds which
+                contiguous row range.  ``None`` assigns ranges in node
+                order (the historical layout).  The serving bridge passes
+                each node's *expected* delay (dispatch-time information
+                only — no realized delays), so the systematic prefix sits
+                on the statistically fastest nodes: covering prefixes then
+                carry mostly identity rows, the decode's parity block
+                shrinks, and the pure-scatter fast path fires far more
+                often.  Any assignment decodes exactly — this is purely a
+                decode-cost optimisation the systematic code enables.
         """
-        X = np.asarray(X, dtype=np.float64)
         l_int = np.asarray(l_int, dtype=np.int64)
         total = int(l_int.sum())
         if total < self.L:
             raise ValueError(f"shards cover {total} < L={self.L} rows")
         self.ensure_parity(total - self.L)
         active = np.nonzero(l_int > 0)[0]
-        slices = mds.split_loads(total, l_int[active])
-        order = np.argsort(np.where(np.isfinite(finish[active]),
-                                    finish[active], np.inf), kind="stable")
-        got_rows: List[np.ndarray] = []
-        got_y: List[np.ndarray] = []
-        used: List[int] = []
-        acc = 0
-        for j in order:
-            if not np.isfinite(finish[active[j]]) or \
-                    finish[active[j]] > t_complete + 1e-9:
-                continue
-            rows_j = slices[j]
-            # the per-worker shard execution: this node's encoded rows × X
-            got_y.append(self.encoded_rows(rows_j) @ X.T)
-            got_rows.append(rows_j)
-            used.append(int(active[j]))
-            acc += rows_j.size
-            if acc >= self.L:
-                break
-        if acc < self.L:
+        l_act = l_int[active]
+        if assign is None:
+            edges = np.concatenate([[0], np.cumsum(l_act)])
+        else:
+            aorder = np.argsort(assign[active], kind="stable")
+            starts = np.empty(active.size, dtype=np.int64)
+            starts[aorder] = np.concatenate(
+                [[0], np.cumsum(l_act[aorder])[:-1]])
+            edges = np.concatenate([starts, [total]])  # per-active starts
+        f_act = finish[active]
+        if order is None:
+            order = np.argsort(np.where(np.isfinite(f_act), f_act, np.inf),
+                               kind="stable")
+        f_ord = f_act[order]
+        ok = np.isfinite(f_ord) & (f_ord <= t_complete + 1e-9)
+        cum = np.cumsum(np.where(ok, l_act[order], 0))
+        stop = int(np.searchsorted(cum, self.L))
+        if stop >= cum.size or cum[stop] < self.L:
             raise RuntimeError("deliveries do not cover L by t_complete")
-        rows = np.concatenate(got_rows)[:self.L]
-        y = np.concatenate(got_y)[:self.L]            # (L, B)
-        used_solve = bool((rows >= self.L).any())
-        G = self.generator(total)
-        z = bk.decode_batch(
-            G, rows[None], y[None],
-            backend="numpy" if self.backend == "numpy" else "jax")[0]
-        return LinearStep(out=z.T, rows=rows,
-                          workers_used=np.asarray(used),
-                          rows_dispatched=total, used_solve=used_solve)
+        sel = np.nonzero(ok[:stop + 1])[0]
+        picked = order[sel]
+        # the covering prefix is fixed (completion semantics untouched);
+        # *within* it, decode from the received systematic rows first and
+        # fill the remainder with the earliest-delivered parity rows —
+        # the decode-free fast path the systematic code exists for.  With
+        # the expected-delay assignment above, most prefixes then pin
+        # (nearly) every coordinate by scatter and the parity solve block
+        # shrinks to the overlap shortfall.
+        starts = edges[picked]
+        stops_ = starts + l_act[picked]
+        sys_sizes = np.minimum(stops_, self.L) - np.minimum(starts, self.L)
+        n_sys = int(sys_sizes.sum())
+        par_avail = int((stops_ - starts).sum()) - n_sys
+        # parity-fill budget: at least the shortfall; when a solve is
+        # needed at all, at least MIN_PARITY_BLOCK rows (a tiny Gaussian
+        # block has a fat inverse-norm tail that amplifies the float32
+        # parity-encode error on the jax/pallas backends — a handful of
+        # extra parity rows in place of the last-delivered systematic
+        # pins keeps the solve well-conditioned at negligible cost)
+        budget = self.L - n_sys
+        if budget > 0:
+            # never more than L rows total: small matrices (L < the block
+            # floor) cap at L parity rows, i.e. a full general solve
+            budget = min(max(budget, MIN_PARITY_BLOCK), par_avail, self.L)
+        sys_quota = self.L - budget
+        slices: List[np.ndarray] = []
+        used: List[int] = []
+        for w, a, b in zip(active[picked], starts, stops_):
+            c = min(max(int(self.L - a), 0), int(b - a))    # systematic part
+            cut = min(c, sys_quota)
+            sys_quota -= cut
+            take = min(int(b - a) - c, budget)              # parity fill
+            budget -= take
+            if cut + take:
+                part = np.arange(a, a + cut) if take == 0 else (
+                    np.arange(a + c, a + c + take) if cut == 0 else
+                    np.concatenate([np.arange(a, a + cut),
+                                    np.arange(a + c, a + c + take)]))
+                slices.append(part)
+                used.append(int(w))
+        rows = np.concatenate(slices) if len(slices) > 1 else slices[0]
+        return PrefixPlan(rows=rows, slices=slices,
+                          used=np.asarray(used), total=total,
+                          used_solve=bool((rows >= self.L).any()))
+
+    # -- decode --------------------------------------------------------------
+
+    def decode_plan(self, rows: np.ndarray) -> bk.DecodePlan:
+        """X-independent decode structure for one received-rows vector
+        (the generator is systematic by construction — the identity-prefix
+        scan is skipped)."""
+        total = max(int(rows.max()) + 1, self.L)
+        return bk.plan_decode(self.generator(total), rows[None],
+                              identity_prefix=True)
+
+    # -- one step (the serial reference engine) ------------------------------
+
+    def step(self, X: np.ndarray, l_int: np.ndarray, finish: np.ndarray,
+             t_complete: float,
+             assign: Optional[np.ndarray] = None) -> LinearStep:
+        """Execute one coded product for an activation batch, shard by
+        shard — the serial reference the batched engine is bit-checked
+        against.
+
+        X: (B, D) input activations (float64); each row is one token/
+        position of the step's batch.  See :meth:`prefix_plan` for the
+        timing arguments.
+        """
+        X = np.asarray(X, dtype=np.float64)
+        plan = self.prefix_plan(l_int, finish, t_complete, assign=assign)
+        enc = self._enc[:self._n_enc]
+        # the per-worker shard execution: each node's encoded rows × X
+        y = np.concatenate([shard_products(enc[sl], X)
+                            for sl in plan.slices])           # (L, B)
+        z = self.decode_plan(plan.rows).apply(
+            y[None], backend=self.backend)[0]
+        return LinearStep(out=z.T, rows=plan.rows,
+                          workers_used=plan.used,
+                          rows_dispatched=plan.total,
+                          used_solve=plan.used_solve,
+                          decode_backend=self.decode_backend)

@@ -38,6 +38,13 @@ __all__ = ["HostTrunk", "trunk_matmul_keys"]
 #: the matmul hook: (key, X (rows, D)) → X @ W_key.T  (rows, L_key)
 MatmulFn = Callable[[str, np.ndarray], np.ndarray]
 
+#: the grouped hook: a *dependency stage* of matmuls sharing one right-hand
+#: operand — [(key, X), ...] → {key: X @ W_key.T}.  The batched execution
+#: engine packs a whole stage's shard gathers into one product; the
+#: default adapter just loops the per-matmul hook.
+MatmulGroupFn = Callable[[List[Tuple[str, np.ndarray]]],
+                         Dict[str, np.ndarray]]
+
 _ATTN_KEYS = ("wq", "wk", "wv", "wo")
 
 
@@ -73,13 +80,27 @@ def _rms(x: np.ndarray, gain: np.ndarray, eps: float) -> np.ndarray:
     return n * gain
 
 
+_ROPE_TABLES: Dict[Tuple[float, int], Tuple[np.ndarray, np.ndarray]] = {}
+
+
 def _rope(x: np.ndarray, positions: np.ndarray, base: float) -> np.ndarray:
-    """x: (R, T, H, D) even D; positions: (R, T) — mirrors attention.rope."""
+    """x: (R, T, H, D) even D; positions: (R, T) — mirrors attention.rope.
+
+    cos/sin are table lookups over the integer positions (bit-identical to
+    computing them per call: the angle products are the same float64
+    values), so the per-token trig cost is one gather."""
     half = x.shape[-1] // 2
-    freqs = base ** (-np.arange(half, dtype=np.float64) / half)
-    ang = positions[..., None].astype(np.float64) * freqs
-    cos = np.cos(ang)[:, :, None, :]
-    sin = np.sin(ang)[:, :, None, :]
+    key = (float(base), half)
+    P = int(positions.max()) + 1
+    tab = _ROPE_TABLES.get(key)
+    if tab is None or tab[0].shape[0] < P:
+        p = np.arange(max(P, 512), dtype=np.float64)
+        freqs = base ** (-np.arange(half, dtype=np.float64) / half)
+        ang = p[:, None] * freqs
+        tab = (np.cos(ang), np.sin(ang))
+        _ROPE_TABLES[key] = tab
+    cos = tab[0][positions][:, :, None, :]
+    sin = tab[1][positions][:, :, None, :]
     x1, x2 = x[..., :half], x[..., half:]
     return np.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
 
@@ -155,7 +176,8 @@ class HostTrunk:
     def forward(self, tokens: np.ndarray, positions: np.ndarray,
                 rows: np.ndarray, caches: Dict[str, np.ndarray],
                 mm: Optional[MatmulFn] = None,
-                collect: Optional[list] = None) -> np.ndarray:
+                collect: Optional[list] = None,
+                mm_group: Optional[MatmulGroupFn] = None) -> np.ndarray:
         """Run ``tokens`` (R, T) at absolute ``positions`` (R, T) through
         the trunk, reading/writing the KV ``caches`` at batch indices
         ``rows`` (R,), with every projection matmul routed through ``mm``
@@ -168,9 +190,21 @@ class HostTrunk:
         it).  ``collect`` (a list) receives each layer's post-residual
         hidden state — the mirror of ``models.lm``'s ``collect_layers``
         threading, for layer-by-layer comparison against the jitted
-        model."""
+        model.
+
+        ``mm_group`` is the stage-granular hook: each call hands over one
+        *dependency stage* — the matmuls that share a right-hand operand
+        (q/k/v on the post-norm hiddens, up/gate on the FFN input; o and
+        down are single-member stages).  The data dependencies of a
+        decoder layer make a stage the largest batchable unit, and the
+        batched engine executes each one as a single packed pass.  When
+        ``mm_group`` is None the per-matmul ``mm`` hook is looped — the
+        serial reference."""
         cfg = self.cfg
-        mm = mm or self.local_matmul
+        if mm_group is None:
+            mm_one = mm or self.local_matmul
+            mm_group = lambda items: {k: mm_one(k, X) for k, X in items}
+        mmg = mm_group
         tokens = np.asarray(tokens)
         positions = np.asarray(positions)
         rows = np.asarray(rows)
@@ -185,9 +219,11 @@ class HostTrunk:
             norm1, norm2 = self.norms[i]
             h = _rms(x, norm1, cfg.norm_eps)
             h2d = h.reshape(R * T, d)
-            q = mm(f"blk{i}.wq", h2d).reshape(R, T, Hq, Dh)
-            k = mm(f"blk{i}.wk", h2d).reshape(R, T, Hkv, Dh)
-            v = mm(f"blk{i}.wv", h2d).reshape(R, T, Hkv, Dh)
+            qkv = mmg([(f"blk{i}.wq", h2d), (f"blk{i}.wk", h2d),
+                       (f"blk{i}.wv", h2d)])
+            q = qkv[f"blk{i}.wq"].reshape(R, T, Hq, Dh)
+            k = qkv[f"blk{i}.wk"].reshape(R, T, Hkv, Dh)
+            v = qkv[f"blk{i}.wv"].reshape(R, T, Hkv, Dh)
             base = cfg.rope_base_local if spec.sliding_window \
                 else cfg.rope_base
             q = _rope(q, positions, base)
@@ -209,18 +245,23 @@ class HostTrunk:
             p = np.exp(s)
             p /= p.sum(axis=-1, keepdims=True)
             o = np.einsum("rhts,rshd->rthd", p, Vf)
-            x = x + mm(f"blk{i}.wo",
-                       o.reshape(R * T, Hq * Dh)).reshape(R, T, d)
+            x = x + mmg([(f"blk{i}.wo", o.reshape(R * T, Hq * Dh))
+                         ])[f"blk{i}.wo"].reshape(R, T, d)
 
             h2 = _rms(x, norm2, cfg.norm_eps).reshape(R * T, d)
-            up = mm(f"blk{i}.w_in", h2)
+            up_keys = [(f"blk{i}.w_in", h2)]
             if spec.ffn == "swiglu":
-                up = _silu(mm(f"blk{i}.w_gate", h2)) * up
+                up_keys.append((f"blk{i}.w_gate", h2))
+            ups = mmg(up_keys)
+            up = ups[f"blk{i}.w_in"]
+            if spec.ffn == "swiglu":
+                up = _silu(ups[f"blk{i}.w_gate"]) * up
             elif spec.ffn == "gelu":
                 up = _gelu_tanh(up)
             elif spec.ffn == "relu2":
                 up = np.square(np.maximum(up, 0.0))
-            x = x + mm(f"blk{i}.w_out", up).reshape(R, T, d)
+            x = x + mmg([(f"blk{i}.w_out", up)
+                         ])[f"blk{i}.w_out"].reshape(R, T, d)
             if collect is not None:
                 collect.append(x)
 

@@ -57,6 +57,9 @@ __all__ = [
     "simulate_batch",
     "simulate_chunks_np",
     "decode_batch",
+    "plan_decode",
+    "DecodePlan",
+    "solve_stacked",
     "ExponentialBlock",
 ]
 
@@ -248,20 +251,48 @@ class ExponentialBlock:
         self._buf = np.empty((0, self.rows, self.width))
         self._pos = 0
 
+    def _refill(self) -> None:
+        exp = self.rng.exponential(
+            1.0, size=(self.block, 2, self.width))
+        if self.uniform_rows:
+            uni = self.rng.random(
+                size=(self.block, self.uniform_rows, self.width))
+            self._buf = np.concatenate([exp, uni], axis=1)
+        else:
+            self._buf = exp
+        self._pos = 0
+
     def draw(self) -> np.ndarray:
         if self._pos >= self._buf.shape[0]:
-            exp = self.rng.exponential(
-                1.0, size=(self.block, 2, self.width))
-            if self.uniform_rows:
-                uni = self.rng.random(
-                    size=(self.block, self.uniform_rows, self.width))
-                self._buf = np.concatenate([exp, uni], axis=1)
-            else:
-                self._buf = exp
-            self._pos = 0
+            self._refill()
         row = self._buf[self._pos]
         self._pos += 1
         return row
+
+    def draw_n(self, n: int) -> np.ndarray:
+        """``n`` consecutive draws as one (n, rows, width) view — the
+        multi-task serving dispatch consumes one row per coded matmul and
+        samples all of a step barrier's delays in a single batched
+        :func:`sample_delays` call.  The stream is identical to ``n``
+        successive :meth:`draw` calls."""
+        if n <= 0:
+            raise ValueError("draw_n needs n >= 1")
+        if self._pos + n <= self._buf.shape[0]:
+            out = self._buf[self._pos:self._pos + n]
+            self._pos += n
+            return out
+        # keep the stream identical to n draw() calls: consume the tail,
+        # then refill block-by-block for the remainder (n may exceed one
+        # block — e.g. a deep trunk's 1 + 7·n_layers tasks per dispatch)
+        parts = [self._buf[self._pos:]]
+        need = n - parts[0].shape[0]
+        while need > 0:
+            self._refill()
+            take = min(need, self._buf.shape[0])
+            parts.append(self._buf[:take])
+            self._pos = take
+            need -= take
+        return np.concatenate([p for p in parts if p.size])
 
 
 # ---------------------------------------------------------------------------
@@ -430,6 +461,36 @@ def _solve_jit():
     return jax.jit(lambda Gs, y: jnp.linalg.solve(Gs, y))
 
 
+try:                                   # the gufunc behind np.linalg.solve
+    from numpy.linalg import _umath_linalg as _gu
+    _gu.solve(np.eye(2)[None], np.ones((1, 2, 1)), signature="dd->d")
+except Exception:  # pragma: no cover - exotic numpy builds
+    _gu = None
+
+
+def solve_stacked(A: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """``np.linalg.solve(A, b)`` for stacked (g, n, n) · (g, n, C) systems,
+    minus the per-call wrapper overhead.
+
+    The serving decode issues thousands of tiny (n ≲ 50) solves per run;
+    ``np.linalg.solve``'s Python wrapper (shape juggling, errstate, extobj
+    plumbing) costs more than LAPACK ``gesv`` itself at those sizes.  This
+    calls the same gufunc directly — results are bit-identical — and falls
+    back to the public API when the private entry point is unavailable.
+    Singular inputs still raise ``LinAlgError`` (the gufunc emits
+    non-finite rows; the finiteness check costs one cheap pass, and a
+    silent NaN would otherwise reach ``argmax`` as token 0 in the
+    verify-off serving configuration).
+    """
+    if _gu is not None and A.dtype == np.float64 and b.dtype == np.float64:
+        with np.errstate(invalid="ignore", over="ignore", divide="ignore"):
+            out = _gu.solve(A, b, signature="dd->d")
+        if not np.isfinite(out).all():
+            raise np.linalg.LinAlgError("Singular matrix")
+        return out
+    return np.linalg.solve(A, b)
+
+
 def _identity_prefix(G: np.ndarray) -> bool:
     """True iff the generator's (shared) top L rows are exactly I_L."""
     L = G.shape[-1]
@@ -451,9 +512,147 @@ def _gather_generator_rows(G, glist: bool, idx: np.ndarray,
     return G[idx[:, None], rows]
 
 
+class _MixedGroup:
+    """One mixed-row substitution group of a :class:`DecodePlan`: every
+    task that received exactly ``s`` systematic rows (0 < s < L)."""
+
+    __slots__ = ("grp", "sys_rows", "unk", "A", "Gk", "sys_pos", "par_pos")
+
+    def __init__(self, grp, sys_rows, unk, A, Gk, sys_pos, par_pos):
+        self.grp = grp                # (g,) task indices in the batch
+        self.sys_rows = sys_rows      # (g, s) pinned coordinate ids
+        self.unk = unk                # (g, L-s) coordinates to solve for
+        self.A = A                    # (g, L-s, L-s) parity sub-blocks
+        self.Gk = Gk                  # (g, L-s, s) known-coordinate columns
+        self.sys_pos = sys_pos        # (g, s) receive positions of sys rows
+        self.par_pos = par_pos        # (g, L-s) receive positions of parity
+
+
+class DecodePlan:
+    """The X-independent structure of one stacked exactly-L decode.
+
+    Everything :func:`decode_batch` derives from ``(G, rows)`` alone — the
+    systematic/mixed/full partition of the batch, the per-``s`` substitution
+    groups, the gathered generator sub-blocks — is computed once here, so a
+    caller that decodes many right-hand sides against the *same* received
+    rows (the serving bridge's step barrier: one delivery prefix, one
+    decode problem per coded matmul, re-applied for every token of a
+    multi-token dispatch) pays the planning overhead once.  ``apply(y)``
+    runs the solves; ``decode_batch(G, rows, y)`` is literally
+    ``plan_decode(G, rows).apply(y)``, so the two can never drift.
+    """
+
+    __slots__ = ("B", "L", "fast_idx", "fast_rows", "full_idx", "full_G",
+                 "mixed_groups")
+
+    def __init__(self, B: int, L: int, fast_idx, fast_rows, full_idx,
+                 full_G, mixed_groups):
+        self.B = B
+        self.L = L
+        self.fast_idx = fast_idx          # (f,) tasks decoded by scatter
+        self.fast_rows = fast_rows        # (f, L) their received row ids
+        self.full_idx = full_idx          # (n,) tasks needing the full solve
+        self.full_G = full_G              # (n, L, L) gathered generators
+        # list of (grp_idx, sys_rows, unk, A, Gk) per distinct s count
+        self.mixed_groups = mixed_groups
+
+    def apply(self, y: np.ndarray, *, backend: str = "numpy") -> np.ndarray:
+        """Solve the planned systems for one stacked right-hand side
+        ``y`` (B, L) or (B, L, C)."""
+        check_backend(backend)
+        y = np.asarray(y, dtype=np.float64)
+        squeeze = y.ndim == 2
+        if squeeze:
+            y = y[..., None]
+        out = np.empty((self.B, self.L, y.shape[-1]))
+
+        def solve(A: np.ndarray, b: np.ndarray) -> np.ndarray:
+            if _use_jax(backend):
+                return np.asarray(_solve_jit()(A, b))
+            return solve_stacked(A, b)
+
+        if self.fast_idx.size:
+            # permutation decode: out[b, rows[b, i]] = y[b, i]
+            out[self.fast_idx[:, None], self.fast_rows] = y[self.fast_idx]
+        if self.full_idx.size:
+            out[self.full_idx] = solve(self.full_G, y[self.full_idx])
+        for mg in self.mixed_groups:
+            # receive-order partitions were frozen at plan time as position
+            # index arrays; partition y the same row-major way
+            yg = y[mg.grp]
+            sys_y = np.take_along_axis(yg, mg.sys_pos[:, :, None], axis=1)
+            par_y = np.take_along_axis(yg, mg.par_pos[:, :, None], axis=1)
+            sol = solve(mg.A, par_y - mg.Gk @ sys_y)
+            out[mg.grp[:, None], mg.sys_rows] = sys_y        # exact pins
+            out[mg.grp[:, None], mg.unk] = sol
+        return out[..., 0] if squeeze else out
+
+
+def plan_decode(G, rows: np.ndarray, *, systematic: str = "auto",
+                identity_prefix: Optional[bool] = None) -> DecodePlan:
+    """Build the :class:`DecodePlan` for stacked received rows.
+
+    ``identity_prefix`` short-circuits the O(L²) top-rows-are-identity
+    check when the caller constructed G as a systematic [I; R] generator
+    (``CodedLinear`` always does) — pass ``True``/``False`` to assert the
+    structure, ``None`` (default) to detect it.
+    """
+    if systematic not in ("auto", "prefix", "never"):
+        raise ValueError(f"systematic must be 'auto', 'prefix' or 'never', "
+                         f"got {systematic!r}")
+    rows = np.asarray(rows)
+    glist = isinstance(G, (list, tuple))
+    if not glist:
+        G = np.asarray(G, dtype=np.float64)
+    B, L = rows.shape
+
+    sys_ok = False
+    if systematic != "never" and B:
+        if identity_prefix is not None:
+            sys_ok = bool(identity_prefix)
+        else:
+            sys_ok = (all(_identity_prefix(np.asarray(g)) for g in G)
+                      if glist else _identity_prefix(G))
+    sys_counts = (rows < L).sum(axis=1) if sys_ok else np.zeros(B, dtype=int)
+    fast = sys_counts == L
+    fast_idx = np.nonzero(fast)[0]
+
+    if systematic == "auto" and sys_ok:
+        full_idx = np.nonzero(sys_counts == 0)[0]
+    else:
+        full_idx = np.nonzero(~fast)[0]
+    full_G = (np.empty((0, L, L)) if not full_idx.size else
+              _gather_generator_rows(G, glist, full_idx, rows[full_idx]))
+
+    mixed_groups = []
+    if systematic == "auto" and sys_ok:
+        mixed = (sys_counts > 0) & (sys_counts < L)
+        for s in np.unique(sys_counts[mixed]):
+            grp = np.nonzero(sys_counts == s)[0]
+            g = grp.size
+            m_sys = rows[grp] < L                            # (g, L)
+            # boolean indexing is row-major, so per-task receive order is
+            # preserved inside both partitions
+            sys_pos = np.nonzero(m_sys)[1].reshape(g, s)
+            par_pos = np.nonzero(~m_sys)[1].reshape(g, L - s)
+            sys_rows = np.take_along_axis(rows[grp], sys_pos, axis=1)
+            par_rows = np.take_along_axis(rows[grp], par_pos, axis=1)
+            # unknown coordinates: per-task complement of the pinned ones
+            known = np.zeros((g, L), dtype=bool)
+            known[np.arange(g)[:, None], sys_rows] = True
+            unk = np.nonzero(~known)[1].reshape(g, L - s)
+            Gp = _gather_generator_rows(G, glist, grp, par_rows)
+            Gk = np.take_along_axis(Gp, sys_rows[:, None, :], axis=2)
+            A = np.take_along_axis(Gp, unk[:, None, :], axis=2)
+            mixed_groups.append(
+                _MixedGroup(grp, sys_rows, unk, A, Gk, sys_pos, par_pos))
+    return DecodePlan(B, L, fast_idx, rows[fast_idx], full_idx, full_G,
+                      mixed_groups)
+
+
 def decode_batch(G: np.ndarray, rows: np.ndarray, y: np.ndarray,
-                 *, backend: str = "numpy",
-                 systematic: str = "auto") -> np.ndarray:
+                 *, backend: str = "numpy", systematic: str = "auto",
+                 identity_prefix: Optional[bool] = None) -> np.ndarray:
     """Recover B systems A_t x_t from exactly-L received coded results each.
 
     G:    (L̃, L) shared generator, (B, L̃, L) per-task generators, or a
@@ -480,69 +679,15 @@ def decode_batch(G: np.ndarray, rows: np.ndarray, y: np.ndarray,
     benchmark baseline for the substitution speedup).  "never" forces the
     general solve for everything.
 
+    ``identity_prefix=True`` skips the O(L²) identity-prefix scan when the
+    caller built G systematically (see :func:`plan_decode`).
+
     Solves run as ``np.linalg.solve`` on the numpy backend and a cached
-    jitted ``jnp.linalg.solve`` on jax/pallas.
+    jitted ``jnp.linalg.solve`` on jax/pallas.  This function is the
+    composition ``plan_decode(G, rows).apply(y)``; callers re-decoding
+    against fixed received rows should hold the plan and call ``apply``.
     """
     check_backend(backend)
-    if systematic not in ("auto", "prefix", "never"):
-        raise ValueError(f"systematic must be 'auto', 'prefix' or 'never', "
-                         f"got {systematic!r}")
-    rows = np.asarray(rows)
-    glist = isinstance(G, (list, tuple))
-    if not glist:
-        G = np.asarray(G, dtype=np.float64)
-    y = np.asarray(y, dtype=np.float64)
-    squeeze = y.ndim == 2
-    if squeeze:
-        y = y[..., None]
-    B, L = rows.shape
-    C = y.shape[-1]
-    out = np.empty((B, L, C))
-
-    def solve(A: np.ndarray, b: np.ndarray) -> np.ndarray:
-        if _use_jax(backend):
-            return np.asarray(_solve_jit()(A, b))
-        return np.linalg.solve(A, b)
-
-    sys_ok = False
-    if systematic != "never" and B:
-        sys_ok = (all(_identity_prefix(np.asarray(g)) for g in G) if glist
-                  else _identity_prefix(G))
-    sys_counts = (rows < L).sum(axis=1) if sys_ok else np.zeros(B, dtype=int)
-    fast = sys_counts == L
-    fi = np.nonzero(fast)[0]
-    if fi.size:
-        # permutation decode: out[b, rows[b, i]] = y[b, i]
-        out[fi[:, None], rows[fi]] = y[fi]
-
-    if systematic == "auto" and sys_ok:
-        full = np.nonzero(sys_counts == 0)[0]
-    else:
-        full = np.nonzero(~fast)[0]
-    if full.size:
-        Gs = _gather_generator_rows(G, glist, full, rows[full])
-        out[full] = solve(Gs, y[full])
-
-    if systematic == "auto" and sys_ok:
-        mixed = (sys_counts > 0) & (sys_counts < L)
-        for s in np.unique(sys_counts[mixed]):
-            grp = np.nonzero(sys_counts == s)[0]
-            g = grp.size
-            m_sys = rows[grp] < L                            # (g, L)
-            # boolean indexing is row-major, so per-task receive order is
-            # preserved inside both partitions
-            sys_rows = rows[grp][m_sys].reshape(g, s)
-            sys_y = y[grp][m_sys].reshape(g, s, C)
-            par_rows = rows[grp][~m_sys].reshape(g, L - s)
-            par_y = y[grp][~m_sys].reshape(g, L - s, C)
-            # unknown coordinates: per-task complement of the pinned ones
-            known = np.zeros((g, L), dtype=bool)
-            known[np.arange(g)[:, None], sys_rows] = True
-            unk = np.nonzero(~known)[1].reshape(g, L - s)
-            Gp = _gather_generator_rows(G, glist, grp, par_rows)
-            Gk = np.take_along_axis(Gp, sys_rows[:, None, :], axis=2)
-            A = np.take_along_axis(Gp, unk[:, None, :], axis=2)
-            sol = solve(A, par_y - Gk @ sys_y)
-            out[grp[:, None], sys_rows] = sys_y              # exact pins
-            out[grp[:, None], unk] = sol
-    return out[..., 0] if squeeze else out
+    return plan_decode(G, rows, systematic=systematic,
+                       identity_prefix=identity_prefix).apply(
+                           y, backend=backend)

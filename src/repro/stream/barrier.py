@@ -76,12 +76,17 @@ class BarrierTask:
     finish: (N+1,) absolute delivery times (inf = never arrives).
     need:   rows whose earliest covering prefix completes this task
             (the coded matrix's own L, not the plan scenario's).
+    assign: optional (N+1,) expected-delay sort key fixing which node
+            holds which contiguous coded-row range (None = node order);
+            dispatch-time information only — see
+            ``CodedLinear.prefix_plan``.
     """
     name: str
     l_int: np.ndarray
     finish: np.ndarray
     need: float
     completion: float = np.inf
+    assign: "np.ndarray | None" = None
 
 
 class StepBarrier:
@@ -130,6 +135,27 @@ class StepBarrier:
             self.recompute()
             return True
         return False
+
+    def delivery_orders(self) -> List[np.ndarray]:
+        """Stable delivery-order argsort of every member task's *active*
+        nodes, in one batched call — the planning input of the batched
+        shard-execution engine (each array indexes that task's active-node
+        subarray, exactly what ``CodedLinear.prefix_plan`` consumes).
+
+        All member tasks of one dispatch normally share the plan row's
+        active set (``coded_row_shards`` keeps the zero pattern), so the
+        common case is a single stacked argsort; heterogeneous active sets
+        fall back to per-task sorts.
+        """
+        F = np.stack([task.finish for task in self.tasks])
+        act = np.stack([task.l_int > 0 for task in self.tasks])
+        if (act == act[0]).all():
+            sub = F[:, act[0]]
+            sub = np.where(np.isfinite(sub), sub, np.inf)
+            return list(np.argsort(sub, axis=1, kind="stable"))
+        return [np.argsort(np.where(np.isfinite(f[a]), f[a], np.inf),
+                           kind="stable")
+                for f, a in zip(F, act)]
 
     def rows_dispatched(self) -> int:
         return int(sum(int(task.l_int.sum()) for task in self.tasks))

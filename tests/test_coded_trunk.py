@@ -130,18 +130,31 @@ def test_mass_leave_redispatches_in_flight_step():
 # Committed benchmark record: per-scope rows, trunk within 2x of head
 # ---------------------------------------------------------------------------
 
-def test_bench_serve_has_per_scope_rows_trunk_within_2x_of_head():
+def test_bench_serve_has_per_scope_execution_rows_trunk_within_2x_of_head():
     import json
     import pathlib
     path = pathlib.Path(__file__).parent.parent / "BENCH_serve.json"
     record = json.loads(path.read_text())
     assert set(CODING_SCOPES) <= set(record["scopes"])
     for scope in CODING_SCOPES:
-        assert record["scopes"][scope]["tokens_per_sim_second"] > 0
-    head = record["scopes"]["head"]["tokens_per_sim_second"]
-    trunk = record["scopes"]["trunk"]["tokens_per_sim_second"]
+        for execution in ("serial", "batched"):
+            row = record["scopes"][scope][execution]
+            assert row["execution"] == execution
+            assert row["tokens_per_sim_second"] > 0
+            assert row["tokens_per_wall_second"] > 0
+            assert row["verified_tokens_per_wall_second"] > 0
+            assert row["decode_backend"] in ("numpy", "jax")
+    head = record["scopes"]["head"]["batched"]["tokens_per_sim_second"]
+    trunk = record["scopes"]["trunk"]["batched"]["tokens_per_sim_second"]
     assert trunk >= head / 2.0, (trunk, head)
     assert record["trunk_throughput_vs_head"] >= 0.5
+    # the tentpole's wall-clock story: the batched engine must not lose
+    # to the serial reference, and the committed trunk wall throughput
+    # must hold the achieved fraction of the head scope (0.643 recorded;
+    # 0.8 is the open ROADMAP target)
+    assert record["trunk_wall_vs_head"] >= 0.6
+    for scope in CODING_SCOPES:
+        assert record["batched_wall_speedup"][scope] >= 1.0, scope
 
 
 # ---------------------------------------------------------------------------
