@@ -25,9 +25,16 @@ over batched head — the "Wall-clock shard execution" gap this records),
 ``batched_wall_speedup`` per scope (batched over serial), and the
 sim-time ``trunk_throughput_vs_head``.
 
+A final traced pass on the trunk/batched cell records the per-stage wall
+breakdown (plan | pack | kernel | decode | glue), the straggler
+attribution table and the disabled-tracer throughput ratio into the
+JSON's ``trace`` section (``--trace out.json`` additionally writes the
+Chrome/Perfetto trace itself).
+
     PYTHONPATH=src python -m benchmarks.serve_bench \
         [--requests 24] [--gen-len 8] [--slots 2] [--rate 0.02] \
-        [--backend numpy] [--steps-per-dispatch 1] [--reps 3] [--seed 0]
+        [--backend numpy] [--steps-per-dispatch 1] [--reps 3] [--seed 0] \
+        [--trace out.json]
 """
 from __future__ import annotations
 
@@ -71,6 +78,7 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
                     slots: int = 2, rate: float = 0.02, prompt_len: int = 16,
                     backend: str = "numpy", steps_per_dispatch: int = 1,
                     reps: int = 3, seed: int = 0,
+                    trace: str | None = None,
                     json_path: str | None = None) -> dict:
     churn = _default_churn()
     per_policy = {}
@@ -135,6 +143,47 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
                 row["tokens_per_wall_second"] = round(tps, 1)
                 row["wall_seconds"] = round(trep.wall_seconds, 3)
 
+    # observability: one traced pass on the trunk/batched serving cell
+    # yields the per-stage wall breakdown (plan vs pack vs kernel vs
+    # decode vs glue) and the straggler attribution table; paired
+    # best-of-reps rounds — a *disabled* tracer attached vs no tracer,
+    # interleaved so both sides see the same machine conditions — then
+    # time the contract that disabled tracing serves on the identical
+    # code path.  CI floors the ratio at 0.98 (< 2% disabled-mode
+    # overhead); comparing against the earlier timing loop instead would
+    # fold half the bench's worth of runner drift into the ratio.
+    from repro.obs import Tracer
+    tbridge = timers[("trunk", "batched")]
+    tbridge.tracer = tracer = Tracer(meta={"bench": "coded_serving",
+                                           "scope": "trunk",
+                                           "execution": "batched"})
+    traced_rep = tbridge.serve(reqs, churn=churn, trace_path=trace)
+    ts = tracer.summary()
+    best_disabled = off_best = 0.0
+    for _ in range(max(reps, 1)):
+        tbridge.tracer = Tracer(enabled=False)
+        r = tbridge.serve(reqs, churn=churn)
+        best_disabled = max(best_disabled,
+                            r.summary()["tokens_per_wall_second"])
+        tbridge.tracer = None
+        r = tbridge.serve(reqs, churn=churn)
+        off_best = max(off_best, r.summary()["tokens_per_wall_second"])
+    trace_row = {
+        "scope": "trunk", "execution": "batched",
+        "per_stage_wall": {k: round(v, 6)
+                           for k, v in ts["per_stage_wall"].items()},
+        "stage_coverage": None if ts["stage_coverage"] is None
+        else round(ts["stage_coverage"], 4),
+        "counters": {k: round(v, 1) for k, v in ts["counters"].items()},
+        "stragglers": ts["stragglers"],
+        "traced_tokens_per_wall_second": round(
+            traced_rep.summary()["tokens_per_wall_second"], 1),
+        "disabled_tracer_tokens_per_wall_second": round(best_disabled, 1),
+        "tracing_off_throughput_ratio": round(
+            best_disabled / max(off_best, 1e-12), 3),
+        "trace_path": trace,
+    }
+
     base = per_policy["fifo"]
     head_b = per_scope["head"]["batched"]
     trunk_b = per_scope["trunk"]["batched"]
@@ -168,6 +217,7 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
                          / max(per_scope[scope]["serial"]
                                ["tokens_per_wall_second"], 1e-12), 3)
             for scope in CODING_SCOPES},
+        "trace": trace_row,
     }
     path = json_path or os.environ.get("REPRO_BENCH_SERVE_JSON",
                                        "BENCH_serve.json")
@@ -182,6 +232,9 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
          f"trunk_wall_vs_head={record['trunk_wall_vs_head']};"
          f"batched_speedup_trunk="
          f"{record['batched_wall_speedup']['trunk']};"
+         f"stage_coverage={trace_row['stage_coverage']};"
+         f"tracing_off_ratio="
+         f"{trace_row['tracing_off_throughput_ratio']};"
          f"json={path}")
     return record
 
@@ -199,12 +252,15 @@ def main(argv=None):
     p.add_argument("--reps", type=int, default=3,
                    help="timing repetitions per cell (best wall wins)")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--trace", default=None, metavar="OUT.json",
+                   help="write the traced trunk/batched pass's "
+                        "Chrome/Perfetto trace here")
     args = p.parse_args(argv)
     run_serve_bench(requests=args.requests, gen_len=args.gen_len,
                     masters=args.masters, slots=args.slots, rate=args.rate,
                     backend=args.backend,
                     steps_per_dispatch=args.steps_per_dispatch,
-                    reps=args.reps, seed=args.seed)
+                    reps=args.reps, seed=args.seed, trace=args.trace)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,8 @@ policies so the columns are directly comparable.
         [--arch llama3.2-1b] [--requests 16] [--prompt-len 16] \
         [--gen-len 8] [--masters 2] [--slots 2] [--rate 0.02] \
         [--policies fifo,edf,fair] [--coding-scope head|ffn|trunk] \
-        [--steps-per-dispatch 1] [--backend numpy|jax|pallas] [--seed 0]
+        [--steps-per-dispatch 1] [--backend numpy|jax|pallas] [--seed 0] \
+        [--trace out.json]
 """
 import argparse
 import sys
@@ -51,6 +52,9 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="numpy",
                     choices=("numpy", "jax", "pallas"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record per-step spans and write a Chrome/Perfetto "
+                         "trace of the whole sweep here")
     ap.add_argument("--churn", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="degrade worker 2 mid-run, kill+revive worker 5 "
@@ -68,12 +72,18 @@ def main(argv=None) -> int:
           f"scope={args.coding_scope}, "
           f"steps/dispatch={args.steps_per_dispatch}, "
           f"churn={'on' if churn else 'off'}")
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(meta={"entry": "examples/serve_coded",
+                              "scope": args.coding_scope,
+                              "backend": args.backend})
     bridge = CodedServingBridge(
         masters=args.masters, arch=args.arch, backend=args.backend,
         seed=args.seed, slots_per_master=args.slots,
         coding_scope=args.coding_scope,
         steps_per_dispatch=args.steps_per_dispatch,
-        execution=args.execution)
+        execution=args.execution, tracer=tracer)
     bridge._setup_model(args.prompt_len + args.gen_len + 8)
     reqs = synthetic_requests(
         args.requests, masters=args.masters,
@@ -84,6 +94,9 @@ def main(argv=None) -> int:
     print("(sojourn in sim-ms; every coded matmul was scheduled by a "
           "StreamingExecutor plan and decode-verified against the uncoded "
           "pipeline)")
+    if tracer is not None:
+        from repro.serve_coded import write_trace_summary
+        write_trace_summary(tracer, args.trace)
     return 0
 
 

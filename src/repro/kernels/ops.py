@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from ..obs import device_span
 from .coded_matvec import coded_matvec_pallas
 from .matmul import matmul_pallas
 from .mds_encode import mds_encode_pallas
@@ -112,17 +113,22 @@ def coded_shard_matmul_batch(tiles: jnp.ndarray, x: jnp.ndarray, *,
     """
     interpret = default_interpret() if interpret is None else interpret
     T, R, K = tiles.shape
-    if mode == "vmap":
-        return jax.vmap(lambda t: t @ x)(tiles)
-    if mode != "pallas":
+    if mode not in ("vmap", "pallas"):
         raise ValueError(f"unknown mode {mode!r}; expected pallas | vmap")
-    if R % block_rows or K % block_k:
+    if mode == "pallas" and (R % block_rows or K % block_k):
         raise ValueError(f"tiles must be block-aligned, got R={R} K={K} "
                          f"for block ({block_rows}, {block_k})")
-    flat = coded_matvec_pallas(tiles.reshape(T * R, K), x,
-                               block_rows=block_rows, block_k=block_k,
-                               interpret=interpret)
-    return flat.reshape(T, R, -1)
+    # the exit fence (block_until_ready) only engages while a tracer is
+    # recording; the untraced path keeps jax's async dispatch
+    with device_span("coded_shard_matmul_batch", cat="kernel",
+                     args={"tiles": T, "rows": T * R, "k": K,
+                           "mode": mode}) as fence:
+        if mode == "vmap":
+            return fence(jax.vmap(lambda t: t @ x)(tiles))
+        flat = coded_matvec_pallas(tiles.reshape(T * R, K), x,
+                                   block_rows=block_rows, block_k=block_k,
+                                   interpret=interpret)
+        return fence(flat.reshape(T, R, -1))
 
 
 def coded_matvec(a_tilde: jnp.ndarray, x: jnp.ndarray, *,

@@ -126,6 +126,11 @@ def main(argv=None) -> int:
                     help="shard-execution engine: packed per-stage passes "
                          "(batched) or the shard-by-shard reference "
                          "(serial) (--coded serving)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record per-step spans (plan/pack/kernel/decode "
+                         "stages, sim deliveries, cache counters) and "
+                         "write a Chrome/Perfetto trace here "
+                         "(--coded serving)")
     args = ap.parse_args(argv)
 
     if args.coded:
@@ -137,7 +142,8 @@ def main(argv=None) -> int:
                                gen_len=args.gen_len, seed=args.seed,
                                coding_scope=args.coding_scope,
                                steps_per_dispatch=args.steps_per_dispatch,
-                               execution=args.execution)
+                               execution=args.execution,
+                               trace=args.trace)
 
     import jax
     import jax.numpy as jnp

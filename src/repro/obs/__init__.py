@@ -1,0 +1,24 @@
+"""repro.obs — zero-dependency span tracing for the coded-computation stack.
+
+See ``stream/README.md`` ("Observability") for the span taxonomy and the
+Perfetto workflow.  Core pieces:
+
+* :class:`Tracer` / :class:`Span` — spans, instants, counters on wall and
+  sim-time tracks; ``to_chrome_trace()`` / ``to_records()`` / ``summary()``.
+* :func:`current_tracer` / :func:`use_tracer` — process-global registry so
+  deep hot paths (kernels, stacked solves) can record without plumbing a
+  tracer argument through every signature.
+* :func:`device_span` / :func:`profiler_annotation` — ``block_until_ready``
+  -fenced wall timing and optional ``jax.profiler`` trace contexts.
+* ``python -m repro.obs.validate out.json`` — trace schema checker (CI).
+"""
+from .tracer import STAGE_CATS, Span, Tracer, current_tracer, use_tracer
+from .timing import device_fence, device_span, profiler_annotation
+from .export import summary as trace_summary
+from .validate import check_trace
+
+__all__ = [
+    "STAGE_CATS", "Span", "Tracer", "current_tracer", "use_tracer",
+    "device_fence", "device_span", "profiler_annotation",
+    "trace_summary", "check_trace",
+]

@@ -31,6 +31,7 @@ __all__ = [
     "HostTrunk", "trunk_matmul_keys",
     "ServeRequest", "synthetic_requests",
     "serve_policy_sweep", "print_policy_table", "run_coded_smoke",
+    "write_trace_summary",
 ]
 
 
@@ -75,6 +76,21 @@ def print_policy_table(reports) -> None:
               f"{rep.max_err:9.2e}")
 
 
+def write_trace_summary(tracer, path, verbose: bool = True) -> None:
+    """Write ``tracer``'s Chrome/Perfetto trace to ``path`` and print a
+    one-line per-stage wall breakdown (load the file in
+    https://ui.perfetto.dev to browse the spans)."""
+    tracer.write(path)
+    if verbose:
+        s = tracer.summary()
+        stages = "  ".join(f"{k}={v * 1e3:.1f}ms"
+                           for k, v in s["per_stage_wall"].items())
+        cov = s["stage_coverage"]
+        print(f"[trace] {path}: {s['span_count']} spans, {stages}, "
+              f"stage coverage "
+              f"{'n/a' if cov is None else format(cov, '.3f')}")
+
+
 def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
                     policies=("fifo", "edf", "fair"),
                     n_requests: int = 12, prompt_len: int = 16,
@@ -84,16 +100,25 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
                     steps_per_dispatch: int = 1,
                     execution: str = "batched",
                     backend: str = "numpy", seed: int = 0,
-                    verbose: bool = True):
+                    trace=None, verbose: bool = True):
     """Serve one synthetic workload under each admission policy.
 
     Returns 0 on success (CLI-friendly); asserts that every decoded coded
-    matmul matched the uncoded product (numpy backend).
+    matmul matched the uncoded product (numpy backend).  ``trace`` writes
+    a Chrome/Perfetto trace of the whole sweep (every policy's serve, as
+    sibling "serve" spans) to that path.
     """
+    tracer = None
+    if trace:
+        from ..obs import Tracer
+        tracer = Tracer(meta={"entry": "run_coded_smoke", "arch": arch,
+                              "scope": coding_scope, "backend": backend,
+                              "execution": execution})
     bridge = CodedServingBridge(
         masters=masters, arch=arch, smoke=smoke, backend=backend, seed=seed,
         slots_per_master=slots_per_master, coding_scope=coding_scope,
-        steps_per_dispatch=steps_per_dispatch, execution=execution)
+        steps_per_dispatch=steps_per_dispatch, execution=execution,
+        tracer=tracer)
     bridge._setup_model(prompt_len + gen_len + 8)
     reqs = synthetic_requests(
         n_requests, masters=masters, vocab=bridge._model["cfg"].vocab,
@@ -108,4 +133,6 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
         print_policy_table(reports)
         print("[serve_coded] all decoded coded matmuls matched the uncoded "
               "pipeline")
+    if tracer is not None:
+        write_trace_summary(tracer, trace, verbose)
     return 0

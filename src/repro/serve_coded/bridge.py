@@ -56,6 +56,7 @@ matmuls are real computations timed separately in wall-clock seconds.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import itertools
@@ -65,6 +66,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import STAGE_CATS, Tracer, current_tracer, use_tracer
 from ..parallel.hetero import coded_row_shards, rescaled_row_shards
 from ..sim.cluster import ClusterProfile, ec2_cluster
 from ..stream import backend as bk
@@ -89,6 +91,36 @@ CODING_SCOPES = ("head", "ffn", "trunk")
 EXECUTION_MODES = ("serial", "batched")
 
 
+def _fill_glue(tr, n0: int) -> None:
+    """Backfill un-attributed wall time inside a just-closed step span.
+
+    The parent ("step"-cat) span is ``tr.spans[-1]``; its leaves are the
+    stage-cat wall spans recorded since index ``n0``.  The gaps between the
+    merged leaf intervals, clamped to the parent's extent, become
+    ``cat="glue"`` spans — the host forward math and bookkeeping between
+    coded stages — so the stage categories tile the step and
+    ``stage_coverage`` stays an honest ≈1 instead of silently shrinking as
+    more of a step's time hides between instrumented calls."""
+    if tr is None or not tr.spans:
+        return
+    parent = tr.spans[-1]
+    ivs = sorted((max(s.t0, parent.t0), min(s.t1, parent.t1))
+                 for s in tr.spans[n0:-1]
+                 if s.track == "wall" and s.cat in STAGE_CATS)
+    cur, n = parent.t0, 0
+    for a, b in ivs:
+        if b <= a:
+            continue
+        if a > cur:
+            tr.add_span(f"glue:{parent.name}#{n}", cur, a, cat="glue",
+                        track="wall", args={"step": parent.name})
+            n += 1
+        cur = max(cur, b)
+    if parent.t1 > cur:
+        tr.add_span(f"glue:{parent.name}#{n}", cur, parent.t1, cat="glue",
+                    track="wall", args={"step": parent.name})
+
+
 class _BarrierExecutor:
     """Batched shard-execution engine for one step barrier.
 
@@ -108,22 +140,34 @@ class _BarrierExecutor:
         self.backend = backend
         self.device_products = bool(device_products)
         self.used_solve = False
+        self.solve_backends: set = set()   # decode engines actually run
         self.plans = {}
-        for task, order in zip(barrier.tasks, barrier.delivery_orders()):
-            self.plans[task.name] = linears[task.name].prefix_plan(
-                task.l_int, task.finish, task.completion, order=order,
-                assign=task.assign)
+        tr = current_tracer()
+        ctx = tr.span("plan:prefixes", cat="plan",
+                      args={"tasks": len(barrier.tasks)}) \
+            if tr is not None else contextlib.nullcontext()
+        with ctx:
+            for task, order in zip(barrier.tasks,
+                                   barrier.delivery_orders()):
+                self.plans[task.name] = linears[task.name].prefix_plan(
+                    task.l_int, task.finish, task.completion, order=order,
+                    assign=task.assign)
         self._stages = {}
 
     def stage(self, keys) -> PackedStage:
         kt = tuple(keys)
         stg = self._stages.get(kt)
         if stg is None:
-            stg = PackedStage(
-                [ShardProblem(key=k, linear=self.linears[k],
-                              rows=self.plans[k].rows,
-                              used_solve=self.plans[k].used_solve)
-                 for k in kt], backend=self.backend)
+            tr = current_tracer()
+            ctx = tr.span("pack:stage", cat="pack",
+                          args={"matmuls": len(kt)}) \
+                if tr is not None else contextlib.nullcontext()
+            with ctx:
+                stg = PackedStage(
+                    [ShardProblem(key=k, linear=self.linears[k],
+                                  rows=self.plans[k].rows,
+                                  used_solve=self.plans[k].used_solve)
+                     for k in kt], backend=self.backend)
             self._stages[kt] = stg
         return stg
 
@@ -132,8 +176,10 @@ class _BarrierExecutor:
         keys = [k for k, _ in items]
         assert all(X is items[0][1] for _, X in items), \
             "a stage's matmuls must share one right-hand operand"
-        outs = self.stage(keys).execute(
+        stg = self.stage(keys)
+        outs = stg.execute(
             items[0][1], device_products=self.device_products)
+        self.solve_backends.add(stg.solve_backend)
         self.used_solve |= any(self.plans[k].used_solve for k in keys)
         return outs
 
@@ -175,6 +221,11 @@ class _Step:
     # for the next dispatch (exactly the eager engine's token set)
     planned_slots: frozenset = frozenset()
     executed: bool = False        # tokens generated (eager: at dispatch)
+    # per-task decode path (True = parity solve, False = systematic
+    # scatter) and the decode-solve engine the step actually ran —
+    # recorded by execute_step, logged by step_done
+    task_solve: Dict[str, bool] = dataclasses.field(default_factory=dict)
+    decode_backend: str = ""
 
 
 class _MasterState:
@@ -203,6 +254,11 @@ class ServeReport:
     decode_backend: str = "numpy"        # effective decode-solve engine
     redispatches: int = 0                # in-flight steps re-timed off-plan
     sim_horizon_ms: float = 0.0          # last step/request completion
+    # tracing (None unless the bridge was built with a recording Tracer):
+    # per-stage wall seconds rolled up from the run's spans, and the path
+    # the Chrome/Perfetto trace was written to (when serve(trace_path=...))
+    per_stage_wall: Optional[Dict[str, float]] = None
+    trace_path: Optional[str] = None
 
     def summary(self) -> Dict[str, float]:
         out = self.metrics.summary()
@@ -267,6 +323,11 @@ class CodedServingBridge:
                product (CI/tests).  Off, the bridge skips the reference
                matmuls — the honest serving configuration, since
                distributing those products is the point.
+    tracer:    a :class:`repro.obs.Tracer` to record per-step spans
+               (plan/pack/kernel/decode stages, sim-side deliveries,
+               cache counters) into.  ``None`` or a disabled tracer keeps
+               every hot path on its uninstrumented branch — the serve
+               loop then costs one predicate per entry point.
     """
 
     def __init__(self, profile: Optional[ClusterProfile] = None, *,
@@ -282,7 +343,8 @@ class CodedServingBridge:
                  device_products: bool = False,
                  backend: str = "numpy",
                  coded: bool = True,
-                 verify: bool = True, seed: int = 0):
+                 verify: bool = True, seed: int = 0,
+                 tracer: Optional[Tracer] = None):
         if coding_scope not in CODING_SCOPES:
             raise ValueError(f"unknown coding_scope {coding_scope!r}; "
                              f"expected one of {CODING_SCOPES}")
@@ -307,6 +369,8 @@ class CodedServingBridge:
         self.coded = bool(coded)
         self.verify = bool(verify)
         self.seed = int(seed)
+        self.tracer = tracer if (tracer is not None and tracer.enabled) \
+            else None
         self._model = None
         self._max_len = 0
 
@@ -374,7 +438,36 @@ class CodedServingBridge:
     # -- serve ---------------------------------------------------------------
 
     def serve(self, requests: Sequence[ServeRequest],
-              churn: Sequence[WorkerEvent] = ()) -> ServeReport:
+              churn: Sequence[WorkerEvent] = (), *,
+              trace_path: Optional[str] = None) -> ServeReport:
+        """Serve ``requests`` to completion (see class docstring).
+
+        ``trace_path`` (needs a recording ``tracer``) writes the run's
+        Chrome/Perfetto trace JSON there after the event loop drains; the
+        report's ``per_stage_wall`` / ``trace_path`` fields are filled in
+        either way when a tracer is attached."""
+        # re-normalize (callers may assign .tracer after construction):
+        # a disabled tracer serves on the identical uninstrumented branch
+        tracer = self.tracer \
+            if self.tracer is not None and self.tracer.enabled else None
+        if tracer is None:
+            return self._serve_impl(requests, churn)
+        with use_tracer(tracer) as tr:
+            with tr.span("serve", cat="run",
+                         args={"scope": self.coding_scope,
+                               "execution": self.execution,
+                               "backend": self.backend,
+                               "coded": self.coded,
+                               "requests": len(requests)}):
+                rep = self._serve_impl(requests, churn)
+        rep.per_stage_wall = dict(tr.summary()["per_stage_wall"])
+        if trace_path is not None:
+            rep.trace_path = str(trace_path)
+            tr.write(trace_path)
+        return rep
+
+    def _serve_impl(self, requests: Sequence[ServeRequest],
+                    churn: Sequence[WorkerEvent] = ()) -> ServeReport:
         t_wall = time.perf_counter()
         reqs = {r.rid: r for r in requests}
         max_len = max(len(r.prompt) + r.gen_len for r in requests) + 8
@@ -409,6 +502,13 @@ class CodedServingBridge:
             heapq.heappush(heap, (ev.time, next(seq), _CHURN, ev))
         stats = dict(max_err=0.0, match=0, total=0, solves=0, tokens=0,
                      redispatches=0)
+        # the decode-solve engine this configuration actually runs: jax and
+        # pallas both decode through the jitted solve, but CodedLinear
+        # silently falls back to numpy when jax is unavailable — the report
+        # and the per-step log must say what really ran, not what was asked
+        eff_decode = ("local" if not self.coded
+                      else "numpy" if not bk.has_jax()
+                      else DECODE_ENGINE[self.backend])
 
         # ---- helpers bound to this serve run -----------------------------
 
@@ -562,6 +662,24 @@ class CodedServingBridge:
                 return None
             return k_row, b_row, barrier
 
+        def plan_timing(m: int, t: float, relax: bool):
+            """``make_timing`` under a dispatch-step span: plan lookup,
+            share scaling and the batched delay draw are real wall work a
+            step pays before any shard moves, so they count toward step
+            wall time with the planning attributed to the "plan" stage
+            (an OnlinePlanner re-solve inside shows up as its own
+            cat="replan" child)."""
+            tr = current_tracer()
+            if tr is None:
+                return make_timing(m, t, relax)
+            with tr.span(f"dispatch:m{m}", cat="step",
+                         args={"master": m, "sim_t": t}) as a:
+                with tr.span(f"plan:m{m}", cat="plan",
+                             args={"master": m, "relax": relax}):
+                    timing = make_timing(m, t, relax)
+                a["dispatched"] = timing is not None
+            return timing
+
         def execute_step(m: int, sp: _Step) -> None:
             """Generate the dispatch's tokens through its matmul engine.
 
@@ -570,6 +688,21 @@ class CodedServingBridge:
             lands); the batched engine runs it once, at barrier
             completion, with every stage of the forward as one packed
             pass over plans frozen at dispatch."""
+            tr = current_tracer()
+            if tr is None:
+                return _execute_step(m, sp)
+            n0 = len(tr.spans)
+            with tr.span(f"step:m{m}", cat="step",
+                         args={"master": m, "execution": self.execution,
+                               "scope": self.coding_scope}) as a:
+                _execute_step(m, sp)
+                a["tokens"] = sum(len(v) for v in sp.tok_by_slot.values())
+                a["used_solve"] = sp.used_solve
+            # the wall time between this step's stage spans is measured,
+            # not inferred: host forward math + bookkeeping become glue
+            _fill_glue(tr, n0)
+
+        def _execute_step(m: int, sp: _Step) -> None:
             st = states[m]
             task_map = {task.name: task for task in sp.barrier.tasks}
             step_stats = dict(max_err=0.0, used_solve=False, argmax_ok=0)
@@ -602,6 +735,8 @@ class CodedServingBridge:
                                    task.completion, assign=task.assign)
                     out = res.out
                     step_stats["used_solve"] |= res.used_solve
+                    sp.task_solve[key] = bool(res.used_solve)
+                    sp.decode_backend = res.decode_backend
                 else:
                     out = lin.local(X)
                 if self.verify:
@@ -661,6 +796,11 @@ class CodedServingBridge:
             stats["max_err"] = max(stats["max_err"], step_stats["max_err"])
             stats["match"] += step_stats["argmax_ok"]
             stats["solves"] += int(step_stats["used_solve"])
+            if ex is not None:
+                sp.task_solve = {k: bool(p.used_solve)
+                                 for k, p in ex.plans.items()}
+                if ex.solve_backends:
+                    sp.decode_backend = next(iter(ex.solve_backends))
             sp.tok_by_slot = tok_by_slot
             sp.used_solve = step_stats["used_solve"]
             sp.max_err = step_stats["max_err"]
@@ -672,7 +812,7 @@ class CodedServingBridge:
             if not any(len(s.tokens) < s.gen_len
                        for s in st.slots.values()):
                 return False
-            timing = make_timing(m, t, relax)
+            timing = plan_timing(m, t, relax)
             if timing is None:
                 return False
             k_row, b_row, barrier = timing
@@ -704,7 +844,7 @@ class CodedServingBridge:
             has already released the old shares."""
             st = states[m]
             sp = st.step
-            timing = make_timing(m, t, relax=True)
+            timing = plan_timing(m, t, relax=True)
             sp.version = next(version_seq)
             if timing is None:
                 sp.stalled = True
@@ -749,18 +889,64 @@ class CodedServingBridge:
             delivered = sp.barrier.rows_delivered_by(t)
             ntok = sum(len(v) for v in sp.tok_by_slot.values())
             stats["tokens"] += ntok
+            # covering-prefix attribution: the step completed at the max of
+            # its tasks' earliest covering prefixes — name the task and the
+            # worker whose delivery closed that prefix (the straggler the
+            # whole barrier waited for)
+            crit_task, crit_worker = "", -1
+            done_tasks = [task for task in sp.barrier.tasks
+                          if np.isfinite(task.completion)]
+            if done_tasks:
+                ct = max(done_tasks, key=lambda task: task.completion)
+                crit_task = ct.name
+                eps = 1e-9 * max(1.0, abs(ct.completion))
+                hit = np.nonzero((ct.l_int > 0) & np.isfinite(ct.finish)
+                                 & (np.abs(ct.finish - ct.completion)
+                                    <= eps))[0]
+                if hit.size:
+                    crit_worker = int(hit[0])
             step_log.append({
                 "master": m, "scope": self.coding_scope,
                 "execution": self.execution,
-                "decode_backend": DECODE_ENGINE[self.backend]
-                if self.coded else "local",
+                "decode_backend": sp.decode_backend or eff_decode,
                 "t_start": sp.t_start, "t_done": t,
                 "batch": len(sp.tok_by_slot), "tokens": ntok,
                 "n_tasks": len(sp.barrier.tasks),
                 "rows_dispatched": sp.rows_dispatched,
                 "rows_delivered": delivered, "used_solve": sp.used_solve,
                 "redispatches": sp.redispatches, "max_err": sp.max_err,
+                "critical_task": crit_task, "critical_worker": crit_worker,
             })
+            tr = current_tracer()
+            if tr is not None:
+                tr.add_span(f"step:m{m}", sp.t_acquire, t, cat="sim_step",
+                            track=f"sim:m{m}",
+                            args={"master": m, "tokens": ntok,
+                                  "batch": len(sp.tok_by_slot),
+                                  "redispatches": sp.redispatches,
+                                  "critical_task": crit_task,
+                                  "critical_worker": crit_worker})
+                for task in sp.barrier.tasks:
+                    solved = sp.task_solve.get(task.name)
+                    if solved is not None:
+                        tr.count("decode_parity" if solved
+                                 else "decode_systematic", t=t, track="sim")
+                    comp = task.completion
+                    ok = np.isfinite(comp)
+                    eps = 1e-9 * max(1.0, abs(comp)) if ok else 0.0
+                    for n in np.nonzero(task.l_int > 0)[0]:
+                        fin = float(task.finish[n])
+                        if not np.isfinite(fin):
+                            continue
+                        tr.add_span(
+                            f"{task.name}/w{n}", sp.t_acquire, fin,
+                            cat="delivery", track=f"sim:worker{n}",
+                            args={"worker": int(n), "task": task.name,
+                                  "master": m, "rows": int(task.l_int[n]),
+                                  "in_prefix": bool(ok and fin
+                                                    <= comp + eps),
+                                  "critical": bool(ok and abs(fin - comp)
+                                                   <= eps)})
             for sid, toks in sp.tok_by_slot.items():
                 slot = st.slots[sid]
                 tokens_out.setdefault(slot.rid, []).extend(toks)
@@ -884,8 +1070,7 @@ class CodedServingBridge:
             tokens_generated=stats["tokens"],
             solve_steps=stats["solves"],
             execution=self.execution,
-            decode_backend=DECODE_ENGINE[self.backend] if self.coded
-            else "local",
+            decode_backend=eff_decode,
             redispatches=stats["redispatches"],
             sim_horizon_ms=max([metrics.t_end]
                                + [s["t_done"] for s in step_log]),

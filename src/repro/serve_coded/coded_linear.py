@@ -44,6 +44,7 @@ with the looser tolerance, as in the streaming engine).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import zlib
 from typing import List, Optional
@@ -51,6 +52,7 @@ from typing import List, Optional
 import numpy as np
 
 from ..core import mds
+from ..obs import current_tracer
 from ..stream import backend as bk
 
 __all__ = ["CodedLinear", "LinearStep", "PrefixPlan", "shard_products"]
@@ -188,6 +190,12 @@ class CodedLinear:
         conditioning guard (a collapsed singular spectrum is the symptom
         of every degenerate decode minor) — a degenerate draw is redrawn
         from the same seeded stream, so replay stays deterministic."""
+        tr = current_tracer()
+        if tr is not None:
+            # hit/miss of the persistent [W; WR] cache: a miss pays a
+            # parity draw + encode, a hit is a pure row gather
+            tr.count("encode_cache_hits" if self.n_parity >= n_parity
+                     else "encode_cache_misses")
         while self.n_parity < n_parity:
             R_new = self._rng.normal(0.0, 1.0 / np.sqrt(self.L),
                                      size=(self.parity_chunk, self.L))
@@ -201,6 +209,8 @@ class CodedLinear:
             self._enc[self._n_enc:self._n_enc + enc.shape[0]] = enc
             self._n_enc += enc.shape[0]
             self._G_cache = None
+            if tr is not None:
+                tr.count("encode_cache_miss_rows", enc.shape[0])
 
     def generator(self, L_tilde: int) -> np.ndarray:
         """The systematic generator [I; R] truncated to ``L_tilde`` rows."""
@@ -221,14 +231,23 @@ class CodedLinear:
         the batched kernel path gathers its shard tiles from."""
         import jax.numpy as jnp
         self.ensure_parity(max(n_rows - self.L, 0))
+        tr = current_tracer()
         if self._enc_dev is None:
             self._enc_dev = jnp.asarray(self._enc[:self._n_enc], jnp.float32)
+            if tr is not None:
+                tr.count("device_cache_upload_rows", self._n_enc)
             self._n_dev = self._n_enc
         elif self._n_dev < self._n_enc:
             fresh = jnp.asarray(self._enc[self._n_dev:self._n_enc],
                                 jnp.float32)
             self._enc_dev = jnp.concatenate([self._enc_dev, fresh])
+            if tr is not None:
+                tr.count("device_cache_upload_rows",
+                         self._n_enc - self._n_dev)
             self._n_dev = self._n_enc
+        else:
+            if tr is not None:
+                tr.count("device_cache_hits")
         return self._enc_dev[:n_rows]
 
     # -- reference -----------------------------------------------------------
@@ -359,11 +378,21 @@ class CodedLinear:
         timing arguments.
         """
         X = np.asarray(X, dtype=np.float64)
-        plan = self.prefix_plan(l_int, finish, t_complete, assign=assign)
+        tr = current_tracer()
+        ctx = tr.span(f"plan:{self.name}", cat="plan") \
+            if tr is not None else contextlib.nullcontext()
+        with ctx:
+            plan = self.prefix_plan(l_int, finish, t_complete, assign=assign)
         enc = self._enc[:self._n_enc]
         # the per-worker shard execution: each node's encoded rows × X
-        y = np.concatenate([shard_products(enc[sl], X)
-                            for sl in plan.slices])           # (L, B)
+        ctx = tr.span(f"product:{self.name}", cat="kernel",
+                      args={"rows": int(plan.rows.size),
+                            "workers": int(plan.used.size)}) \
+            if tr is not None else contextlib.nullcontext()
+        with ctx:
+            y = np.concatenate([shard_products(enc[sl], X)
+                                for sl in plan.slices])       # (L, B)
+        # decode_plan / apply time themselves (repro.stream.backend spans)
         z = self.decode_plan(plan.rows).apply(
             y[None], backend=self.backend)[0]
         return LinearStep(out=z.T, rows=plan.rows,

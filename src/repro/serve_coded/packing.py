@@ -40,11 +40,13 @@ every token.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import current_tracer
 from ..stream import backend as bk
 from .coded_linear import CodedLinear, shard_products
 
@@ -264,6 +266,10 @@ class PackedStage:
         else:
             self.problems = list(problems)
         self.backend = backend
+        # the decode-solve engine this stage will actually run (jax falls
+        # back to numpy when unavailable) — the bridge logs it per step
+        self.solve_backend = "jax" if (backend != "numpy"
+                                       and bk.has_jax()) else "numpy"
         self.pack = pack_shard_problems(self.problems, tile=tile)
         # decode groups: (offset problem index, L, member count, subgroups)
         self.groups: List[Tuple[int, int, int, List[_DecodeGroup]]] = []
@@ -298,23 +304,37 @@ class PackedStage:
                 device_products: bool = False) -> Dict[str, np.ndarray]:
         """Decode every problem of the stage for one activation batch →
         ``{key: (B, L) exact product}``."""
+        tr = current_tracer()
         if device_products and self.backend != "numpy":
+            # the kernel launch inside products_device times itself
+            # (repro.kernels.ops device_span) — no outer kernel span here,
+            # stage categories must not double count
             y = self.pack.products_device(X, backend=self.backend)
             Y = np.concatenate(y) if len(y) > 1 else y[0]
         else:
-            Y = shard_products(self.pack.W_packed,
-                               np.asarray(X, dtype=np.float64))
-        use_jax = self.backend != "numpy" and bk.has_jax()
+            ctx = tr.span("stage:products", cat="kernel",
+                          args={"rows": self.pack.total,
+                                "problems": len(self.problems)}) \
+                if tr is not None else contextlib.nullcontext()
+            with ctx:
+                Y = shard_products(self.pack.W_packed,
+                                   np.asarray(X, dtype=np.float64))
+        use_jax = self.solve_backend == "jax"
         solve = ((lambda A, b: np.asarray(bk._solve_jit()(A, b)))
                  if use_jax else bk.solve_stacked)
         out: Dict[str, np.ndarray] = {}
         B = Y.shape[-1]
         off = self.pack.offsets
-        for i0, L, g, subs in self.groups:
-            yg = Y[off[i0]:off[i0] + g * L].reshape(g, L, B)  # a view
-            z = np.empty((g, L, B))
-            for sub in subs:
-                sub.apply(yg, z, solve)
-            for j in range(g):
-                out[self.problems[i0 + j].key] = z[j].T
+        ctx = tr.span("stage:decode", cat="decode",
+                      args={"groups": len(self.groups),
+                            "solve": self.solve_backend}) \
+            if tr is not None else contextlib.nullcontext()
+        with ctx:
+            for i0, L, g, subs in self.groups:
+                yg = Y[off[i0]:off[i0] + g * L].reshape(g, L, B)  # a view
+                z = np.empty((g, L, B))
+                for sub in subs:
+                    sub.apply(yg, z, solve)
+                for j in range(g):
+                    out[self.problems[i0 + j].key] = z[j].T
         return out

@@ -49,6 +49,8 @@ from typing import Optional
 
 import numpy as np
 
+from ..obs import current_tracer, device_span
+
 __all__ = [
     "has_jax",
     "completion_times",
@@ -443,10 +445,16 @@ def simulate_batch(l, k, b, a, u, gamma, L, trials: int, *,
     chunk = max(min(int(chunk), trials), 1)
     nch = math.ceil(trials / chunk)
     fn = _simulate_jit(bool(needs_all), straggle_p > 0.0, l_a.shape[1])
-    comp = fn(_make_key(int(seed)), jnp.asarray(c_tr), jnp.asarray(shift),
-              jnp.asarray(c_cp), jnp.asarray(l_a),
-              jnp.asarray(L.astype(dtype)), dtype.type(straggle_p),
-              dtype.type(straggle_factor), nch, chunk)
+    # device_span fences with block_until_ready only while a tracer records,
+    # so the async dispatch pipeline is untouched when tracing is off
+    with device_span("simulate_batch", cat="kernel",
+                     args={"trials": trials, "M": int(l.shape[0]),
+                           "chunks": nch}) as fence:
+        comp = fence(fn(_make_key(int(seed)), jnp.asarray(c_tr),
+                        jnp.asarray(shift), jnp.asarray(c_cp),
+                        jnp.asarray(l_a), jnp.asarray(L.astype(dtype)),
+                        dtype.type(straggle_p), dtype.type(straggle_factor),
+                        nch, chunk))
     return np.asarray(comp[:trials], dtype=np.float64)
 
 
@@ -560,6 +568,8 @@ class DecodePlan:
         """Solve the planned systems for one stacked right-hand side
         ``y`` (B, L) or (B, L, C)."""
         check_backend(backend)
+        tr = current_tracer()
+        t0 = tr.now() if tr is not None else 0.0
         y = np.asarray(y, dtype=np.float64)
         squeeze = y.ndim == 2
         if squeeze:
@@ -585,6 +595,14 @@ class DecodePlan:
             sol = solve(mg.A, par_y - mg.Gk @ sys_y)
             out[mg.grp[:, None], mg.sys_rows] = sys_y        # exact pins
             out[mg.grp[:, None], mg.unk] = sol
+        if tr is not None:
+            tr.add_span("decode_apply", t0, tr.now(), cat="decode",
+                        track="wall",
+                        args={"tasks": self.B, "backend": backend,
+                              "scatter": int(self.fast_idx.size),
+                              "solved": int(self.full_idx.size),
+                              "mixed": sum(int(mg.grp.size)
+                                           for mg in self.mixed_groups)})
         return out[..., 0] if squeeze else out
 
 
@@ -600,6 +618,8 @@ def plan_decode(G, rows: np.ndarray, *, systematic: str = "auto",
     if systematic not in ("auto", "prefix", "never"):
         raise ValueError(f"systematic must be 'auto', 'prefix' or 'never', "
                          f"got {systematic!r}")
+    tr = current_tracer()
+    t0 = tr.now() if tr is not None else 0.0
     rows = np.asarray(rows)
     glist = isinstance(G, (list, tuple))
     if not glist:
@@ -646,6 +666,11 @@ def plan_decode(G, rows: np.ndarray, *, systematic: str = "auto",
             A = np.take_along_axis(Gp, unk[:, None, :], axis=2)
             mixed_groups.append(
                 _MixedGroup(grp, sys_rows, unk, A, Gk, sys_pos, par_pos))
+    if tr is not None:
+        tr.add_span("plan_decode", t0, tr.now(), cat="plan", track="wall",
+                    args={"tasks": B, "L": L, "scatter": int(fast_idx.size),
+                          "solved": int(full_idx.size),
+                          "mixed_groups": len(mixed_groups)})
     return DecodePlan(B, L, fast_idx, rows[fast_idx], full_idx, full_G,
                       mixed_groups)
 

@@ -22,6 +22,7 @@ metrics, which the tier-1 tests assert.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -30,6 +31,7 @@ import numpy as np
 
 from ..core import mds
 from ..core.problem import Scenario
+from ..obs import Tracer, use_tracer
 from . import backend as bk
 from .barrier import churn_finish_update
 from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, ArrivalProcess,
@@ -108,6 +110,12 @@ class StreamingExecutor:
                instances (CPU-credit exhaustion): *churn-free* degradation
                that hits in-flight tasks without any WorkerEvent, matching
                ``sim.montecarlo``'s throttling model.
+    tracer:    optional :class:`repro.obs.Tracer`.  Records sim-time spans
+               (queue wait / service per master lane, per-worker shard
+               deliveries with critical-delivery attribution, churn
+               instants) and wall-time spans (the run itself, replan
+               solves, verification products/decodes) side by side.  A
+               disabled tracer costs nothing: it is normalised to None.
 
     One executor = one run.  Build a fresh instance to replay.
     """
@@ -123,7 +131,8 @@ class StreamingExecutor:
                  rng: int = 0,
                  backend: str = "numpy",
                  straggle_p: float = 0.0,
-                 straggle_factor: float = 8.0):
+                 straggle_factor: float = 8.0,
+                 tracer: Optional[Tracer] = None):
         if numerics not in ("none", "verify"):
             raise ValueError(f"unknown numerics mode {numerics!r}")
         bk.check_backend(backend)
@@ -144,6 +153,10 @@ class StreamingExecutor:
         self.backend = backend
         self.straggle_p = float(straggle_p)
         self.straggle_factor = float(straggle_factor)
+        # Disabled tracers normalise to None so the off path is exactly the
+        # no-tracer path (the < 2% disabled-overhead contract).
+        self.tracer = tracer if (tracer is not None
+                                 and tracer.enabled) else None
 
         self.planner = OnlinePlanner(sc, policy=policy, replan=replan,
                                      rng=self.seed)
@@ -178,12 +191,25 @@ class StreamingExecutor:
 
     def run(self, max_tasks: int = 1000, until: float = np.inf) -> StreamMetrics:
         """Simulate ``max_tasks`` arrivals (drained to completion) or until
-        sim time ``until``, whichever first.  Returns the metrics."""
+        sim time ``until``, whichever first.  Returns the metrics.
+
+        If a :class:`~repro.obs.Tracer` was passed, it is installed as the
+        process-global tracer for the duration of the run (deep call sites
+        — replan solves, backend decodes — record through it)."""
         if self._ran:
             raise RuntimeError("StreamingExecutor is single-shot; build a "
                                "fresh instance to replay")
         self._ran = True
         self.max_tasks = int(max_tasks)
+        if self.tracer is None:
+            return self._run_loop(until)
+        with use_tracer(self.tracer) as tr:
+            with tr.span("stream_run", cat="run",
+                         args={"backend": self.backend,
+                               "max_tasks": self.max_tasks}):
+                return self._run_loop(until)
+
+    def _run_loop(self, until: float) -> StreamMetrics:
         for i, src in enumerate(self.sources):
             t0 = src.next_after(0.0)
             if np.isfinite(t0):
@@ -246,6 +272,10 @@ class StreamingExecutor:
         rec = TaskRecord(tid=tid, master=src.master, t_arrive=t,
                          rows_needed=float(self.sc.L[src.master]))
         self.tasks[tid] = rec
+        if self.tracer is not None:
+            self.tracer.instant(f"arrive:t{tid}", t, cat="arrival",
+                                track=f"sim:m{src.master}",
+                                args={"task": tid, "master": src.master})
         plan = self.planner.ensure_plan(self.online, self.scale, event=True)
         rec.deadline = float(src.deadline_for(
             t, float(plan.t_per_master[src.master])))
@@ -295,6 +325,11 @@ class StreamingExecutor:
     def _on_churn(self, ev: WorkerEvent, t: float) -> None:
         w = ev.worker
         undo = self.scale[w]
+        if self.tracer is not None:
+            self.tracer.instant(f"churn:{ev.kind}:w{w}", t, cat="churn",
+                                track=f"sim:worker{w}",
+                                args={"worker": w, "kind": ev.kind,
+                                      "factor": ev.factor})
         if ev.kind == "leave":
             self.pool.set_online(w, False)
         elif ev.kind == "join":
@@ -312,6 +347,8 @@ class StreamingExecutor:
                 if self._alive(fl) and churn_finish_update(
                         fl.finish, fl.l_row, w, ev.kind, t,
                         factor=ev.factor, undo=undo):
+                    if self.tracer is not None:
+                        self.tracer.count("churn_retimes", t=t, track="sim")
                     self._retime(fl, t)
         self.planner.ensure_plan(self.online, self.scale, event=True)
         self._drain_queue(t)
@@ -407,6 +444,10 @@ class StreamingExecutor:
         rec.fraction = fl.fraction
         self.inflight[tid] = fl
         self.queue.note_admitted(rec.master)
+        if self.tracer is not None and t > rec.t_arrive:
+            self.tracer.add_span(f"queue:t{tid}", rec.t_arrive, t,
+                                 cat="queue", track=f"sim:m{rec.master}",
+                                 args={"task": tid})
         return True
 
     def _maybe_speculate(self, fl: _InFlight, t: float) -> None:
@@ -433,6 +474,12 @@ class StreamingExecutor:
             self.metrics.speculations += 1
 
     def _drain_queue(self, t: float) -> None:
+        self._drain_queue_inner(t)
+        if self.tracer is not None:
+            self.tracer.gauge("queue_depth", len(self.queue), t=t,
+                              track="sim")
+
+    def _drain_queue_inner(self, t: float) -> None:
         while len(self.queue):
             if self.queue.head_of_line:
                 # only the head can go: O(1)/O(log Q), no full reorder
@@ -492,12 +539,38 @@ class StreamingExecutor:
         rec.t_complete = t
         rec.rows_delivered = float(bk.delivered_by(
             fl.finish[None], fl.l_row[None], np.array([t]))[0])
+        if self.tracer is not None:
+            self._trace_task(fl, rec, t)
         self.pool.release(fl.k_row, fl.b_row)
         self.metrics.record_share_interval(fl.k_row, fl.b_row, t - fl.t_admit)
         self.metrics.record_task(rec)
         del self.inflight[fl.tid]
         if self.numerics == "verify" and not self.planner.needs_all:
             self._verify_buf.append(fl)
+
+    def _trace_task(self, fl: _InFlight, rec: TaskRecord, t: float) -> None:
+        """Sim-time spans for a completed attempt: the service interval on
+        the master's lane, one delivery span per contributing worker on the
+        worker's lane.  The *critical* delivery (finish == completion) is
+        the covering-prefix row that closed the task — the paper's slowest-
+        task objective, made visible per task."""
+        tr = self.tracer
+        tr.add_span(f"service:t{fl.tid}", fl.t_admit, t, cat="task",
+                    track=f"sim:m{fl.master}",
+                    args={"task": fl.tid, "fraction": fl.fraction,
+                          "retries": rec.retries,
+                          "speculative": fl.speculative})
+        eps = 1e-9 * max(1.0, abs(t))
+        for n in np.nonzero(fl.l_row > 0)[0]:
+            fin = float(fl.finish[n])
+            if not np.isfinite(fin):
+                continue
+            tr.add_span(f"t{fl.tid}/w{int(n)}", fl.t_admit, fin,
+                        cat="delivery", track=f"sim:worker{int(n)}",
+                        args={"worker": int(n), "task": fl.tid,
+                              "rows": float(fl.l_row[n]),
+                              "delivered": bool(fin <= t + eps),
+                              "critical": bool(abs(fin - t) <= eps)})
 
     # --------------------------------------------------- batched verification
 
@@ -546,7 +619,16 @@ class StreamingExecutor:
             B, S = len(fls), self.verify_cols
             A = vrng.normal(size=(B, L, S))
             x = vrng.normal(size=(B, S))
-            Z, y_full = self._verify_products(G, A, x)     # (B, L), (B, Lt)
+            tr = self.tracer
+            # cat "verify", not the stage cats: the wrapped calls (pallas /
+            # jitted products, decode_batch -> plan_decode + apply) emit
+            # their own kernel/plan/decode spans, and stage categories must
+            # not double count nested work
+            ctx = tr.span(f"verify:m{m}:products", cat="verify",
+                          args={"tasks": B, "backend": self.backend}) \
+                if tr is not None else contextlib.nullcontext()
+            with ctx:
+                Z, y_full = self._verify_products(G, A, x)  # (B, L), (B, Lt)
             rows = np.empty((B, L), dtype=np.int64)
             valid = np.ones(B, dtype=bool)
             for i, (fl, lint) in enumerate(zip(fls, li)):
@@ -572,9 +654,13 @@ class StreamingExecutor:
             idx = np.nonzero(valid)[0]
             if idx.size:
                 y_rows = np.take_along_axis(y_full[idx], rows[idx], axis=1)
-                y_hat = bk.decode_batch(
-                    G, rows[idx], y_rows,
-                    backend="numpy" if self.backend == "numpy" else "jax")
+                ctx = tr.span(f"verify:m{m}:decode", cat="verify",
+                              args={"tasks": int(idx.size)}) \
+                    if tr is not None else contextlib.nullcontext()
+                with ctx:
+                    y_hat = bk.decode_batch(
+                        G, rows[idx], y_rows,
+                        backend="numpy" if self.backend == "numpy" else "jax")
                 truth = Z[idx]
                 err = np.abs(y_hat - truth).max(axis=1)
                 tol = verify_tol * (1.0 + np.abs(truth).max(axis=1))

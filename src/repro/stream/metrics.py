@@ -141,14 +141,26 @@ class StreamMetrics:
         return self._arr("sojourn", master)
 
     def utilization(self) -> np.ndarray:
-        """Mean in-flight computing-power share per worker (cols 1..N)."""
-        horizon = max(self.t_end, 1e-300)
-        return self.busy_k[1:] / horizon
+        """Mean in-flight computing-power share per worker (cols 1..N).
+
+        With no observed horizon (nothing completed, ``t_end == 0``) the
+        integral has no denominator — report zeros instead of the 1e300-
+        scale garbage a tiny epsilon horizon would produce (shares can be
+        recorded at a cutoff even when no task ever finished)."""
+        if self.t_end <= 0.0:
+            return np.zeros(self.N)
+        return self.busy_k[1:] / self.t_end
 
     def to_records(self) -> List[Dict[str, float]]:
         return [r.to_dict() for r in self.completed]
 
     def summary(self) -> Dict[str, float]:
+        """One flat dict of floats.  NaN-safe by construction: statistics
+        over partially-populated pools (tasks whose ``t_admit`` /
+        ``t_complete`` are still NaN, or an entirely empty run) are computed
+        over the *finite* samples only, and a key with no finite sample is
+        omitted rather than emitted as NaN — downstream JSON/gating code
+        never sees a NaN."""
         s = self.sojourns()
         q = self._arr("queue_wait")
         w = self._arr("wasted_rows")
@@ -161,6 +173,8 @@ class StreamMetrics:
             "replans": float(self.replans),
             "speculations": float(self.speculations),
             "horizon": float(self.t_end),
+            "utilization_mean": float(self.utilization().mean()),
+            "utilization_max": float(self.utilization().max()),
         }
         with_dl = [r for r in self.completed + self.unserved_tasks
                    if math.isfinite(r.deadline)]
@@ -169,19 +183,24 @@ class StreamMetrics:
                 np.mean([r.deadline_miss for r in with_dl]))
         if s.size:
             fin = s[np.isfinite(s)]
+            fq = q[np.isfinite(q)]
+            fw = w[np.isfinite(w)]
+            out["throughput_per_time"] = \
+                (len(self.completed) / self.t_end) if self.t_end > 0 else 0.0
             out.update({
-                "throughput_per_time": len(self.completed) / max(self.t_end, 1e-300),
                 "sojourn_mean": float(fin.mean()) if fin.size else math.inf,
                 "sojourn_p50": float(np.quantile(fin, 0.50)) if fin.size else math.inf,
                 "sojourn_p95": float(np.quantile(fin, 0.95)) if fin.size else math.inf,
                 "sojourn_p99": float(np.quantile(fin, 0.99)) if fin.size else math.inf,
-                "queue_wait_mean": float(q.mean()),
-                "queue_wait_p99": float(np.quantile(q, 0.99)),
-                "wasted_rows_per_task": float(w.mean()),
-                "wasted_fraction": float(w.sum() / max(need.sum(), 1e-300)),
-                "utilization_mean": float(self.utilization().mean()),
-                "utilization_max": float(self.utilization().max()),
             })
+            if fq.size:
+                out["queue_wait_mean"] = float(fq.mean())
+                out["queue_wait_p99"] = float(np.quantile(fq, 0.99))
+            if fw.size:
+                out["wasted_rows_per_task"] = float(fw.mean())
+                need_sum = need[np.isfinite(need)].sum()
+                out["wasted_fraction"] = float(
+                    fw.sum() / max(need_sum, 1e-300))
         if ok:
             out["decode_ok_rate"] = float(np.mean([bool(v) for v in ok]))
         return out

@@ -37,6 +37,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from ..obs import current_tracer
+
 __all__ = [
     "AdmissionConfig", "SharePool", "WaitQueue",
     "AdmissionPolicy", "FIFOAdmission", "EDFAdmission", "FairShareAdmission",
@@ -122,10 +124,16 @@ class SharePool:
             raise ValueError("share acquisition violates column-sum <= 1")
         self.k_used[1:] += k_row[1:]
         self.b_used[1:] += b_row[1:]
+        tr = current_tracer()
+        if tr is not None:
+            tr.gauge("pool_k_used", float(self.k_used[1:].sum()))
 
     def release(self, k_row: np.ndarray, b_row: np.ndarray) -> None:
         self.k_used[1:] = np.maximum(self.k_used[1:] - k_row[1:], 0.0)
         self.b_used[1:] = np.maximum(self.b_used[1:] - b_row[1:], 0.0)
+        tr = current_tracer()
+        if tr is not None:
+            tr.gauge("pool_k_used", float(self.k_used[1:].sum()))
 
     def set_online(self, worker: int, online: bool) -> None:
         self.online[worker] = online
@@ -284,6 +292,9 @@ class AdmissionPolicy:
         if not force and self.max_queue is not None \
                 and len(self._entries) >= self.max_queue:
             self.rejected += 1
+            tr = current_tracer()
+            if tr is not None:
+                tr.count("admission_rejected")
             return False
         self._entries[tid] = (int(master), float(deadline), next(self._seq))
         return True

@@ -33,6 +33,7 @@ from ..core.allocation import markov_loads
 from ..core.benchmarks import uncoded_uniform
 from ..core.problem import Plan, Scenario, theta_dedicated
 from ..core.sca import sca_enhance_plan
+from ..obs import current_tracer
 
 __all__ = ["ReplanPolicy", "OnlinePlanner", "theta_row_fractional", "scaled_row_loads"]
 
@@ -165,7 +166,18 @@ class OnlinePlanner:
                     self._capacity_at_plan, 1e-300) - 1.0))
                 solve = drift > self.replan.drift_threshold
         if solve:
-            self._plan = self._solve(online, scale)
+            tr = current_tracer()
+            if tr is None:
+                self._plan = self._solve(online, scale)
+            else:
+                # cat "replan" (not the "plan" stage cat): a re-solve can
+                # fire *inside* a serving step's plan stage, and stage
+                # categories must tile the step without double counting.
+                with tr.span("replan_solve", cat="replan",
+                             args={"policy": self.policy,
+                                   "mode": self.replan.mode,
+                                   "replans": self.replans}):
+                    self._plan = self._solve(online, scale)
             self._key = key
             self._capacity_at_plan = self.capacity(online, scale)
             self.replans += 1

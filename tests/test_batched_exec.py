@@ -158,6 +158,33 @@ def test_decode_backend_recorded_explicitly():
     assert rep.decode_backend == "local"
 
 
+def test_step_log_schema_parity_serial_vs_batched():
+    """Both execution engines must emit the *same* step_log schema — every
+    key present in one appears in the other, per-step decode backends agree
+    with the report-level routing, and the covering-prefix attribution
+    (critical_task/critical_worker) is populated, not defaulted."""
+    ser = _serve("trunk", execution="serial")
+    bat = _serve("trunk", execution="batched")
+    assert ser.steps and bat.steps
+    keys_ser = {k for s in ser.steps for k in s}
+    keys_bat = {k for s in bat.steps for k in s}
+    assert keys_ser == keys_bat
+    assert {"decode_backend", "critical_task", "critical_worker",
+            "execution", "t_done"} <= keys_ser
+    for rep in (ser, bat):
+        assert all(s["decode_backend"] == rep.decode_backend
+                   for s in rep.steps)
+        crit_tasks = [s["critical_task"] for s in rep.steps]
+        assert any(t is not None for t in crit_tasks)
+        assert any(s["critical_worker"] >= 0 for s in rep.steps)
+    # the two engines attribute the same critical tasks: identical
+    # scheduling (asserted above via t_done) implies identical attribution
+    assert [s["critical_task"] for s in ser.steps] == \
+        [s["critical_task"] for s in bat.steps]
+    assert [s["critical_worker"] for s in ser.steps] == \
+        [s["critical_worker"] for s in bat.steps]
+
+
 # ---------------------------------------------------------------------------
 # Conditioning guard + per-scope decode error bound (satellite)
 # ---------------------------------------------------------------------------
