@@ -89,6 +89,11 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
     reqs = synthetic_requests(
         requests, masters=masters, vocab=bridge._model["cfg"].vocab,
         prompt_len=prompt_len, gen_len=gen_len, rate=rate, seed=seed)
+    # discarded warmup rep: the first serve of the process pays jit
+    # compilation, lazy parity encodes and allocator warmup — without it
+    # the first timed cell (historically fifo) absorbed all of that and
+    # the cross-policy wall ratios were skewed against it
+    bridge.serve(reqs, churn=churn)
     reports = serve_policy_sweep(bridge, reqs, POLICIES, churn=churn)
     for policy, rep in reports.items():
         per_policy[policy] = _report_row(rep)
@@ -153,6 +158,13 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
     # overhead); comparing against the earlier timing loop instead would
     # fold half the bench's worth of runner drift into the ratio.
     from repro.obs import Tracer
+    json_out = json_path or os.environ.get("REPRO_BENCH_SERVE_JSON",
+                                           "BENCH_serve.json")
+    # the traced pass always runs — always write its artifact too, so the
+    # JSON's trace.trace_path points at a real file instead of null
+    # whenever --trace wasn't given
+    if trace is None:
+        trace = os.path.splitext(json_out)[0] + "_trace.json"
     tbridge = timers[("trunk", "batched")]
     tbridge.tracer = tracer = Tracer(meta={"bench": "coded_serving",
                                            "scope": "trunk",
@@ -168,10 +180,17 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
         tbridge.tracer = None
         r = tbridge.serve(reqs, churn=churn)
         off_best = max(off_best, r.summary()["tokens_per_wall_second"])
+    cache_hits = ts["counters"].get("plan_cache_hits", 0.0)
+    cache_misses = ts["counters"].get("plan_cache_misses", 0.0)
     trace_row = {
         "scope": "trunk", "execution": "batched",
         "per_stage_wall": {k: round(v, 6)
                            for k, v in ts["per_stage_wall"].items()},
+        # steady-state step plans come from the StepPlanCache; misses only
+        # on cold start and after churn/replan invalidations, so the rate
+        # is a direct gauge of whether caching is actually engaged
+        "plan_cache_hit_rate": round(
+            cache_hits / max(cache_hits + cache_misses, 1.0), 4),
         "stage_coverage": None if ts["stage_coverage"] is None
         else round(ts["stage_coverage"], 4),
         "counters": {k: round(v, 1) for k, v in ts["counters"].items()},
@@ -219,8 +238,7 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
             for scope in CODING_SCOPES},
         "trace": trace_row,
     }
-    path = json_path or os.environ.get("REPRO_BENCH_SERVE_JSON",
-                                       "BENCH_serve.json")
+    path = json_out
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
@@ -232,6 +250,7 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
          f"trunk_wall_vs_head={record['trunk_wall_vs_head']};"
          f"batched_speedup_trunk="
          f"{record['batched_wall_speedup']['trunk']};"
+         f"plan_cache_hit_rate={trace_row['plan_cache_hit_rate']};"
          f"stage_coverage={trace_row['stage_coverage']};"
          f"tracing_off_ratio="
          f"{trace_row['tracing_off_throughput_ratio']};"

@@ -148,12 +148,17 @@ def summary(tr: Tracer, top_k: int = 5) -> Dict[str, Any]:
             "sim_duration": sp.dur, "t_finish": sp.t1,
             "critical": bool(a.get("critical", False)),
         })
+    # gauges report last level in counters; surface the observed max as
+    # `{name}_peak` so gauges that return to zero (pool shares after the
+    # final release) still carry signal in the rollup
+    counters = dict(tr.counters)
+    counters.update({f"{k}_peak": v for k, v in tr.gauge_peaks.items()})
     return {
         "per_stage_wall": per_stage,
         "step_wall_total": step_total,
         "stage_wall_total": stage_sum,
         "stage_coverage": (stage_sum / step_total) if step_total > 0 else None,
-        "counters": dict(tr.counters),
+        "counters": counters,
         "stragglers": stragglers,
         "span_count": len(tr.spans),
     }

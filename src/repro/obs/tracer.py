@@ -72,6 +72,7 @@ class Tracer:
         self.spans: List[Span] = []
         self.instants: List[Span] = []          # t1 == t0
         self.counters: Dict[str, float] = {}    # running totals
+        self.gauge_peaks: Dict[str, float] = {}  # max level per gauge
         self.counter_samples: List[Tuple[str, str, float, float]] = []
         self._seq = 0
 
@@ -147,10 +148,19 @@ class Tracer:
 
     def gauge(self, name: str, value: float, *,
               t: Optional[float] = None, track: str = "wall") -> None:
-        """Record an instantaneous level (queue depth, pool shares)."""
+        """Record an instantaneous level (queue depth, pool shares).
+
+        ``counters[name]`` holds the *last* level (the historical
+        semantics); ``gauge_peaks[name]`` tracks the max — the summary
+        surfaces it as ``{name}_peak`` so a gauge that naturally returns
+        to zero (pool shares after the final release) is still visible
+        in the rollup."""
         if not self.enabled:
             return
         self.counters[name] = float(value)
+        prev = self.gauge_peaks.get(name)
+        if prev is None or value > prev:
+            self.gauge_peaks[name] = float(value)
         tt = self.now() if t is None else float(t)
         if tt == tt and tt not in (float("inf"), float("-inf")):
             self.counter_samples.append((track, name, tt, float(value)))

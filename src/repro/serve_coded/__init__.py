@@ -18,8 +18,10 @@ architecture, the coding-scope table and the admission-policy table.
 from .bridge import (CODING_SCOPES, EXECUTION_MODES, CodedServingBridge,
                      ServeReport, default_pool)
 from .coded_head import CodedLMHead, HeadStep
-from .coded_linear import CodedLinear, LinearStep, PrefixPlan, shard_products
+from .coded_linear import (CodedLinear, LinearStep, PrefixPlan,
+                           prefix_plan_batch, shard_products)
 from .packing import PackedShards, PackedStage, ShardProblem
+from .plan_cache import StepPlan, StepPlanCache
 from .requests import ServeRequest, synthetic_requests
 from .trunk import HostTrunk, trunk_matmul_keys
 
@@ -27,7 +29,9 @@ __all__ = [
     "CodedServingBridge", "ServeReport", "default_pool", "CODING_SCOPES",
     "EXECUTION_MODES",
     "CodedLMHead", "HeadStep", "CodedLinear", "LinearStep", "PrefixPlan",
-    "shard_products", "PackedShards", "PackedStage", "ShardProblem",
+    "prefix_plan_batch", "shard_products",
+    "PackedShards", "PackedStage", "ShardProblem",
+    "StepPlan", "StepPlanCache",
     "HostTrunk", "trunk_matmul_keys",
     "ServeRequest", "synthetic_requests",
     "serve_policy_sweep", "print_policy_table", "run_coded_smoke",

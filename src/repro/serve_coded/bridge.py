@@ -77,8 +77,9 @@ from ..stream.queueing import (AdmissionConfig, SharePool, fair_demand_rows,
                                make_admission_policy, scale_shares)
 from ..stream.replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
 from .coded_head import CodedLMHead
-from .coded_linear import DECODE_ENGINE, CodedLinear
+from .coded_linear import DECODE_ENGINE, CodedLinear, prefix_plan_batch
 from .packing import PackedStage, ShardProblem
+from .plan_cache import StepPlan, StepPlanCache
 from .requests import ServeRequest
 from .trunk import HostTrunk, trunk_matmul_keys
 
@@ -86,6 +87,12 @@ __all__ = ["CodedServingBridge", "ServeReport", "default_pool",
            "CODING_SCOPES", "EXECUTION_MODES"]
 
 _ARRIVE, _CHURN, _STEP = "arrive", "churn", "step"
+
+
+def _scenario_ctx(sc) -> bytes:
+    """Step-plan-cache context: the bytes the closed-form loads (and hence
+    the shard splits and row assignment) depend on besides (m, k, b)."""
+    return sc.a.tobytes() + sc.u.tobytes() + sc.gamma.tobytes()
 
 CODING_SCOPES = ("head", "ffn", "trunk")
 EXECUTION_MODES = ("serial", "batched")
@@ -132,32 +139,44 @@ class _BarrierExecutor:
     (:class:`~repro.serve_coded.packing.PackedStage`).  Packs and decode
     plans are X-independent and cached, so every token of a multi-token
     dispatch reuses them.
+
+    With a *current* :class:`StepPlanCache` entry the whole structure is
+    reused across steps: the first execution for a plan row freezes its
+    prefix plans and packed stages into the entry, and every later step of
+    the same width replays them — zero planning/packing wall time at
+    steady state.  A stale entry (churn bumped the cache epoch after this
+    step dispatched) is ignored and the retimed barrier is planned fresh.
     """
 
     def __init__(self, linears, barrier, *, backend: str,
-                 device_products: bool = False):
+                 device_products: bool = False, entry=None, cache=None):
         self.linears = linears
         self.backend = backend
         self.device_products = bool(device_products)
         self.used_solve = False
         self.solve_backends: set = set()   # decode engines actually run
-        self.plans = {}
+        current = cache is not None and cache.is_current(entry)
+        if current and entry.plans is not None:
+            self.plans = entry.plans
+            self._stages = entry.stages
+            return
         tr = current_tracer()
         ctx = tr.span("plan:prefixes", cat="plan",
                       args={"tasks": len(barrier.tasks)}) \
             if tr is not None else contextlib.nullcontext()
         with ctx:
-            for task, order in zip(barrier.tasks,
-                                   barrier.delivery_orders()):
-                self.plans[task.name] = linears[task.name].prefix_plan(
-                    task.l_int, task.finish, task.completion, order=order,
-                    assign=task.assign)
-        self._stages = {}
+            # one stacked covering-selection pass over the whole barrier
+            self.plans = prefix_plan_batch(linears, barrier)
+        if current:
+            entry.plans = self.plans
+            self._stages = entry.stages
+        else:
+            self._stages = {}
 
-    def stage(self, keys) -> PackedStage:
+    def stage(self, keys):
         kt = tuple(keys)
-        stg = self._stages.get(kt)
-        if stg is None:
+        memo = self._stages.get(kt)
+        if memo is None:
             tr = current_tracer()
             ctx = tr.span("pack:stage", cat="pack",
                           args={"matmuls": len(kt)}) \
@@ -168,19 +187,22 @@ class _BarrierExecutor:
                                   rows=self.plans[k].rows,
                                   used_solve=self.plans[k].used_solve)
                      for k in kt], backend=self.backend)
-            self._stages[kt] = stg
-        return stg
+            # the solve flag is a pure function of the frozen plans —
+            # memoise it with the stage rather than re-deriving per step
+            memo = (stg, any(self.plans[k].used_solve for k in kt))
+            self._stages[kt] = memo
+        return memo
 
     def execute(self, items) -> Dict[str, np.ndarray]:
         """One stage: ``[(key, X), ...]`` sharing X → ``{key: out}``."""
         keys = [k for k, _ in items]
         assert all(X is items[0][1] for _, X in items), \
             "a stage's matmuls must share one right-hand operand"
-        stg = self.stage(keys)
+        stg, solve_flag = self.stage(keys)
         outs = stg.execute(
             items[0][1], device_products=self.device_products)
         self.solve_backends.add(stg.solve_backend)
-        self.used_solve |= any(self.plans[k].used_solve for k in keys)
+        self.used_solve |= solve_flag
         return outs
 
 
@@ -226,6 +248,10 @@ class _Step:
     # recorded by execute_step, logged by step_done
     task_solve: Dict[str, bool] = dataclasses.field(default_factory=dict)
     decode_backend: str = ""
+    # the step-plan cache entry this step dispatched from (None with the
+    # cache disabled); execution checks it is still current before
+    # trusting its frozen prefixes/stages
+    entry: Optional[StepPlan] = None
 
 
 class _MasterState:
@@ -254,6 +280,12 @@ class ServeReport:
     decode_backend: str = "numpy"        # effective decode-solve engine
     redispatches: int = 0                # in-flight steps re-timed off-plan
     sim_horizon_ms: float = 0.0          # last step/request completion
+    # step-plan cache traffic for this serve (all zero when disabled):
+    # steady state is hit-only — one miss per (plan row, width), plus one
+    # invalidation per churn/replan event
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    plan_cache_invalidations: int = 0
     # tracing (None unless the bridge was built with a recording Tracer):
     # per-stage wall seconds rolled up from the run's spans, and the path
     # the Chrome/Perfetto trace was written to (when serve(trace_path=...))
@@ -274,6 +306,12 @@ class ServeReport:
                 self.tokens_generated / max(self.wall_seconds, 1e-300),
             "decode_max_err": self.max_err,
             "argmax_match_rate": self.argmax_match_rate,
+            "plan_cache_hits": float(self.plan_cache_hits),
+            "plan_cache_misses": float(self.plan_cache_misses),
+            "plan_cache_invalidations":
+                float(self.plan_cache_invalidations),
+            "plan_cache_hit_rate": self.plan_cache_hits
+                / max(self.plan_cache_hits + self.plan_cache_misses, 1),
         })
         return out
 
@@ -328,6 +366,14 @@ class CodedServingBridge:
                cache counters) into.  ``None`` or a disabled tracer keeps
                every hot path on its uninstrumented branch — the serve
                loop then costs one predicate per entry point.
+    plan_cache: keep a persistent :class:`StepPlanCache` across steps
+               (and serves): shard splits, row assignment, covering
+               prefixes, packed stages and decode factorizations are
+               computed once per (plan row, width) and replayed while the
+               pool is unchanged.  Churn and planner re-solves invalidate
+               it.  MDS decode is exact for any covering prefix, so the
+               frozen structures change no decoded value; ``False`` runs
+               the historical re-plan-every-step path.
     """
 
     def __init__(self, profile: Optional[ClusterProfile] = None, *,
@@ -344,7 +390,8 @@ class CodedServingBridge:
                  backend: str = "numpy",
                  coded: bool = True,
                  verify: bool = True, seed: int = 0,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 plan_cache: bool = True):
         if coding_scope not in CODING_SCOPES:
             raise ValueError(f"unknown coding_scope {coding_scope!r}; "
                              f"expected one of {CODING_SCOPES}")
@@ -371,6 +418,7 @@ class CodedServingBridge:
         self.seed = int(seed)
         self.tracer = tracer if (tracer is not None and tracer.enabled) \
             else None
+        self._plan_cache = StepPlanCache() if plan_cache else None
         self._model = None
         self._max_len = 0
 
@@ -485,6 +533,21 @@ class CodedServingBridge:
             np.random.default_rng((self.seed, 0x5E4E)), self.sc.N + 1)
         scale = np.ones(self.sc.N + 1)
         sc_eff = self.sc
+        cache = self._plan_cache
+        if cache is not None:
+            # the cache persists across serves on this bridge; key every
+            # lookup on the current effective scenario so a previous
+            # serve's entries can only hit when they are still exact
+            cache.set_context(_scenario_ctx(sc_eff))
+            # a planner re-solve replaces the plan row under the frozen
+            # splits' feet — drop everything (first solve does not fire)
+            planner.subscribe(lambda: cache.invalidate("replan"))
+        cache0 = (cache.hits, cache.misses, cache.invalidations) \
+            if cache is not None else (0, 0, 0)
+        # per-task covering requirement (each coded matrix's own L) —
+        # fixed for the serve, shared by every dispatch's barrier
+        needs = np.array([self._linears[key].L
+                          for key in self._coded_keys], dtype=np.float64)
         recs: Dict[int, TaskRecord] = {}
         states = [None] * self.M
         for m in range(self.M):
@@ -631,36 +694,50 @@ class CodedServingBridge:
             if scaled is None:
                 return None
             k_row, b_row, _f = scaled
-            l_row, _ = scaled_row_loads(sc_eff, m, k_row, b_row)
-            if l_row.sum() < L - 1e-6:
-                return None
-            # all of the barrier's delays in one batched draw + transform
             keys = self._coded_keys
-            l_ints = np.stack(
-                [coded_row_shards(l_row, L) if self._linears[key].L == L
-                 else rescaled_row_shards(l_row, L, self._linears[key].L)
-                 for key in keys])
+            entry = cache.lookup(m, k_row, b_row) \
+                if cache is not None else None
+            if entry is None:
+                # miss: the splits and the expected-delay assignment are
+                # pure functions of (sc_eff, m, k_row, b_row) — compute
+                # once, freeze in the cache for every later step
+                l_row, _ = scaled_row_loads(sc_eff, m, k_row, b_row)
+                if l_row.sum() < L - 1e-6:
+                    return None
+                l_ints = np.stack(
+                    [coded_row_shards(l_row, L) if self._linears[key].L == L
+                     else rescaled_row_shards(l_row, L, self._linears[key].L)
+                     for key in keys])
+                # expected per-node delay (the Exp(1) draws at their mean):
+                # the systematic row ranges go to the statistically fastest
+                # nodes, so covering prefixes decode mostly by scatter — a
+                # dispatch-time decision, blind to the realized delays below
+                expect = bk.sample_delays(np.ones_like(l_ints, dtype=float),
+                                          np.ones_like(l_ints, dtype=float),
+                                          l_ints, k_row, b_row, sc_eff.a[m],
+                                          sc_eff.u[m], sc_eff.gamma[m])
+                entry = StepPlan(keys=keys, l_ints=l_ints, assign=expect,
+                                 epoch=cache.epoch if cache is not None
+                                 else 0)
+                if cache is not None:
+                    cache.store(m, k_row, b_row, entry)
+            l_ints = entry.l_ints
+            # all of the barrier's delays in one batched draw + transform
+            # (drawn hit or miss — the delay stream is cache-independent)
             e = exp.draw_n(len(keys))                   # (T, 2, N+1)
             d = bk.sample_delays(e[:, 0], e[:, 1], l_ints, k_row, b_row,
                                  sc_eff.a[m], sc_eff.u[m], sc_eff.gamma[m])
             finish = np.where(l_ints > 0, t + d, np.inf)
-            # expected per-node delay (the Exp(1) draws at their mean):
-            # the systematic row ranges go to the statistically fastest
-            # nodes, so covering prefixes decode mostly by scatter — a
-            # dispatch-time decision, blind to the realized delays above
-            expect = bk.sample_delays(np.ones_like(l_ints, dtype=float),
-                                      np.ones_like(l_ints, dtype=float),
-                                      l_ints, k_row, b_row, sc_eff.a[m],
-                                      sc_eff.u[m], sc_eff.gamma[m])
             tasks = [BarrierTask(name=key, l_int=l_ints[i],
                                  finish=finish[i],
-                                 need=float(self._linears[key].L),
-                                 assign=expect[i])
+                                 need=needs[i],
+                                 assign=entry.assign[i])
                      for i, key in enumerate(keys)]
-            barrier = StepBarrier(tasks)
+            barrier = StepBarrier(tasks, F=finish,
+                                  l=l_ints.astype(np.float64), need=needs)
             if not np.isfinite(barrier.completion):
                 return None
-            return k_row, b_row, barrier
+            return k_row, b_row, barrier, entry
 
         def plan_timing(m: int, t: float, relax: bool):
             """``make_timing`` under a dispatch-step span: plan lookup,
@@ -709,8 +786,25 @@ class CodedServingBridge:
             batched = self.execution == "batched"
             ex = _BarrierExecutor(self._linears, sp.barrier,
                                   backend=self.backend,
-                                  device_products=self.device_products) \
+                                  device_products=self.device_products,
+                                  entry=sp.entry, cache=self._plan_cache) \
                 if batched and self.coded else None
+            # serial engine: share the same frozen prefixes across steps —
+            # the first step per plan row plans the whole barrier in one
+            # stacked pass and later steps skip planning entirely, keeping
+            # the two engines decode-for-decode identical
+            frozen = None
+            if (not batched and self.coded and self._plan_cache is not None
+                    and self._plan_cache.is_current(sp.entry)):
+                if sp.entry.plans is None:
+                    tr = current_tracer()
+                    ctx = tr.span("plan:prefixes", cat="plan",
+                                  args={"tasks": len(sp.barrier.tasks)}) \
+                        if tr is not None else contextlib.nullcontext()
+                    with ctx:
+                        sp.entry.plans = prefix_plan_batch(
+                            self._linears, sp.barrier)
+                frozen = sp.entry.plans
 
             def verify_coded(key: str, out: np.ndarray, X: np.ndarray):
                 lin = self._linears[key]
@@ -732,7 +826,9 @@ class CodedServingBridge:
                 task = task_map[key]
                 if self.coded:
                     res = lin.step(X, task.l_int, task.finish,
-                                   task.completion, assign=task.assign)
+                                   task.completion, assign=task.assign,
+                                   plan=None if frozen is None
+                                   else frozen.get(key))
                     out = res.out
                     step_stats["used_solve"] |= res.used_solve
                     sp.task_solve[key] = bool(res.used_solve)
@@ -815,7 +911,7 @@ class CodedServingBridge:
             timing = plan_timing(m, t, relax)
             if timing is None:
                 return False
-            k_row, b_row, barrier = timing
+            k_row, b_row, barrier, entry = timing
             pool.acquire(k_row, b_row)
             sp = _Step(
                 k_row=k_row, b_row=b_row, barrier=barrier, t_start=t,
@@ -824,7 +920,7 @@ class CodedServingBridge:
                 rows_dispatched=barrier.rows_dispatched(),
                 rows_needed=float(sum(task.need for task in barrier.tasks)),
                 used_solve=False, max_err=0.0, argmax_ok=0,
-                planned_slots=frozenset(st.slots))
+                planned_slots=frozenset(st.slots), entry=entry)
             st.step = sp
             if self.execution == "serial":
                 execute_step(m, sp)
@@ -849,9 +945,10 @@ class CodedServingBridge:
             if timing is None:
                 sp.stalled = True
                 return False
-            k_row, b_row, barrier = timing
+            k_row, b_row, barrier, entry = timing
             pool.acquire(k_row, b_row)
             sp.k_row, sp.b_row, sp.barrier = k_row, b_row, barrier
+            sp.entry = entry
             sp.t_acquire = t
             sp.t_done = barrier.completion
             sp.rows_dispatched += barrier.rows_dispatched()
@@ -990,6 +1087,12 @@ class CodedServingBridge:
             elif ev.kind == "restore":
                 scale[ev.worker] = 1.0
             sc_eff = planner.effective_scenario(online(), scale)
+            if cache is not None:
+                # frozen splits/prefixes derive from the pre-churn pool;
+                # in-flight steps detect their entry went stale via the
+                # epoch bump and rebuild from their retimed barriers
+                cache.invalidate("churn")
+                cache.set_context(_scenario_ctx(sc_eff))
             planner.ensure_plan(online(), scale, event=True)
             # re-time in-flight steps' per-layer tasks (the engine's path)
             if ev.kind in ("leave", "degrade", "restore"):
@@ -1074,4 +1177,8 @@ class CodedServingBridge:
             redispatches=stats["redispatches"],
             sim_horizon_ms=max([metrics.t_end]
                                + [s["t_done"] for s in step_log]),
+            plan_cache_hits=cache.hits - cache0[0] if cache else 0,
+            plan_cache_misses=cache.misses - cache0[1] if cache else 0,
+            plan_cache_invalidations=cache.invalidations - cache0[2]
+            if cache else 0,
         )

@@ -55,7 +55,8 @@ from ..core import mds
 from ..obs import current_tracer
 from ..stream import backend as bk
 
-__all__ = ["CodedLinear", "LinearStep", "PrefixPlan", "shard_products"]
+__all__ = ["CodedLinear", "LinearStep", "PrefixPlan", "shard_products",
+           "prefix_plan_batch"]
 
 #: the decode solve engine each backend actually runs ("pallas" has encode
 #: and product kernels but no solve kernel — its decode runs the jitted
@@ -67,6 +68,81 @@ DECODE_ENGINE = {"numpy": "numpy", "jax": "jax", "pallas": "jax"}
 #: below this swap in extra delivered parity rows for the last systematic
 #: pins, bounding the inverse-norm tail of tiny Gaussian sub-blocks
 MIN_PARITY_BLOCK = 8
+
+
+def _assemble_prefix(L: int, workers: np.ndarray, starts: np.ndarray,
+                     stops_: np.ndarray):
+    """Systematic-first row selection within a fixed covering prefix.
+
+    ``workers``/``starts``/``stops_`` describe the delivered shards in
+    delivery order (node column, row-range start, row-range stop).  Pick
+    the received systematic rows (< L) first and fill the remainder with
+    the earliest-delivered parity rows, honouring the MIN_PARITY_BLOCK
+    conditioning floor.  The quota arithmetic is vectorised — the old
+    sequential per-worker cut/take loop is exactly
+    ``clip(quota − cumsum_excl(avail), 0, avail)`` — and only the final
+    ``np.arange`` row materialisation loops (short: one pass over the
+    prefix's workers).
+
+    Returns ``(rows, slices, used)`` as in :class:`PrefixPlan`.
+    """
+    sizes = stops_ - starts
+    c = np.clip(L - starts, 0, sizes)            # systematic part per shard
+    n_sys = int(c.sum())
+    par = sizes - c                              # parity rows available
+    # parity-fill budget: at least the shortfall; when a solve is needed
+    # at all, at least MIN_PARITY_BLOCK rows (a tiny Gaussian block has a
+    # fat inverse-norm tail that amplifies the float32 parity-encode error
+    # on the jax/pallas backends); never more than L rows total
+    budget = L - n_sys
+    if budget > 0:
+        budget = min(max(budget, MIN_PARITY_BLOCK), int(par.sum()), L)
+    sys_quota = L - budget
+    cuts = np.clip(sys_quota - (np.cumsum(c) - c), 0, c)
+    takes = np.clip(budget - (np.cumsum(par) - par), 0, par)
+    slices: List[np.ndarray] = []
+    used: List[int] = []
+    for w, a, ci, cut, take in zip(workers, starts, c, cuts, takes):
+        if cut + take == 0:
+            continue
+        part = np.arange(a, a + cut) if take == 0 else (
+            np.arange(a + ci, a + ci + take) if cut == 0 else
+            np.concatenate([np.arange(a, a + cut),
+                            np.arange(a + ci, a + ci + take)]))
+        slices.append(part)
+        used.append(int(w))
+    rows = np.concatenate(slices) if len(slices) > 1 else slices[0]
+    return rows, slices, np.asarray(used)
+
+
+def prefix_plan_batch(linears, barrier) -> dict:
+    """Covering prefixes for a whole step barrier in one stacked pass.
+
+    Replaces the per-matmul Python planning (~15 ``prefix_plan`` calls
+    per trunk step) with one batched selection:
+    :meth:`repro.stream.barrier.StepBarrier.covering_selections` computes
+    every task's delivered-shard prefix (orders, coverage, row-range
+    edges) as stacked array ops, and the per-task remainder is just the
+    vectorised quota assembly above.  Bit-identical to calling
+    ``prefix_plan`` per task — both run the same selection math and the
+    same :func:`_assemble_prefix`.
+
+    ``linears`` maps task name → :class:`CodedLinear`.  Returns
+    ``{task.name: PrefixPlan}``.
+    """
+    plans = {}
+    for task, (workers, starts, stops_) in zip(
+            barrier.tasks, barrier.covering_selections()):
+        lin = linears[task.name]
+        total = int(task.l_int.sum())
+        if total < lin.L:
+            raise ValueError(f"shards cover {total} < L={lin.L} rows")
+        lin.ensure_parity(total - lin.L)
+        rows, slices, used = _assemble_prefix(lin.L, workers, starts, stops_)
+        plans[task.name] = PrefixPlan(
+            rows=rows, slices=slices, used=used, total=total,
+            used_solve=bool((rows >= lin.L).any()))
+    return plans
 
 
 def shard_products(W_rows: np.ndarray, X: np.ndarray) -> np.ndarray:
@@ -146,6 +222,7 @@ class CodedLinear:
         self._n_enc = self.L
         self.parity_redraws = 0                   # conditioning-guard hits
         self._G_cache: Optional[np.ndarray] = None
+        self._dplan_memo = None                   # (rows bytes, DecodePlan)
         self._W_dev = None                        # f32 device copy of W
         self._enc_dev = None                      # f32 device [W; WR] mirror
         self._n_dev = 0
@@ -319,39 +396,9 @@ class CodedLinear:
         # shrinks to the overlap shortfall.
         starts = edges[picked]
         stops_ = starts + l_act[picked]
-        sys_sizes = np.minimum(stops_, self.L) - np.minimum(starts, self.L)
-        n_sys = int(sys_sizes.sum())
-        par_avail = int((stops_ - starts).sum()) - n_sys
-        # parity-fill budget: at least the shortfall; when a solve is
-        # needed at all, at least MIN_PARITY_BLOCK rows (a tiny Gaussian
-        # block has a fat inverse-norm tail that amplifies the float32
-        # parity-encode error on the jax/pallas backends — a handful of
-        # extra parity rows in place of the last-delivered systematic
-        # pins keeps the solve well-conditioned at negligible cost)
-        budget = self.L - n_sys
-        if budget > 0:
-            # never more than L rows total: small matrices (L < the block
-            # floor) cap at L parity rows, i.e. a full general solve
-            budget = min(max(budget, MIN_PARITY_BLOCK), par_avail, self.L)
-        sys_quota = self.L - budget
-        slices: List[np.ndarray] = []
-        used: List[int] = []
-        for w, a, b in zip(active[picked], starts, stops_):
-            c = min(max(int(self.L - a), 0), int(b - a))    # systematic part
-            cut = min(c, sys_quota)
-            sys_quota -= cut
-            take = min(int(b - a) - c, budget)              # parity fill
-            budget -= take
-            if cut + take:
-                part = np.arange(a, a + cut) if take == 0 else (
-                    np.arange(a + c, a + c + take) if cut == 0 else
-                    np.concatenate([np.arange(a, a + cut),
-                                    np.arange(a + c, a + c + take)]))
-                slices.append(part)
-                used.append(int(w))
-        rows = np.concatenate(slices) if len(slices) > 1 else slices[0]
-        return PrefixPlan(rows=rows, slices=slices,
-                          used=np.asarray(used), total=total,
+        rows, slices, used = _assemble_prefix(self.L, active[picked],
+                                              starts, stops_)
+        return PrefixPlan(rows=rows, slices=slices, used=used, total=total,
                           used_solve=bool((rows >= self.L).any()))
 
     # -- decode --------------------------------------------------------------
@@ -359,30 +406,41 @@ class CodedLinear:
     def decode_plan(self, rows: np.ndarray) -> bk.DecodePlan:
         """X-independent decode structure for one received-rows vector
         (the generator is systematic by construction — the identity-prefix
-        scan is skipped)."""
+        scan is skipped).  Memoised on the received-rows vector: at steady
+        state every step of a serve decodes the same frozen prefix, so the
+        factorization is computed once and replayed."""
+        key = rows.tobytes()
+        if self._dplan_memo is not None and self._dplan_memo[0] == key:
+            return self._dplan_memo[1]
         total = max(int(rows.max()) + 1, self.L)
-        return bk.plan_decode(self.generator(total), rows[None],
+        plan = bk.plan_decode(self.generator(total), rows[None],
                               identity_prefix=True)
+        self._dplan_memo = (key, plan)
+        return plan
 
     # -- one step (the serial reference engine) ------------------------------
 
     def step(self, X: np.ndarray, l_int: np.ndarray, finish: np.ndarray,
              t_complete: float,
-             assign: Optional[np.ndarray] = None) -> LinearStep:
+             assign: Optional[np.ndarray] = None,
+             plan: Optional[PrefixPlan] = None) -> LinearStep:
         """Execute one coded product for an activation batch, shard by
         shard — the serial reference the batched engine is bit-checked
         against.
 
         X: (B, D) input activations (float64); each row is one token/
         position of the step's batch.  See :meth:`prefix_plan` for the
-        timing arguments.
+        timing arguments.  ``plan`` supplies a pre-computed (possibly
+        cached) covering prefix; planning is skipped entirely then.
         """
         X = np.asarray(X, dtype=np.float64)
         tr = current_tracer()
-        ctx = tr.span(f"plan:{self.name}", cat="plan") \
-            if tr is not None else contextlib.nullcontext()
-        with ctx:
-            plan = self.prefix_plan(l_int, finish, t_complete, assign=assign)
+        if plan is None:
+            ctx = tr.span(f"plan:{self.name}", cat="plan") \
+                if tr is not None else contextlib.nullcontext()
+            with ctx:
+                plan = self.prefix_plan(l_int, finish, t_complete,
+                                        assign=assign)
         enc = self._enc[:self._n_enc]
         # the per-worker shard execution: each node's encoded rows × X
         ctx = tr.span(f"product:{self.name}", cat="kernel",

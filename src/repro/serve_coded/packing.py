@@ -183,7 +183,7 @@ class _DecodeGroup:
     """
 
     __slots__ = ("sel", "perm", "rows", "sys_pos", "par_pos", "sys_rows",
-                 "unk", "A", "Gk")
+                 "unk", "lu", "Gk")
 
     def __init__(self, sel, problems, rows, s):
         self.sel = sel                          # (gs,) indices into L-group
@@ -212,7 +212,7 @@ class _DecodeGroup:
             R = problems[sel[0]].linear.R
             pr = r[par_pos] - L
             self.Gk = R[pr[:, None], sys_rows[None, :]][None]
-            self.A = R[pr[:, None], unk[None, :]][None]
+            self.lu = bk.StackedLU(R[pr[:, None], unk[None, :]][None])
             return
         m_sys = rows < L
         self.sys_pos = np.nonzero(m_sys)[1].reshape(gs, s)
@@ -226,22 +226,42 @@ class _DecodeGroup:
             [problems[i].linear.R[(par_rows[j] - L)[:, None],
                                   self.sys_rows[j][None, :]]
              for j, i in enumerate(sel)])                   # (gs, L-s, s)
-        self.A = np.stack(
+        self.lu = bk.StackedLU(np.stack(
             [problems[i].linear.R[(par_rows[j] - L)[:, None],
                                   self.unk[j][None, :]]
-             for j, i in enumerate(sel)])                   # (gs, L-s, L-s)
+             for j, i in enumerate(sel)]))                  # (gs, L-s, L-s)
 
     def apply(self, yg: np.ndarray, z: np.ndarray, solve) -> None:
-        """Decode this group's slice of the stacked products into ``z``."""
+        """Decode this group's slice of the stacked products into ``z``.
+
+        ``solve=None`` runs the numpy path through the group's cached LU
+        factors (getrf once per frozen plan, getrs per step); a callable
+        (the jitted jax solve) gets the raw stacked systems."""
         if self.perm:
             z[self.sel[:, None], self.rows] = yg[self.sel]
+            return
+        if self.sel.size == 1:
+            # dominant serving case: 1D gathers + a 2D gemm gather the
+            # same values as the stacked path below (one dgemm either
+            # way), minus the broadcast-index overhead per call
+            y0 = yg[self.sel[0]]
+            sys_y = y0[self.sys_pos[0]]
+            par_y = y0[self.par_pos[0]]
+            rhs = (par_y - self.Gk[0] @ sys_y)[None]
+            sol = self.lu.solve(rhs) if solve is None \
+                else solve(self.lu.A, rhs)
+            z0 = z[self.sel[0]]
+            z0[self.sys_rows[0]] = sys_y                     # exact pins
+            z0[self.unk[0]] = sol[0]
             return
         sel2 = self.sel[:, None]
         ys = yg[self.sel]
         g_ar = np.arange(self.sel.size)[:, None]
         sys_y = ys[g_ar, self.sys_pos]
         par_y = ys[g_ar, self.par_pos]
-        sol = solve(self.A, par_y - self.Gk @ sys_y)
+        rhs = par_y - self.Gk @ sys_y
+        sol = self.lu.solve(rhs) if solve is None \
+            else solve(self.lu.A, rhs)
         z[sel2, self.sys_rows] = sys_y                       # exact pins
         z[sel2, self.unk] = sol
 
@@ -320,8 +340,7 @@ class PackedStage:
                 Y = shard_products(self.pack.W_packed,
                                    np.asarray(X, dtype=np.float64))
         use_jax = self.solve_backend == "jax"
-        solve = ((lambda A, b: np.asarray(bk._solve_jit()(A, b)))
-                 if use_jax else bk.solve_stacked)
+        solve = bk.solve_jax if use_jax else None
         out: Dict[str, np.ndarray] = {}
         B = Y.shape[-1]
         off = self.pack.offsets

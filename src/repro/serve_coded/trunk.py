@@ -232,9 +232,14 @@ class HostTrunk:
             caches["v"][i][rows[:, None], positions] = v
             K = caches["k"][i][rows]                      # (R, S, Hkv, Dh)
             V = caches["v"][i][rows]
-            Kf = np.repeat(K, G, axis=2)                  # (R, S, Hq, Dh)
-            Vf = np.repeat(V, G, axis=2)
-            s = np.einsum("rthd,rshd->rhts", q, Kf) * scale
+            S = K.shape[1]
+            # grouped-query attention without materialising the repeated
+            # (R, S, Hq, Dh) K/V: head h reads kv-head h//G, so contracting
+            # the (Hkv, G) split against K directly sums the same scalars
+            # in the same order as the np.repeat formulation
+            qg = q.reshape(R, T, Hkv, G, Dh)
+            s = np.einsum("rtkgd,rskd->rkgts", qg,
+                          K).reshape(R, Hq, T, S) * scale
             kp = np.arange(K.shape[1])
             valid = kp[None, None, :] <= positions[:, :, None]   # causal
             if spec.sliding_window is not None:
@@ -244,7 +249,9 @@ class HostTrunk:
             s -= s.max(axis=-1, keepdims=True)
             p = np.exp(s)
             p /= p.sum(axis=-1, keepdims=True)
-            o = np.einsum("rhts,rshd->rthd", p, Vf)
+            o = np.einsum("rkgts,rskd->rtkgd",
+                          p.reshape(R, Hkv, G, T, S),
+                          V).reshape(R, T, Hq, Dh)
             x = x + mmg([(f"blk{i}.wo", o.reshape(R * T, Hq * Dh))
                          ])[f"blk{i}.wo"].reshape(R, T, d)
 

@@ -62,6 +62,8 @@ __all__ = [
     "plan_decode",
     "DecodePlan",
     "solve_stacked",
+    "solve_jax",
+    "StackedLU",
     "ExponentialBlock",
 ]
 
@@ -469,11 +471,99 @@ def _solve_jit():
     return jax.jit(lambda Gs, y: jnp.linalg.solve(Gs, y))
 
 
+@functools.lru_cache(maxsize=1)
+def _solve_jit_x64():
+    """Jitted float64 stacked solve, or None when x64 jit is unavailable.
+
+    Probed once: under ``jax.experimental.enable_x64`` the jit traces
+    float64 avals, so the decode solve keeps full precision on the jax
+    path instead of silently truncating to float32.  Builds where the
+    context manager is missing or the output still canonicalises to f32
+    fall back to the f32 jit (the historical behaviour).
+    """
+    import jax
+    import jax.numpy as jnp
+    try:
+        fn = jax.jit(lambda Gs, y: jnp.linalg.solve(Gs, y))
+        with jax.experimental.enable_x64():
+            out = fn(jnp.eye(2, dtype=jnp.float64)[None],
+                     jnp.ones((1, 2, 1), jnp.float64))
+            if out.dtype != jnp.float64:
+                return None
+        return fn
+    except Exception:  # pragma: no cover - older jax without enable_x64
+        return None
+
+
+def solve_jax(A: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Stacked solve on the jitted jax path, float64 when the build allows.
+
+    The call must re-enter ``enable_x64`` every time: jit avals
+    canonicalise by the flag's state at trace *and* call time.
+    """
+    fn = _solve_jit_x64()
+    if fn is None:
+        return np.asarray(_solve_jit()(A, b))
+    import jax
+    with jax.experimental.enable_x64():
+        return np.asarray(fn(A, b))
+
+
 try:                                   # the gufunc behind np.linalg.solve
     from numpy.linalg import _umath_linalg as _gu
     _gu.solve(np.eye(2)[None], np.ones((1, 2, 1)), signature="dd->d")
 except Exception:  # pragma: no cover - exotic numpy builds
     _gu = None
+
+
+try:
+    from scipy.linalg import lu_factor as _lu_factor, lu_solve as _lu_solve
+    from scipy.linalg.lapack import dgetrs as _dgetrs
+except Exception:  # pragma: no cover - no-scipy builds
+    _lu_factor = _lu_solve = _dgetrs = None
+
+
+class StackedLU:
+    """Lazily cached LU factorization of stacked (g, n, n) systems.
+
+    ``np.linalg.solve`` (LAPACK ``gesv``) re-factorizes on every call.  A
+    *frozen* decode plan solves the same parity sub-blocks for every step
+    of a serve with only the right-hand side changing, so the ``getrf``
+    is paid once and each step replays the O(n²) ``getrs``.  Solutions
+    are bit-identical to :func:`solve_stacked` — ``gesv`` *is*
+    ``getrf`` + ``getrs`` — and both decode engines route through this,
+    so they cannot drift from each other.  Falls back to the one-shot
+    solve when scipy is unavailable.
+    """
+
+    __slots__ = ("A", "_fac", "_checked")
+
+    def __init__(self, A: np.ndarray):
+        self.A = A
+        self._fac = None
+        self._checked = False
+
+    def solve(self, b: np.ndarray) -> np.ndarray:
+        if _lu_factor is None:
+            return solve_stacked(self.A, b)
+        if self._fac is None:
+            self._fac = [_lu_factor(a, check_finite=False) for a in self.A]
+        # raw getrs: same triangular sweeps as lu_solve minus its per-call
+        # argument validation (thousands of tiny serving solves per run)
+        if len(self._fac) == 1:
+            lu, piv = self._fac[0]
+            out = _dgetrs(lu, piv, b[0])[0][None]
+        else:
+            out = np.empty(self.A.shape[:1] + b.shape[1:])
+            for i, (lu, piv) in enumerate(self._fac):
+                out[i] = _dgetrs(lu, piv, b[i])[0]
+        # singularity is a property of the frozen matrices, not the RHS —
+        # one finiteness pass on the first solve is enough
+        if not self._checked:
+            if not np.isfinite(out).all():
+                raise np.linalg.LinAlgError("Singular matrix")
+            self._checked = True
+        return out
 
 
 def solve_stacked(A: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -524,16 +614,20 @@ class _MixedGroup:
     """One mixed-row substitution group of a :class:`DecodePlan`: every
     task that received exactly ``s`` systematic rows (0 < s < L)."""
 
-    __slots__ = ("grp", "sys_rows", "unk", "A", "Gk", "sys_pos", "par_pos")
+    __slots__ = ("grp", "sys_rows", "unk", "lu", "Gk", "sys_pos", "par_pos")
 
     def __init__(self, grp, sys_rows, unk, A, Gk, sys_pos, par_pos):
         self.grp = grp                # (g,) task indices in the batch
         self.sys_rows = sys_rows      # (g, s) pinned coordinate ids
         self.unk = unk                # (g, L-s) coordinates to solve for
-        self.A = A                    # (g, L-s, L-s) parity sub-blocks
+        self.lu = StackedLU(A)        # (g, L-s, L-s) parity sub-blocks
         self.Gk = Gk                  # (g, L-s, s) known-coordinate columns
         self.sys_pos = sys_pos        # (g, s) receive positions of sys rows
         self.par_pos = par_pos        # (g, L-s) receive positions of parity
+
+    @property
+    def A(self) -> np.ndarray:
+        return self.lu.A
 
 
 class DecodePlan:
@@ -551,7 +645,7 @@ class DecodePlan:
     """
 
     __slots__ = ("B", "L", "fast_idx", "fast_rows", "full_idx", "full_G",
-                 "mixed_groups")
+                 "full_lu", "mixed_groups")
 
     def __init__(self, B: int, L: int, fast_idx, fast_rows, full_idx,
                  full_G, mixed_groups):
@@ -561,6 +655,7 @@ class DecodePlan:
         self.fast_rows = fast_rows        # (f, L) their received row ids
         self.full_idx = full_idx          # (n,) tasks needing the full solve
         self.full_G = full_G              # (n, L, L) gathered generators
+        self.full_lu = StackedLU(full_G)  # factor cached across applies
         # list of (grp_idx, sys_rows, unk, A, Gk) per distinct s count
         self.mixed_groups = mixed_groups
 
@@ -576,23 +671,27 @@ class DecodePlan:
             y = y[..., None]
         out = np.empty((self.B, self.L, y.shape[-1]))
 
-        def solve(A: np.ndarray, b: np.ndarray) -> np.ndarray:
-            if _use_jax(backend):
-                return np.asarray(_solve_jit()(A, b))
-            return solve_stacked(A, b)
+        use_jax = _use_jax(backend)
+
+        def solve(lu: StackedLU, b: np.ndarray) -> np.ndarray:
+            # jax path: the jitted batched solve; numpy path: the cached
+            # getrf + per-step getrs (bit-identical to gesv)
+            if use_jax:
+                return solve_jax(lu.A, b)
+            return lu.solve(b)
 
         if self.fast_idx.size:
             # permutation decode: out[b, rows[b, i]] = y[b, i]
             out[self.fast_idx[:, None], self.fast_rows] = y[self.fast_idx]
         if self.full_idx.size:
-            out[self.full_idx] = solve(self.full_G, y[self.full_idx])
+            out[self.full_idx] = solve(self.full_lu, y[self.full_idx])
         for mg in self.mixed_groups:
             # receive-order partitions were frozen at plan time as position
             # index arrays; partition y the same row-major way
             yg = y[mg.grp]
             sys_y = np.take_along_axis(yg, mg.sys_pos[:, :, None], axis=1)
             par_y = np.take_along_axis(yg, mg.par_pos[:, :, None], axis=1)
-            sol = solve(mg.A, par_y - mg.Gk @ sys_y)
+            sol = solve(mg.lu, par_y - mg.Gk @ sys_y)
             out[mg.grp[:, None], mg.sys_rows] = sys_y        # exact pins
             out[mg.grp[:, None], mg.unk] = sol
         if tr is not None:

@@ -342,6 +342,11 @@ class StreamingExecutor:
         # re-dispatches and speculative twins triggered below sample their
         # delays from it
         self._sc_eff = self.planner.effective_scenario(self.online, self.scale)
+        # pool membership/speed changed: consumers holding plan-derived
+        # state (the serving bridge's step-plan cache subscribes through
+        # the planner) must drop it even when the replan policy decides
+        # the drift is too small to re-solve
+        self.planner.notify_pool_change()
         if ev.kind in ("leave", "degrade", "restore"):
             for fl in self._attempts():
                 if self._alive(fl) and churn_finish_update(

@@ -107,6 +107,25 @@ class OnlinePlanner:
         self._key: Optional[bytes] = None
         self._capacity_at_plan: Optional[np.ndarray] = None
         self.replans = 0
+        self._subscribers: list = []
+
+    # -- invalidation hooks --------------------------------------------------
+
+    def subscribe(self, fn) -> None:
+        """Register a callback fired whenever the active plan is *replaced*
+        (a re-solve while a previous plan existed).  Consumers holding
+        plan-derived state — the serving bridge's step-plan cache — drop it
+        here instead of polling the row for changes.  The first solve of a
+        planner's life does not fire: there was no prior plan to have
+        derived state from."""
+        self._subscribers.append(fn)
+
+    def notify_pool_change(self) -> None:
+        """Explicitly fire the subscribers (pool membership changed in a
+        way the next ``ensure_plan`` may absorb without re-solving, e.g. a
+        drift below threshold)."""
+        for fn in self._subscribers:
+            fn()
 
     # -- pool state → effective scenario ------------------------------------
 
@@ -166,6 +185,7 @@ class OnlinePlanner:
                     self._capacity_at_plan, 1e-300) - 1.0))
                 solve = drift > self.replan.drift_threshold
         if solve:
+            had_plan = self._plan is not None
             tr = current_tracer()
             if tr is None:
                 self._plan = self._solve(online, scale)
@@ -181,6 +201,9 @@ class OnlinePlanner:
             self._key = key
             self._capacity_at_plan = self.capacity(online, scale)
             self.replans += 1
+            if had_plan:
+                for fn in self._subscribers:
+                    fn()
         return self._plan
 
     # -- the restricted static solve ----------------------------------------

@@ -148,13 +148,18 @@ def test_bench_serve_has_per_scope_execution_rows_trunk_within_2x_of_head():
     trunk = record["scopes"]["trunk"]["batched"]["tokens_per_sim_second"]
     assert trunk >= head / 2.0, (trunk, head)
     assert record["trunk_throughput_vs_head"] >= 0.5
-    # the tentpole's wall-clock story: the batched engine must not lose
-    # to the serial reference, and the committed trunk wall throughput
-    # must hold the achieved fraction of the head scope (0.643 recorded;
-    # 0.8 is the open ROADMAP target)
-    assert record["trunk_wall_vs_head"] >= 0.6
+    # the wall-clock story: the batched engine must not lose to the
+    # serial reference, and with the step-plan cache + cached LU decode
+    # the fully-coded trunk must not lose to the head-only scope either
+    # (1.08 recorded — planning is amortised away at steady state)
+    assert record["trunk_wall_vs_head"] >= 0.9
     for scope in CODING_SCOPES:
         assert record["batched_wall_speedup"][scope] >= 1.0, scope
+    trace = record["trace"]
+    assert trace["plan_cache_hit_rate"] >= 0.9
+    assert trace["counters"]["plan_cache_hits"] > 0
+    assert trace["counters"]["pool_k_used_peak"] > 0
+    assert trace["trace_path"]                   # never null: always written
 
 
 # ---------------------------------------------------------------------------
