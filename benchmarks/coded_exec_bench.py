@@ -23,7 +23,8 @@ from repro.core import (Scenario, iterated_greedy, plan_from_assignment,
                         small_scale_scenario)
 from repro.runtime import CodedExecutor
 from repro.runtime.coded_grads import coded_grad_aggregate, encode_grad_shards
-from repro.stream import StreamingExecutor, WorkerEvent, poisson_sources
+from repro.stream import (BackendConfig, StreamConfig, StreamingExecutor,
+                          WorkerEvent, poisson_sources)
 
 from .common import emit, timed
 
@@ -114,8 +115,10 @@ def run_stream(seed: int = 0, n_tasks: int = 1000,
         churn = [WorkerEvent(2000.0, 2, "degrade", 3.0),
                  WorkerEvent(5000.0, 5, "leave"),
                  WorkerEvent(9000.0, 5, "join")]
-        ex = StreamingExecutor(sc, srcs, policy="fractional", churn=churn,
-                               numerics=numerics, rng=seed, backend=backend)
+        cfg = StreamConfig(
+            policy="fractional", rng=seed,
+            backend=BackendConfig(numerics=numerics, backend=backend))
+        ex = StreamingExecutor(sc, srcs, config=cfg, churn=churn)
         t0 = time.perf_counter()
         ms = ex.run(max_tasks=n_tasks)
         return ms, time.perf_counter() - t0
@@ -161,6 +164,15 @@ def run_stream(seed: int = 0, n_tasks: int = 1000,
         "tasks_completed": int(s["tasks_completed"]),
     }
     path = json_path or os.environ.get("REPRO_BENCH_JSON", "BENCH_stream.json")
+    # BENCH_stream.json is shared with stream_fleet_bench: carry its
+    # "fleet" section over instead of clobbering it
+    try:
+        with open(path) as f:
+            fleet = json.load(f).get("fleet")
+    except (OSError, ValueError):
+        fleet = None
+    if fleet is not None:
+        record["fleet"] = fleet
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")

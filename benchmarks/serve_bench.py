@@ -45,7 +45,7 @@ import os
 from repro.serve_coded import (CODING_SCOPES, EXECUTION_MODES,
                                CodedServingBridge, serve_policy_sweep,
                                synthetic_requests)
-from repro.stream import AdmissionConfig, WorkerEvent
+from repro.stream import AdmissionConfig, StreamConfig, WorkerEvent
 
 from .common import emit
 
@@ -82,7 +82,8 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
                     json_path: str | None = None) -> dict:
     churn = _default_churn()
     per_policy = {}
-    bridge = CodedServingBridge(masters=masters, backend=backend, seed=seed,
+    bridge = CodedServingBridge(masters=masters, backend=backend,
+                                config=StreamConfig(rng=seed),
                                 slots_per_master=slots,
                                 steps_per_dispatch=steps_per_dispatch)
     bridge._setup_model(prompt_len + gen_len + 8)
@@ -109,10 +110,11 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
     timers = {}
     for scope, execution in cells:
         vbridge = CodedServingBridge(
-            masters=masters, backend=backend, seed=seed,
+            masters=masters, backend=backend,
+            config=StreamConfig(admission=AdmissionConfig(policy="edf"),
+                                rng=seed),
             slots_per_master=slots, coding_scope=scope,
-            steps_per_dispatch=steps_per_dispatch, execution=execution,
-            admission=AdmissionConfig(policy="edf"))
+            steps_per_dispatch=steps_per_dispatch, execution=execution)
         vbridge._setup_model(prompt_len + gen_len + 8)
         vrep = vbridge.serve(reqs, churn=churn)
         assert vrep.decode_ok, (scope, execution, vrep.max_err)
@@ -126,11 +128,12 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
             int(vrep.steps[0]["n_tasks"]) if vrep.steps else 0
         per_scope.setdefault(scope, {})[execution] = row
         tbridge = CodedServingBridge(
-            masters=masters, backend=backend, seed=seed,
+            masters=masters, backend=backend,
+            config=StreamConfig(admission=AdmissionConfig(policy="edf"),
+                                rng=seed),
             slots_per_master=slots, coding_scope=scope,
             steps_per_dispatch=steps_per_dispatch, execution=execution,
-            verify=False,
-            admission=AdmissionConfig(policy="edf"))
+            verify=False)
         tbridge._setup_model(prompt_len + gen_len + 8)
         trep = tbridge.serve(reqs, churn=churn)       # warm the engine
         assert trep.tokens == vrep.tokens    # engines + verify agree

@@ -12,8 +12,8 @@ as the pool churns.
 import numpy as np
 
 from repro.sim.cluster import ClusterProfile, ec2_cluster, tpu_pod_cluster
-from repro.stream import (PoissonProcess, ReplanPolicy, StreamingExecutor,
-                          WorkerEvent)
+from repro.stream import (BackendConfig, PoissonProcess, ReplanPolicy,
+                          StreamConfig, StreamingExecutor, WorkerEvent)
 
 
 def mixed_pool() -> ClusterProfile:
@@ -45,11 +45,12 @@ def main():
           f"{'queue':>8} {'waste':>7} {'replans':>7}")
     for policy in ("dedicated", "fractional", "uncoded"):
         srcs = [PoissonProcess(m, rate=0.004, seed=2) for m in range(sc.M)]
-        ex = StreamingExecutor(
-            sc, srcs, policy=policy, churn=churn,
-            replan=ReplanPolicy(mode="drift", drift_threshold=0.1,
+        cfg = StreamConfig(
+            policy=policy,
+            replan=ReplanPolicy(mode="incremental",
                                 use_sca=(policy != "uncoded")),
-            numerics="verify", rng=0)
+            backend=BackendConfig(numerics="verify"), rng=0)
+        ex = StreamingExecutor(sc, srcs, config=cfg, churn=churn)
         s = ex.run(max_tasks=150).summary()
         assert s.get("decode_ok_rate", 1.0) == 1.0, "decode verification failed"
         print(f"{policy:<12} {s['sojourn_p50']:8.1f} {s['sojourn_p95']:8.1f} "

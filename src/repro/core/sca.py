@@ -35,7 +35,8 @@ from . import delays
 from .allocation import markov_loads
 from .problem import Plan, Scenario, theta_dedicated, theta_fractional
 
-__all__ = ["sca_enhance_master", "sca_enhance_plan", "feasible_deadline"]
+__all__ = ["sca_enhance_master", "sca_enhance_plan", "feasible_deadline",
+           "kkt_residual"]
 
 _GOLD = 0.5 * (3.0 - np.sqrt(5.0))  # 0.381966...
 
@@ -253,6 +254,70 @@ def feasible_deadline(sc: Scenario, m: int, k: np.ndarray, b: np.ndarray,
         else:
             lo = mid
     return hi
+
+
+def kkt_residual(sc: Scenario, k: np.ndarray, b: np.ndarray,
+                 l: np.ndarray, t: np.ndarray) -> float:
+    """First-order (KKT) optimality residual of a fractional plan.
+
+    Two stationarity systems govern the planning stack, and the residual is
+    the larger normalised violation of the two:
+
+    * **loads** (P3/P4, Theorems 1 & 3): at fixed shares the Markov-bound
+      optimum has ``2 l_n θ_n = t`` on every active node and meets the
+      recovery bound ``Σ_n l_n (1 - l_n θ_n / t) = L`` with equality.
+    * **shares** (P4', Algorithm 4): no fractional transfer of a worker's
+      shares to the minimum-value master can improve ``min_m V_m`` — the
+      fractional-greedy stopping rule.  The residual term is the best
+      achievable normalised improvement from a single full transfer,
+      capped by the value headroom of the donating master (transferring
+      more than half the V gap would overshoot the min).
+
+    A freshly solved plan scores near zero on both.  The incremental
+    repairer (``stream.replan.OnlinePlanner``) records this residual at
+    every full solve and falls back to a full re-solve whenever a repaired
+    plan's residual exceeds that baseline by ``ReplanPolicy.repair_tol`` —
+    an *anchored* criterion: successive repairs may drift, but only until
+    the accumulated first-order error crosses the tolerance.
+
+    Vectorised O(M·N); never calls the exact-CDF oracle.
+    """
+    th = theta_fractional(sc, k, b)
+    l = np.asarray(l, dtype=np.float64)
+    tt = np.maximum(np.asarray(t, dtype=np.float64), 1e-300)[:, None]
+    fin = np.isfinite(th)
+    th0 = np.where(fin, th, 0.0)
+    active = (l > 0) & fin
+
+    # Load-level stationarity: |2 l θ / t - 1| on active nodes.
+    stat = np.where(active, np.abs(2.0 * l * th0 / tt - 1.0), 0.0)
+    r_load = float(stat.max()) if stat.size else 0.0
+
+    # Recovery-bound tightness (Markov form): Σ l (1 - lθ/t) = L.
+    recv = (l * np.maximum(1.0 - l * th0 / tt, 0.0) * fin).sum(axis=1)
+    r_cover = float(np.max(np.abs(recv - sc.L) / np.maximum(sc.L, 1e-300)))
+
+    # Share-level stationarity: best single-transfer gain toward min-V.
+    r_share = 0.0
+    W = th.shape[1]
+    if sc.M >= 2 and W > 1:
+        inv = np.where(fin, 1.0 / np.where(fin, th, 1.0), 0.0)
+        V = 0.25 * inv.sum(axis=1) / np.maximum(sc.L, 1e-300)
+        m2 = int(np.argmin(V))
+        kk, bb = k[:, 1:], b[:, 1:]
+        held = (kk > 0) & (bb > 0)
+        th_p = np.where(
+            held,
+            1.0 / np.where(held, bb * sc.gamma[m2, 1:][None, :], 1.0)
+            + 1.0 / np.where(held, kk * sc.u[m2, 1:][None, :], 1.0)
+            + sc.a[m2, 1:][None, :] / np.where(held, kk, 1.0),
+            np.inf)
+        gain = 0.25 / (th_p * np.maximum(sc.L[m2], 1e-300))  # 0 where inf
+        headroom = np.maximum(V[:, None] - V[m2], 0.0)
+        gain = np.minimum(gain, 0.5 * headroom)
+        gain[m2, :] = 0.0
+        r_share = float(gain.max() / np.maximum(V[m2], 1e-300))
+    return max(r_load, r_cover, r_share)
 
 
 def sca_enhance_plan(sc: Scenario, plan: Plan, *, alpha: float = 0.995,

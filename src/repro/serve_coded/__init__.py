@@ -17,9 +17,8 @@ architecture, the coding-scope table and the admission-policy table.
 """
 from .bridge import (CODING_SCOPES, EXECUTION_MODES, CodedServingBridge,
                      ServeReport, default_pool)
-from .coded_head import CodedLMHead, HeadStep
-from .coded_linear import (CodedLinear, LinearStep, PrefixPlan,
-                           prefix_plan_batch, shard_products)
+from .coded_linear import (CodedLinear, CodedLMHead, HeadStep, LinearStep,
+                           PrefixPlan, prefix_plan_batch, shard_products)
 from .packing import PackedShards, PackedStage, ShardProblem
 from .plan_cache import StepPlan, StepPlanCache
 from .requests import ServeRequest, synthetic_requests
@@ -118,8 +117,11 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
         tracer = Tracer(meta={"entry": "run_coded_smoke", "arch": arch,
                               "scope": coding_scope, "backend": backend,
                               "execution": execution})
+    from ..stream import AdmissionConfig, StreamConfig
     bridge = CodedServingBridge(
-        masters=masters, arch=arch, smoke=smoke, backend=backend, seed=seed,
+        masters=masters, arch=arch, smoke=smoke, backend=backend,
+        config=StreamConfig(admission=AdmissionConfig(policy="edf"),
+                            rng=seed),
         slots_per_master=slots_per_master, coding_scope=coding_scope,
         steps_per_dispatch=steps_per_dispatch, execution=execution,
         tracer=tracer)

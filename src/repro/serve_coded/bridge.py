@@ -75,8 +75,9 @@ from ..stream.events import WorkerEvent
 from ..stream.metrics import StreamMetrics, TaskRecord
 from ..stream.queueing import (AdmissionConfig, SharePool, fair_demand_rows,
                                make_admission_policy, scale_shares)
+from ..stream.config import StreamConfig
 from ..stream.replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
-from .coded_head import CodedLMHead
+from .coded_linear import CodedLMHead
 from .coded_linear import DECODE_ENGINE, CodedLinear, prefix_plan_batch
 from .packing import PackedStage, ShardProblem
 from .plan_cache import StepPlan, StepPlanCache
@@ -327,6 +328,13 @@ class CodedServingBridge:
                own height).
     masters:   number of tenants (plan rows); requests carry a master id.
     arch/seed: model selection (smoke-sized) and init seed.
+    config:    a stream :class:`~repro.stream.config.StreamConfig` — the
+               same unified surface ``StreamingExecutor`` takes.  Supplies
+               ``admission``, ``plan_policy`` (its ``policy``), ``replan``
+               and the ``seed`` (its ``rng``) in one object; mutually
+               exclusive with passing those individually.  (The
+               ``BackendConfig`` half does not apply here: the bridge's
+               numerics are governed by ``backend``/``verify`` below.)
     admission: stream :class:`AdmissionConfig` — ``policy`` picks the
                waiting-request ordering, ``min_fraction``/``max_queue`` the
                scaling/backpressure rules.
@@ -379,6 +387,7 @@ class CodedServingBridge:
     def __init__(self, profile: Optional[ClusterProfile] = None, *,
                  masters: int = 2, arch: str = "llama3.2-1b",
                  smoke: bool = True,
+                 config: Optional[StreamConfig] = None,
                  admission: Optional[AdmissionConfig] = None,
                  plan_policy: str = "fractional",
                  replan: Optional[ReplanPolicy] = None,
@@ -400,6 +409,16 @@ class CodedServingBridge:
                              f"expected one of {EXECUTION_MODES}")
         if steps_per_dispatch < 1:
             raise ValueError("steps_per_dispatch must be >= 1")
+        if config is not None:
+            if (admission is not None or replan is not None
+                    or plan_policy != "fractional"):
+                raise TypeError("pass either config=StreamConfig(...) or "
+                                "the per-feature admission/plan_policy/"
+                                "replan kwargs, not both")
+            admission = config.admission
+            plan_policy = config.policy
+            replan = config.replan
+            seed = config.rng
         self.profile = profile or default_pool(seed=seed)
         self.M = int(masters)
         self.arch = arch

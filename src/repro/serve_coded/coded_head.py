@@ -1,35 +1,19 @@
-"""The MDS-coded output head — now a named :class:`CodedLinear`.
+"""Deprecated shim — ``CodedLMHead``/``HeadStep`` live in
+:mod:`repro.serve_coded.coded_linear` (the head is just the
+``CodedLinear`` named ``"head"``).
 
-Historically the bridge coded only the output-head matmul and this module
-held the whole implementation; the per-layer generalisation lives in
-:mod:`repro.serve_coded.coded_linear` (``coding_scope`` in the bridge picks
-how much of the trunk rides the same machinery).  ``CodedLMHead`` remains
-the public name for the head layer: a ``CodedLinear`` whose W is
-``launch.serve.head_matrix`` (L = padded vocab) and whose step result
-exposes the decoded product as ``.logits``.
+Import from ``repro.serve_coded`` (or ``.coded_linear``) instead; this
+module is kept for one release and will be removed.
 """
 from __future__ import annotations
 
-import numpy as np
+import warnings
 
-from .coded_linear import CodedLinear, LinearStep
+from .coded_linear import CodedLMHead, HeadStep  # noqa: F401
 
 __all__ = ["CodedLMHead", "HeadStep"]
 
-#: Result of one coded head execution (``.logits`` aliases ``.out``).
-HeadStep = LinearStep
-
-
-class CodedLMHead(CodedLinear):
-    """Systematic-MDS-encoded output head, executed shard-by-shard.
-
-    W: (L, D) float weight matrix (``launch.serve.head_matrix``).
-    seed: parity-generator seed (one head = one generator stream).
-    backend: "numpy" | "jax" | "pallas" for the parity encode + decode
-    solve.
-    """
-
-    def __init__(self, W: np.ndarray, *, seed: int = 0,
-                 backend: str = "numpy", parity_chunk: int = 256):
-        super().__init__(W, name="head", seed=seed, backend=backend,
-                         parity_chunk=parity_chunk)
+warnings.warn(
+    "repro.serve_coded.coded_head is deprecated; import CodedLMHead / "
+    "HeadStep from repro.serve_coded (they live in coded_linear now)",
+    DeprecationWarning, stacklevel=2)

@@ -55,8 +55,8 @@ from ..core import mds
 from ..obs import current_tracer
 from ..stream import backend as bk
 
-__all__ = ["CodedLinear", "LinearStep", "PrefixPlan", "shard_products",
-           "prefix_plan_batch"]
+__all__ = ["CodedLinear", "CodedLMHead", "LinearStep", "HeadStep",
+           "PrefixPlan", "shard_products", "prefix_plan_batch"]
 
 #: the decode solve engine each backend actually runs ("pallas" has encode
 #: and product kernels but no solve kernel — its decode runs the jitted
@@ -458,3 +458,33 @@ class CodedLinear:
                           rows_dispatched=plan.total,
                           used_solve=plan.used_solve,
                           decode_backend=self.decode_backend)
+
+
+# ---------------------------------------------------------------------------
+# The output head — a named CodedLinear
+# ---------------------------------------------------------------------------
+
+#: Result of one coded head execution (``.logits`` aliases ``.out``).
+HeadStep = LinearStep
+
+
+class CodedLMHead(CodedLinear):
+    """Systematic-MDS-encoded output head, executed shard-by-shard.
+
+    Historically the bridge coded only the output-head matmul and a
+    separate module held this implementation; the per-layer
+    generalisation is :class:`CodedLinear` and the head is now just the
+    instance named ``"head"``: W is ``launch.serve.head_matrix``
+    (L = padded vocab) and the step result exposes the decoded product
+    as ``.logits``.
+
+    W: (L, D) float weight matrix.
+    seed: parity-generator seed (one head = one generator stream).
+    backend: "numpy" | "jax" | "pallas" for the parity encode + decode
+    solve.
+    """
+
+    def __init__(self, W: np.ndarray, *, seed: int = 0,
+                 backend: str = "numpy", parity_chunk: int = 256):
+        super().__init__(W, name="head", seed=seed, backend=backend,
+                         parity_chunk=parity_chunk)

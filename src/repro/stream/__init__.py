@@ -6,10 +6,16 @@ processes, per-worker share tracking for concurrent in-flight tasks, online
 replanning with SCA warm starts, a batched completion/decode backend shared
 with the Monte-Carlo simulator, and structured sojourn/queueing/waste
 metrics.  See ``src/repro/stream/README.md`` for the event model.
+
+Canonical construction surface::
+
+    from repro.stream import StreamConfig, StreamingExecutor
+    ex = StreamingExecutor(sc, config=StreamConfig(...))
 """
 from .backend import (ExponentialBlock, completion_times, decode_batch,
                       delivered_by, sample_delays)
 from .barrier import BarrierTask, StepBarrier, churn_finish_update
+from .config import BackendConfig, StreamConfig
 from .engine import StreamingExecutor, poisson_sources
 from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, Event, EventLoop,
                      PoissonProcess, TraceProcess, WorkerEvent)
@@ -17,10 +23,11 @@ from .metrics import StreamMetrics, TaskRecord
 from .queueing import (AdmissionConfig, AdmissionPolicy, EDFAdmission,
                        FairShareAdmission, FIFOAdmission, SharePool,
                        WaitQueue, make_admission_policy, maxmin_share)
-from .replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
+from .replan import OnlinePlanner, ReplanMode, ReplanPolicy, scaled_row_loads
 
 __all__ = [
     "StreamingExecutor", "poisson_sources",
+    "StreamConfig", "BackendConfig", "ReplanMode",
     "EventLoop", "Event", "PoissonProcess", "TraceProcess", "WorkerEvent",
     "ARRIVAL", "COMPLETION", "CHURN", "REPLAN",
     "AdmissionConfig", "SharePool", "WaitQueue",

@@ -25,6 +25,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import itertools
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -34,8 +35,9 @@ from ..core.problem import Scenario
 from ..obs import Tracer, use_tracer
 from . import backend as bk
 from .barrier import churn_finish_update
+from .config import StreamConfig
 from .events import (ARRIVAL, CHURN, COMPLETION, REPLAN, ArrivalProcess,
-                     EventLoop, PoissonProcess, WorkerEvent)
+                     Event, EventLoop, PoissonProcess, WorkerEvent)
 from .metrics import StreamMetrics, TaskRecord
 from .queueing import (AdmissionConfig, SharePool, fair_demand_rows,
                        make_admission_policy, scale_shares)
@@ -82,89 +84,93 @@ class StreamingExecutor:
     ----------
     sc:        base Scenario (M masters, N shared workers).
     sources:   arrival processes (defaults to ``poisson_sources(sc)``).
-    policy:    "fractional" | "dedicated" | "uncoded" planning stack.
-    replan:    online replanning policy (see :class:`ReplanPolicy`).
-    admission: share-scaling / backpressure / waiting-order configuration.
-               ``AdmissionConfig.policy`` picks the pluggable admission
-               policy ("fifo" | "edf" | "fair"); ``speculate_factor``
-               enables speculative re-dispatch of straggling in-flight
-               tasks.  Dedicated and uncoded plans force all-or-nothing
-               admission.  Deadlines come from the arrival processes
-               (``deadline_slack`` / explicit trace deadlines) and feed
-               both EDF ordering and the ``deadline_miss_rate`` metric.
+    config:    a frozen :class:`~repro.stream.config.StreamConfig` — the
+               canonical construction surface.  It bundles the planning
+               ``policy`` ("fractional" | "dedicated" | "uncoded"), the
+               :class:`ReplanPolicy`, the :class:`AdmissionConfig`
+               (share-scaling / backpressure / waiting-order; deadlines
+               come from the arrival processes and feed EDF ordering and
+               ``deadline_miss_rate``), a
+               :class:`~repro.stream.config.BackendConfig` (numerics
+               backend, verification, straggler injection, the event-batch
+               size of the vectorised loop, record retention) and the
+               ``rng`` master seed.
     churn:     scheduled :class:`WorkerEvent`s (join/leave/degrade/restore).
-    numerics:  "none" (delay simulation only) or "verify" (synthesize per-
-               task matrices and run the batched MDS encode→decode check;
-               requires integer-sized L).
-    rng:       master seed; every random stream derives from it.
-    backend:   "numpy", "jax" or "pallas" for the batched numerics.  jax
-               runs the verification encode/decode as jitted device code;
-               pallas additionally routes the encode and the per-task coded
-               products through the ``repro.kernels`` Pallas kernels (real
-               lowering on TPU, ``interpret=True`` elsewhere).  Both are
-               float32, so decode verification uses a looser tolerance.
-    straggle_p / straggle_factor: per-(task, node) probability that a node
-               serves this task in a degraded state — its whole delay is
-               multiplied by ``factor`` at admission-time sampling.  This
-               is the heavy-tailed measured behaviour of burstable cloud
-               instances (CPU-credit exhaustion): *churn-free* degradation
-               that hits in-flight tasks without any WorkerEvent, matching
-               ``sim.montecarlo``'s throttling model.
     tracer:    optional :class:`repro.obs.Tracer`.  Records sim-time spans
                (queue wait / service per master lane, per-worker shard
                deliveries with critical-delivery attribution, churn
                instants) and wall-time spans (the run itself, replan
                solves, verification products/decodes) side by side.  A
                disabled tracer costs nothing: it is normalised to None.
+               Tracing forces the reference per-event drain (the span
+               streams are defined per event).
+
+    The historical kwarg surface (``policy=``, ``replan=``, ``admission=``,
+    ``numerics=``, ``verify_cols=``, ``rng=``, ``backend=``,
+    ``straggle_p=``, ``straggle_factor=``) still works and is folded into a
+    ``StreamConfig`` internally, but emits a ``DeprecationWarning``;
+    passing both ``config`` and legacy kwargs is a ``TypeError``.
 
     One executor = one run.  Build a fresh instance to replay.
     """
 
     def __init__(self, sc: Scenario,
-                 sources: Optional[Sequence[ArrivalProcess]] = None, *,
-                 policy: str = "fractional",
-                 replan: Optional[ReplanPolicy] = None,
-                 admission: Optional[AdmissionConfig] = None,
+                 sources: Optional[Sequence[ArrivalProcess]] = None,
+                 config: Optional[StreamConfig] = None, *,
                  churn: Sequence[WorkerEvent] = (),
-                 numerics: str = "none",
-                 verify_cols: int = 4,
-                 rng: int = 0,
-                 backend: str = "numpy",
-                 straggle_p: float = 0.0,
-                 straggle_factor: float = 8.0,
-                 tracer: Optional[Tracer] = None):
-        if numerics not in ("none", "verify"):
-            raise ValueError(f"unknown numerics mode {numerics!r}")
+                 tracer: Optional[Tracer] = None,
+                 **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=StreamConfig(...) or the legacy "
+                    f"kwargs, not both: {sorted(legacy)}")
+            warnings.warn(
+                "StreamingExecutor's per-feature kwargs (policy=, replan=, "
+                "admission=, numerics=, verify_cols=, rng=, backend=, "
+                "straggle_p=, straggle_factor=) are deprecated; pass "
+                "config=StreamConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            config = StreamConfig.from_legacy_kwargs(**legacy)
+        elif config is None:
+            config = StreamConfig()
+        bcfg = config.backend
+        backend = bcfg.backend
         bk.check_backend(backend)
         if backend != "numpy" and not bk.has_jax():
             backend = "numpy"        # graceful, like the backend layer
+        self.config = config
         self.sc = sc
+        policy = config.policy
         self.sources = list(sources) if sources is not None else \
-            poisson_sources(sc, seed=rng)
-        self.admission = admission or AdmissionConfig(
+            poisson_sources(sc, seed=config.rng)
+        self.admission = config.admission or AdmissionConfig(
             allow_scaling=(policy == "fractional"))
         if policy != "fractional":
             self.admission = dataclasses.replace(self.admission,
                                                  allow_scaling=False)
         self.churn = sorted(churn, key=lambda e: e.time)
-        self.numerics = numerics
-        self.verify_cols = int(verify_cols)
-        self.seed = int(rng)
+        self.numerics = bcfg.numerics
+        self.verify_cols = int(bcfg.verify_cols)
+        self.seed = int(config.rng)
         self.backend = backend
-        self.straggle_p = float(straggle_p)
-        self.straggle_factor = float(straggle_factor)
+        self.straggle_p = float(bcfg.straggle_p)
+        self.straggle_factor = float(bcfg.straggle_factor)
+        self._event_batch = int(bcfg.event_batch)
+        self._keep_records = bool(bcfg.keep_records)
         # Disabled tracers normalise to None so the off path is exactly the
         # no-tracer path (the < 2% disabled-overhead contract).
         self.tracer = tracer if (tracer is not None
                                  and tracer.enabled) else None
 
-        self.planner = OnlinePlanner(sc, policy=policy, replan=replan,
-                                     rng=self.seed)
+        self.planner = OnlinePlanner(sc, policy=policy,
+                                     replan=config.replan, rng=self.seed)
         self.loop = EventLoop()
         self.pool = SharePool(sc.N)
         self.queue = make_admission_policy(self.admission.policy,
                                            self.admission.max_queue)
-        self.metrics = StreamMetrics(sc.M, sc.N)
+        self.metrics = StreamMetrics(sc.M, sc.N,
+                                     keep_records=self._keep_records)
 
         self.scale = np.ones(sc.N + 1)
         self._sc_eff = sc
@@ -178,6 +184,10 @@ class StreamingExecutor:
         self._next_tid = 0
         self._emitted = 0
         self._ran = False
+        self.events_processed = 0
+        # (plan, sc_eff)-keyed per-master full-share admission rows for the
+        # vectorised arrival drain; cleared whenever either identity changes.
+        self._row_cache: Dict = {}
         # Monotone completion-event versions: a stale COMPLETION (pushed
         # before churn retimed or re-dispatched its task) must never match.
         self._version_seq = itertools.count()
@@ -220,10 +230,20 @@ class StreamingExecutor:
         if pol.mode == "periodic":
             self.loop.push(pol.period, REPLAN, None)
 
+        # Tracing pins the reference per-event drain: the span/instant
+        # streams are defined per event, and the batched fast paths skip
+        # exactly the call sites that emit them.
+        batched = self._event_batch > 1 and self.tracer is None
         while not self.loop.empty():
             if self.loop.peek_time() > until:
                 break
+            if batched:
+                kind = self.loop.peek_kind()
+                if kind == ARRIVAL or kind == COMPLETION:
+                    self._drain_run(until)
+                    continue
             ev = self.loop.pop()
+            self.events_processed += 1
             if ev.kind == ARRIVAL:
                 self._on_arrival(ev.payload, ev.time)
             elif ev.kind == COMPLETION:
@@ -357,6 +377,219 @@ class StreamingExecutor:
                     self._retime(fl, t)
         self.planner.ensure_plan(self.online, self.scale, event=True)
         self._drain_queue(t)
+
+    # ----------------------------------------------------- vectorised drains
+    #
+    # The batched loop (BackendConfig.event_batch > 1) pops *mixed runs* of
+    # arrival + completion events instead of one heap entry at a time — at
+    # steady state the two kinds alternate, so homogeneous runs would be
+    # near-singletons — and pushes their math through the batched backend
+    # primitives.  Correctness contract: every *ledger* mutation (SharePool
+    # acquire/release) happens in the exact (time, seq) order the per-event
+    # loop would produce; the pure math (delay sampling, delivered-row
+    # counts, completion times) and the metric finalisation defer to one
+    # batched call per run.  Observable divergences: (a) generated events
+    # get different seq numbers (matters only on exact time ties — measure
+    # zero under continuous arrival/delay distributions), (b) ledger /
+    # busy-time accumulators are summed with array ops (float associativity
+    # at the ulp level), and (c) completions finalise in run order, so a
+    # deferred completion landing inside the run's span records *after* the
+    # run's own completions — the metrics lists are a permutation of the
+    # per-event ones and every summary statistic is order-invariant.
+    # Anything the fast path cannot handle exactly — a backlogged queue,
+    # racing twins, fairness or partial-fraction admission, verification
+    # numerics (whose probe RNG pairs with buffer order) — drops to the
+    # unchanged per-event handlers.
+
+    def _drain_run(self, until: float) -> None:
+        fast = (len(self.queue) == 0 and not self.twins
+                and self.tracer is None
+                and self.numerics != "verify"
+                and not self.planner.needs_all
+                and not self.queue.uses_fairness
+                and self.admission.min_fraction <= 1.0)
+        if not fast:
+            ev = self.loop.pop()
+            self.events_processed += 1
+            if ev.kind == ARRIVAL:
+                self._on_arrival(ev.payload, ev.time)
+            else:
+                self._on_completion(ev.payload, ev.time)
+            return
+        # Lazy walk: peek-then-pop one head event at a time, so arrivals
+        # pushed mid-walk (a processed arrival schedules its source's next
+        # one) join the same window in true heap order — nothing is popped
+        # optimistically, so nothing ever needs re-queueing.
+        loop = self.loop
+        pend: List[Tuple] = []      # admitted arrivals awaiting delay math
+        done: List[Tuple] = []      # live completions awaiting finalise
+        n = 0
+        while n < self._event_batch:
+            ev = loop.head()
+            if ev is None or ev.time > until or \
+                    (ev.kind != ARRIVAL and ev.kind != COMPLETION):
+                break
+            if ev.kind == COMPLETION:
+                loop.pop()
+                tid, version = ev.payload
+                fl = self.inflight.get(tid)
+                if fl is not None and fl.version == version:
+                    # release in walk order: later arrivals' headroom
+                    # checks must see these shares, exactly as per-event
+                    self.pool.release(fl.k_row, fl.b_row)
+                    done.append((fl, ev.time))
+                n += 1
+                continue
+            if self._emitted >= self.max_tasks:
+                loop.pop()
+                n += 1
+                continue
+            src = self.sources[ev.payload]
+            m = src.master
+            row = self._fast_row(m)
+            if row is None or not self.pool.has_headroom(row[0], row[1]):
+                # uncoverable row, or shares that would need scaling: the
+                # reference handler decides queue-vs-scale-vs-reject.  With
+                # no progress yet it must run *now* (stalling without
+                # popping would respin this method forever); otherwise end
+                # the window first so the flushed completions below land on
+                # the heap ahead of it.
+                if n == 0:
+                    loop.pop()
+                    self.events_processed += 1
+                    self._on_arrival(ev.payload, ev.time)
+                    return
+                break
+            loop.pop()
+            t = ev.time
+            k_row, b_row, l_row, t_pred, l_sum = row
+            tid = self._next_tid
+            self._next_tid += 1
+            self._emitted += 1
+            rec = TaskRecord(tid=tid, master=m, t_arrive=t,
+                             rows_needed=float(self.sc.L[m]))
+            self.tasks[tid] = rec
+            rec.deadline = float(src.deadline_for(t, t_pred))
+            if self._emitted < self.max_tasks:
+                t_next = src.next_after(t)
+                if np.isfinite(t_next):
+                    loop.push(t_next, ARRIVAL, ev.payload)
+            # The ledger mutates per item (sequential, bitwise the
+            # per-event order); only the delay/completion math defers.
+            # Unchecked: has_headroom above already proved the acquire
+            # cannot violate the column-sum invariant.
+            self.pool.acquire_unchecked(k_row, b_row)
+            rec.rows_total += l_sum
+            rec.t_admit = t
+            rec.fraction = 1.0
+            self.queue.note_admitted(m)
+            pend.append((tid, m, t, k_row, b_row, l_row))
+            n += 1
+        self.events_processed += n
+        self._flush_completions(done)
+        self._flush_pending(pend)
+
+    def _flush_completions(self, done: List[Tuple]) -> None:
+        """Finalise a run's live completions in one batched pass.
+
+        Their shares were already released item-by-item during the walk
+        (ledger order is part of the exactness contract); what remains —
+        delivered-row counts, busy-time accounting, task records — is pure
+        math over per-task state frozen at release time, batched here."""
+        if not done:
+            return
+        F = np.stack([fl.finish for fl, _ in done])
+        Lr = np.stack([fl.l_row for fl, _ in done])
+        ts = np.asarray([t for _, t in done])
+        delivered = bk.delivered_by(F, Lr, ts)
+        Kr = np.stack([fl.k_row for fl, _ in done])
+        Br = np.stack([fl.b_row for fl, _ in done])
+        self.metrics.record_share_interval_many(
+            Kr, Br, ts - np.asarray([fl.t_admit for fl, _ in done]))
+        self.metrics.record_tasks_many(
+            [self.tasks[fl.tid] for fl, _ in done], ts, delivered)
+        for fl, _ in done:
+            del self.inflight[fl.tid]
+            if not self._keep_records:
+                del self.tasks[fl.tid]
+
+    def _fast_row(self, m: int):
+        """Cached full-share admission row of master ``m``, or None.
+
+        Returns ``(k_row, b_row, l_row, t_pred, l_sum)`` — bitwise what
+        ``scale_shares`` + ``scaled_row_loads`` produce at f = 1 — valid
+        while neither the active plan nor the effective scenario object has
+        been replaced (both are swapped wholesale on churn/replan, never
+        mutated).  None when the row's loads cannot *strictly* cover L_m
+        (the guarantee that makes a dispatch's completion finite without
+        evaluating it)."""
+        plan = self.planner._plan
+        if plan is None:
+            plan = self.planner.ensure_plan(self.online, self.scale,
+                                            event=True)
+        cache = self._row_cache
+        ctx = cache.get("_ctx")
+        if ctx is None or ctx[0] is not plan or ctx[1] is not self._sc_eff:
+            cache.clear()
+            cache["_ctx"] = (plan, self._sc_eff)
+        row = cache.get(m)
+        if row is None:
+            k_row = np.where(self.online, plan.k[m], 0.0)
+            b_row = np.where(self.online, plan.b[m], 0.0)
+            k_row[0] = b_row[0] = 1.0
+            l_row, _ = scaled_row_loads(self._sc_eff, m, k_row, b_row)
+            l_sum = float(l_row.sum())
+            ok = l_sum >= float(self.sc.L[m]) + 1e-9
+            row = (k_row, b_row, l_row, float(plan.t_per_master[m]), l_sum,
+                   ok)
+            cache[m] = row
+        return row[:5] if row[5] else None
+
+    def _flush_pending(self, pend: List[Tuple]) -> None:
+        """Sample delays + completion times for a run's admitted arrivals in
+        one batched backend call each, then push their completion events.
+
+        Deferral is sound because every pending task was admitted at full
+        shares with strict coverage: its dispatch cannot fail, consumes
+        exactly one delay draw (in admission order — ``draw_n`` is defined
+        as n successive draws), and its completion event cannot influence
+        any arrival accepted later in the same run (an empty queue means a
+        completion only releases shares, and the fast path admits without
+        needing them)."""
+        if not pend:
+            return
+        B = len(pend)
+        E = self._exp.draw_n(B)
+        ms = np.asarray([p[1] for p in pend])
+        Kr = np.stack([p[3] for p in pend])
+        Br = np.stack([p[4] for p in pend])
+        Lr = np.stack([p[5] for p in pend])
+        d = bk.sample_delays(E[:, 0], E[:, 1], Lr, Kr, Br,
+                             self._sc_eff.a[ms], self._sc_eff.u[ms],
+                             self._sc_eff.gamma[ms],
+                             straggle_p=self.straggle_p,
+                             straggle_factor=self.straggle_factor,
+                             straggle_u=E[:, 2] if self.straggle_p > 0
+                             else None)
+        ts = np.asarray([p[2] for p in pend])
+        finish = np.where(Lr > 0, ts[:, None] + d, np.inf)
+        need = self.sc.L[ms]
+        comp = bk.completion_times(finish, Lr, need, needs_all=False,
+                                   backend="numpy")
+        deferred: List[Event] = []
+        for i, (tid, m, t, k_row, b_row, l_row) in enumerate(pend):
+            fl = _InFlight(tid=tid, master=int(m), k_row=k_row, b_row=b_row,
+                           l_row=l_row, finish=finish[i],
+                           need=float(need[i]), t_admit=t,
+                           completion=float(comp[i]),
+                           version=next(self._version_seq),
+                           service_pred=float(comp[i]) - t, fraction=1.0)
+            self.inflight[tid] = fl
+            deferred.append(Event(float(comp[i]), next(self.loop._seq),
+                                  COMPLETION, (tid, fl.version)))
+        # requeue, not push: a completion earlier than the run's last
+        # arrival is legitimately "in the past" of loop.now by design.
+        self.loop.requeue(deferred)
 
     # ------------------------------------------------------------ admission
 
@@ -552,6 +785,8 @@ class StreamingExecutor:
         del self.inflight[fl.tid]
         if self.numerics == "verify" and not self.planner.needs_all:
             self._verify_buf.append(fl)
+        elif not self._keep_records:
+            del self.tasks[fl.tid]
 
     def _trace_task(self, fl: _InFlight, rec: TaskRecord, t: float) -> None:
         """Sim-time spans for a completed attempt: the service interval on

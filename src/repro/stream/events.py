@@ -68,6 +68,62 @@ class EventLoop:
     def peek_time(self) -> float:
         return self._heap[0][0] if self._heap else np.inf
 
+    def peek_key(self) -> Tuple[float, int]:
+        """(time, seq) of the head event without popping; (inf, -1) empty."""
+        if not self._heap:
+            return (np.inf, -1)
+        t, s, _ = self._heap[0]
+        return (t, s)
+
+    def peek_kind(self) -> Optional[str]:
+        return self._heap[0][2].kind if self._heap else None
+
+    def head(self) -> Optional[Event]:
+        """The head event without popping (None when empty)."""
+        return self._heap[0][2] if self._heap else None
+
+    def pop_run(self, max_events: int, max_time: float = np.inf,
+                kinds: Optional[Tuple[str, ...]] = None) -> List[Event]:
+        """Pop up to ``max_events`` consecutive events of the head's kind —
+        or, with ``kinds``, of any kind in that set (a *mixed* run).
+
+        The run stops at the first event of another kind (or whose time
+        exceeds ``max_time``) — events come off the heap in exactly the
+        (time, seq) order ``pop`` would yield, so a caller that processes
+        the run items left to right (and re-queues any suffix it cannot
+        handle via :meth:`requeue`) observes the identical total order.
+        ``now`` advances to the last popped event's time; callers stepping
+        through the run item by item may assign ``now`` per item (it only
+        moves forward).
+        """
+        run: List[Event] = []
+        if not self._heap:
+            return run
+        allowed = kinds if kinds is not None else (self._heap[0][2].kind,)
+        while self._heap and len(run) < max_events:
+            t, _, ev = self._heap[0]
+            if ev.kind not in allowed or t > max_time:
+                break
+            heapq.heappop(self._heap)
+            self.now = t
+            run.append(ev)
+        return run
+
+    def requeue(self, events: Iterable[Event]) -> None:
+        """Push already-popped events back, keeping their original seq.
+
+        Used by batched processors that popped a run optimistically and then
+        discovered a generated event (e.g. a completion) lands *inside* the
+        run: the unprocessed suffix goes back with its (time, seq) keys
+        intact, so the total order is exactly the per-event one.  ``now``
+        rolls back to the earliest requeued event (the caller has not
+        processed anything at or past it).
+        """
+        for ev in events:
+            heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+            if ev.time < self.now:
+                self.now = ev.time
+
     def __len__(self) -> int:
         return len(self._heap)
 

@@ -91,10 +91,20 @@ class TaskRecord:
 
 
 class StreamMetrics:
-    """Accumulates task records and worker share-time integrals."""
+    """Accumulates task records and worker share-time integrals.
 
-    def __init__(self, M: int, N: int):
+    ``keep_records=False`` switches to compact accumulation: completed
+    tasks fold into scalar columns (sojourn / queue wait / waste / master
+    / deadline counters) instead of retaining ``TaskRecord`` objects —
+    ``summary()`` is unchanged, ``to_records()`` becomes unavailable.
+    Required at fleet scale: 1e6 retained records cost ~1 GB.  Unserved
+    tasks keep their records either way (there are few, and censoring
+    needs their deadlines).
+    """
+
+    def __init__(self, M: int, N: int, keep_records: bool = True):
         self.M, self.N = int(M), int(N)
+        self.keep_records = bool(keep_records)
         self.completed: List[TaskRecord] = []
         self.unserved_tasks: List[TaskRecord] = []   # never completed
         self.rejected = 0
@@ -104,13 +114,72 @@ class StreamMetrics:
         self.busy_k = np.zeros(N + 1)      # ∫ k dt per worker column
         self.busy_b = np.zeros(N + 1)
         self.t_end = 0.0
+        self._n_completed = 0
+        # compact columns (populated only when keep_records=False)
+        self._c_master: List[int] = []
+        self._c_sojourn: List[float] = []
+        self._c_queue_wait: List[float] = []
+        self._c_wasted: List[float] = []
+        self._c_needed: List[float] = []
+        self._dl_total = 0
+        self._dl_miss = 0
 
     # -- accumulation --------------------------------------------------------
 
     def record_task(self, rec: TaskRecord) -> None:
-        self.completed.append(rec)
+        self._n_completed += 1
         if np.isfinite(rec.t_complete):
             self.t_end = max(self.t_end, rec.t_complete)
+        if self.keep_records:
+            self.completed.append(rec)
+            return
+        self._c_master.append(rec.master)
+        self._c_sojourn.append(rec.sojourn)
+        self._c_queue_wait.append(rec.queue_wait)
+        self._c_wasted.append(rec.wasted_rows)
+        self._c_needed.append(rec.rows_needed)
+        if math.isfinite(rec.deadline):
+            self._dl_total += 1
+            self._dl_miss += int(rec.deadline_miss)
+
+    def record_tasks_many(self, recs: List[TaskRecord],
+                          t_completes: np.ndarray,
+                          rows_delivered: np.ndarray) -> None:
+        """Batched :meth:`record_task` for B completions finalised together.
+
+        Writes ``t_complete`` / ``rows_delivered`` onto the records and
+        folds them in with array ops.  Every derived column is the same
+        IEEE expression elementwise, so the values equal B sequential
+        :meth:`record_task` calls exactly (the compact lists come out in
+        the caller's batch order — a permutation never visible through the
+        order-invariant summary statistics)."""
+        tc = np.asarray(t_completes, dtype=np.float64)
+        rd = np.asarray(rows_delivered, dtype=np.float64)
+        self._n_completed += len(recs)
+        fin = tc[np.isfinite(tc)]
+        if fin.size:
+            self.t_end = max(self.t_end, float(fin.max()))
+        if self.keep_records:
+            for i, rec in enumerate(recs):
+                rec.t_complete = float(tc[i])
+                rec.rows_delivered = float(rd[i])
+                self.completed.append(rec)
+            return
+        t_arrive = np.asarray([r.t_arrive for r in recs])
+        t_admit = np.asarray([r.t_admit for r in recs])
+        rows_total = np.asarray([r.rows_total for r in recs])
+        dl = np.asarray([r.deadline for r in recs])
+        for i, rec in enumerate(recs):
+            rec.t_complete = float(tc[i])
+            rec.rows_delivered = float(rd[i])
+        self._c_master.extend(r.master for r in recs)
+        self._c_sojourn.extend((tc - t_arrive).tolist())
+        self._c_queue_wait.extend((t_admit - t_arrive).tolist())
+        self._c_wasted.extend(np.maximum(rows_total - rd, 0.0).tolist())
+        self._c_needed.extend(r.rows_needed for r in recs)
+        fin_dl = np.isfinite(dl)
+        self._dl_total += int(fin_dl.sum())
+        self._dl_miss += int((fin_dl & ~(tc <= dl)).sum())
 
     def record_unserved(self, rec: TaskRecord,
                         censor_after: float = math.inf) -> None:
@@ -130,9 +199,27 @@ class StreamMetrics:
         self.busy_k += k_row * dt
         self.busy_b += b_row * dt
 
+    def record_share_interval_many(self, k_rows: np.ndarray,
+                                   b_rows: np.ndarray,
+                                   dts: np.ndarray) -> None:
+        """Fold (B, N+1) share rows held for (B,) durations into the busy-
+        time integrals in one pass (sum-associativity aside, B sequential
+        :meth:`record_share_interval` calls)."""
+        self.busy_k += (k_rows * dts[:, None]).sum(axis=0)
+        self.busy_b += (b_rows * dts[:, None]).sum(axis=0)
+
     # -- views ---------------------------------------------------------------
 
+    _COMPACT_COLS = {"sojourn": "_c_sojourn", "queue_wait": "_c_queue_wait",
+                     "wasted_rows": "_c_wasted", "rows_needed": "_c_needed"}
+
     def _arr(self, attr: str, master: Optional[int] = None) -> np.ndarray:
+        if not self.keep_records:
+            a = np.asarray(getattr(self, self._COMPACT_COLS[attr]),
+                           dtype=np.float64)
+            if master is not None:
+                a = a[np.asarray(self._c_master, dtype=np.int64) == master]
+            return a
         recs = self.completed if master is None else [
             r for r in self.completed if r.master == master]
         return np.array([getattr(r, attr) for r in recs], dtype=np.float64)
@@ -152,6 +239,10 @@ class StreamMetrics:
         return self.busy_k[1:] / self.t_end
 
     def to_records(self) -> List[Dict[str, float]]:
+        if not self.keep_records:
+            raise RuntimeError(
+                "per-task records were not retained "
+                "(BackendConfig.keep_records=False)")
         return [r.to_dict() for r in self.completed]
 
     def summary(self) -> Dict[str, float]:
@@ -167,7 +258,7 @@ class StreamMetrics:
         need = self._arr("rows_needed")
         ok = [r.decode_ok for r in self.completed if r.decode_ok is not None]
         out: Dict[str, float] = {
-            "tasks_completed": float(len(self.completed)),
+            "tasks_completed": float(self._n_completed),
             "tasks_rejected": float(self.rejected),
             "tasks_unserved": float(self.unserved),
             "replans": float(self.replans),
@@ -178,15 +269,16 @@ class StreamMetrics:
         }
         with_dl = [r for r in self.completed + self.unserved_tasks
                    if math.isfinite(r.deadline)]
-        if with_dl:
-            out["deadline_miss_rate"] = float(
-                np.mean([r.deadline_miss for r in with_dl]))
+        dl_total = len(with_dl) + self._dl_total
+        if dl_total:
+            dl_miss = sum(r.deadline_miss for r in with_dl) + self._dl_miss
+            out["deadline_miss_rate"] = float(dl_miss / dl_total)
         if s.size:
             fin = s[np.isfinite(s)]
             fq = q[np.isfinite(q)]
             fw = w[np.isfinite(w)]
             out["throughput_per_time"] = \
-                (len(self.completed) / self.t_end) if self.t_end > 0 else 0.0
+                (self._n_completed / self.t_end) if self.t_end > 0 else 0.0
             out.update({
                 "sojourn_mean": float(fin.mean()) if fin.size else math.inf,
                 "sojourn_p50": float(np.quantile(fin, 0.50)) if fin.size else math.inf,

@@ -116,12 +116,37 @@ class SharePool:
         f = float(np.min(np.where(need, np.minimum(fk, fb), np.inf)))
         return float(np.clip(f, 0.0, 1.0))
 
+    def has_headroom(self, k_req: np.ndarray, b_req: np.ndarray) -> bool:
+        """Division-free check that implies ``feasible_fraction(...) == 1.0``.
+
+        Conservative: it compares availability to the request elementwise,
+        so within one ulp of the boundary it may say False where the
+        division in :meth:`feasible_fraction` rounds up to exactly 1 —
+        callers on a fast path then fall back to the exact computation.
+        True always implies f ≥ 1 (each per-column quotient is ≥ 1 when
+        availability ≥ request)."""
+        kr, br = k_req[1:], b_req[1:]
+        on = self.online[1:]
+        ok = (((1.0 - self.k_used[1:] >= kr) & on) | (kr <= _ATOL)) \
+            & (((1.0 - self.b_used[1:] >= br) & on) | (br <= _ATOL))
+        return bool(ok.all())
+
     # -- mutation -----------------------------------------------------------
 
     def acquire(self, k_row: np.ndarray, b_row: np.ndarray) -> None:
         if np.any(self.k_used[1:] + k_row[1:] > 1.0 + 1e-6) or \
            np.any(self.b_used[1:] + b_row[1:] > 1.0 + 1e-6):
             raise ValueError("share acquisition violates column-sum <= 1")
+        self.k_used[1:] += k_row[1:]
+        self.b_used[1:] += b_row[1:]
+        tr = current_tracer()
+        if tr is not None:
+            tr.gauge("pool_k_used", float(self.k_used[1:].sum()))
+
+    def acquire_unchecked(self, k_row: np.ndarray, b_row: np.ndarray) -> None:
+        """:meth:`acquire` minus the column-sum validation — for callers
+        that have just proven :meth:`has_headroom` (availability ≥ request
+        on every column implies the post-acquire sums stay ≤ 1)."""
         self.k_used[1:] += k_row[1:]
         self.b_used[1:] += b_row[1:]
         tr = current_tracer()

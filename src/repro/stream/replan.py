@@ -24,6 +24,8 @@ changes (a plan placing load on a dead worker is never served).
 from __future__ import annotations
 
 import dataclasses
+import enum
+import time
 from typing import Optional, Tuple
 
 import numpy as np
@@ -32,32 +34,59 @@ from ..core.assignment import fractional_greedy, iterated_greedy, plan_from_assi
 from ..core.allocation import markov_loads
 from ..core.benchmarks import uncoded_uniform
 from ..core.problem import Plan, Scenario, theta_dedicated
-from ..core.sca import sca_enhance_plan
+from ..core.sca import kkt_residual, sca_enhance_master, sca_enhance_plan
 from ..obs import current_tracer
 
-__all__ = ["ReplanPolicy", "OnlinePlanner", "theta_row_fractional", "scaled_row_loads"]
+__all__ = ["ReplanMode", "ReplanPolicy", "OnlinePlanner",
+           "theta_row_fractional", "scaled_row_loads"]
+
+
+class ReplanMode(str, enum.Enum):
+    """Replan trigger policy.
+
+    A ``str`` enum: members compare equal to their literal values, so both
+    ``ReplanPolicy(mode=ReplanMode.DRIFT)`` and the historical
+    ``ReplanPolicy(mode="drift")`` construct the same policy.
+
+    INCREMENTAL re-plans at ``ALWAYS`` frequency (every pool change) but
+    first attempts an O(affected-rows) *repair* of the incumbent plan —
+    see ``OnlinePlanner`` — falling back to the full solve on worker joins
+    or when the repaired plan's KKT residual drifts past ``repair_tol``.
+    """
+    ALWAYS = "always"
+    PERIODIC = "periodic"
+    DRIFT = "drift"
+    NEVER = "never"
+    INCREMENTAL = "incremental"
 
 
 @dataclasses.dataclass
 class ReplanPolicy:
     """When and how hard to re-optimise.
 
-    mode:            "always" | "periodic" | "drift" | "never".
+    mode:            a ``ReplanMode`` (or its string value).
     period:          timer interval for "periodic" (sim time units).
     drift_threshold: relative capacity change triggering a re-solve in
                      "drift" mode (max_m |V_m/V_m_prev - 1|).
     use_sca:         run Algorithm 3 on each re-solve (warm-started).
     sca_iters:       SCA iteration budget per re-solve.
+    repair_tol:      "incremental" fallback tolerance: a repaired plan is
+                     kept while kkt_residual(repaired) - kkt_residual(last
+                     full solve) <= repair_tol.  Set to -1.0 to force the
+                     fallback on every repair attempt (testing hook).
     """
-    mode: str = "drift"
+    mode: ReplanMode = ReplanMode.INCREMENTAL
     period: float = 50.0
     drift_threshold: float = 0.15
     use_sca: bool = False
     sca_iters: int = 6
+    repair_tol: float = 0.25
 
     def __post_init__(self):
-        if self.mode not in ("always", "periodic", "drift", "never"):
-            raise ValueError(f"unknown replan mode {self.mode!r}")
+        try:
+            self.mode = ReplanMode(self.mode)
+        except ValueError:
+            raise ValueError(f"unknown replan mode {self.mode!r}") from None
 
 
 def theta_row_fractional(a_row, u_row, g_row, k_row, b_row) -> np.ndarray:
@@ -106,18 +135,39 @@ class OnlinePlanner:
         self._plan: Optional[Plan] = None
         self._key: Optional[bytes] = None
         self._capacity_at_plan: Optional[np.ndarray] = None
-        self.replans = 0
+        self._online_at_plan: Optional[np.ndarray] = None
+        self._scale_at_plan: Optional[np.ndarray] = None
+        self._kkt_at_plan: Optional[float] = None
+        self.replans = 0            # plan replacements (full solves + repairs)
+        self.full_solves = 0
+        self.repairs = 0
+        self.repair_fallbacks = 0   # repairs rejected by the KKT criterion
+        self.solve_wall: list = []  # seconds per full solve (perf_counter)
+        self.repair_wall: list = []  # seconds per accepted repair
         self._subscribers: list = []
 
     # -- invalidation hooks --------------------------------------------------
 
     def subscribe(self, fn) -> None:
-        """Register a callback fired whenever the active plan is *replaced*
-        (a re-solve while a previous plan existed).  Consumers holding
-        plan-derived state — the serving bridge's step-plan cache — drop it
-        here instead of polling the row for changes.  The first solve of a
-        planner's life does not fire: there was no prior plan to have
-        derived state from."""
+        """Register a callback fired whenever the active plan is *replaced*.
+
+        Listener contract (stable; ``StepPlanCache`` and any future consumer
+        may rely on it):
+
+        * fires exactly once per plan replacement — a full re-solve *or* an
+          accepted incremental repair while a previous plan existed;
+        * fires *after* ``self.plan`` already points at the new plan, so a
+          listener may inspect the fresh rows;
+        * the first solve of a planner's life does not fire (no prior plan,
+          hence no derived state to drop);
+        * ``notify_pool_change`` additionally fires all listeners even when
+          no replacement happens (membership changed but the policy absorbed
+          it) — listeners must treat every callback as "drop derived state",
+          not "a solve happened";
+        * callbacks run synchronously, in subscription order, inside
+          ``ensure_plan`` / ``notify_pool_change``; they must not call back
+          into the planner.
+        """
         self._subscribers.append(fn)
 
     def notify_pool_change(self) -> None:
@@ -172,39 +222,138 @@ class OnlinePlanner:
         key = online.tobytes() + scale.tobytes()
         if self._plan is not None and key == self._key:
             return self._plan
+        mode = self.replan.mode
+        # Incremental: any pool-state change replans ("always" frequency),
+        # but via O(affected-rows) repair when possible.  Full solve on
+        # force, first plan, or repair rejection (joins / KKT fallback).
+        if (mode == ReplanMode.INCREMENTAL and not force
+                and self._plan is not None):
+            t0 = time.perf_counter()
+            repaired = self._repair(online, scale)
+            if repaired is not None:
+                if repaired is not self._plan:
+                    self._adopt(repaired, online, scale, key,
+                                full_solve=False)
+                    self.repair_wall.append(time.perf_counter() - t0)
+                else:
+                    # Nothing moved: keep the incumbent bit-identical, just
+                    # refresh the key so the next call short-circuits.
+                    self._key = key
+                return self._plan
         mask_changed = (self._key is None
                         or self._key[:online.nbytes] != online.tobytes())
-        solve = force or self._plan is None or mask_changed
+        solve = (force or self._plan is None or mask_changed
+                 or mode == ReplanMode.INCREMENTAL)
         if not solve:
-            mode = self.replan.mode
-            if mode == "always" and event:
+            if mode == ReplanMode.ALWAYS and event:
                 solve = True
-            elif mode == "drift":
+            elif mode == ReplanMode.DRIFT:
                 V = self.capacity(online, scale)
                 drift = np.max(np.abs(V / np.maximum(
                     self._capacity_at_plan, 1e-300) - 1.0))
                 solve = drift > self.replan.drift_threshold
         if solve:
-            had_plan = self._plan is not None
+            t0 = time.perf_counter()
             tr = current_tracer()
             if tr is None:
-                self._plan = self._solve(online, scale)
+                new_plan = self._solve(online, scale)
             else:
                 # cat "replan" (not the "plan" stage cat): a re-solve can
                 # fire *inside* a serving step's plan stage, and stage
                 # categories must tile the step without double counting.
                 with tr.span("replan_solve", cat="replan",
                              args={"policy": self.policy,
-                                   "mode": self.replan.mode,
+                                   "mode": str(self.replan.mode.value),
                                    "replans": self.replans}):
-                    self._plan = self._solve(online, scale)
-            self._key = key
-            self._capacity_at_plan = self.capacity(online, scale)
-            self.replans += 1
-            if had_plan:
-                for fn in self._subscribers:
-                    fn()
+                    new_plan = self._solve(online, scale)
+            self._adopt(new_plan, online, scale, key, full_solve=True)
+            self.solve_wall.append(time.perf_counter() - t0)
         return self._plan
+
+    def _adopt(self, plan: Plan, online: np.ndarray, scale: np.ndarray,
+               key: bytes, *, full_solve: bool) -> None:
+        """Install ``plan`` as the active plan and fire the listeners."""
+        had_plan = self._plan is not None
+        self._plan = plan
+        self._key = key
+        self._online_at_plan = online.copy()
+        self._scale_at_plan = scale.copy()
+        self._capacity_at_plan = self.capacity(online, scale)
+        if full_solve:
+            self.full_solves += 1
+            if self.policy != "uncoded":
+                sc_eff = self.effective_scenario(online, scale)
+                self._kkt_at_plan = kkt_residual(
+                    sc_eff, plan.k, plan.b, plan.l, plan.t_per_master)
+        else:
+            self.repairs += 1
+        self.replans += 1
+        if had_plan:
+            for fn in self._subscribers:
+                fn()
+
+    # -- incremental repair ---------------------------------------------------
+
+    def _repair(self, online: np.ndarray,
+                scale: np.ndarray) -> Optional[Plan]:
+        """Repair the incumbent plan for a perturbed pool, or ``None``.
+
+        Only workers whose θ changed are touched (paper's per-worker θ
+        structure: a worker's parameters enter other masters' rows only
+        through the shares it already donated — which a leave zeroes and a
+        degrade keeps).  The repair:
+
+        * rejects **joins** (a new worker must be assigned shares — that is
+          the full Algorithm 1/4 problem, not a row update);
+        * zeroes departed workers' share/load columns;
+        * recomputes the Theorem-1/3 closed-form load row (optionally
+          SCA-polished) for every master holding shares on a moved worker;
+        * falls back (returns ``None``) when the repaired plan's
+          ``kkt_residual`` exceeds the residual recorded at the last full
+          solve by more than ``ReplanPolicy.repair_tol`` — anchoring to the
+          full-solve baseline lets single cheap repairs through while
+          ratcheting accumulated drift back to a real solve.
+
+        Returns the incumbent itself (``is``-identical) when nothing moved.
+        """
+        if self.policy == "uncoded":
+            return None     # uniform re-solve is already O(M·N)
+        old_online, old_scale = self._online_at_plan, self._scale_at_plan
+        if old_online is None or old_scale is None:
+            return None
+        if bool(np.any(online & ~old_online)):
+            return None     # join: requires a fresh assignment
+        if online[0] != old_online[0] or scale[0] != old_scale[0]:
+            return None     # local processors never churn; be safe if they do
+        moved = (online != old_online) | (scale != old_scale)
+        moved[0] = False
+        if not bool(np.any(moved)):
+            return self._plan
+        inc = self._plan
+        k = inc.k.copy(); b = inc.b.copy(); l = inc.l.copy()
+        t = inc.t_per_master.copy()
+        affected = np.nonzero(
+            ((inc.k[:, moved] > 0) | (inc.l[:, moved] > 0)).any(axis=1))[0]
+        gone = moved & ~online
+        k[:, gone] = 0.0; b[:, gone] = 0.0; l[:, gone] = 0.0
+        sc_eff = self.effective_scenario(online, scale)
+        for m in affected:
+            l_row, t_m = scaled_row_loads(sc_eff, int(m), k[m], b[m])
+            if self.replan.use_sca:
+                l_row, t_m = sca_enhance_master(
+                    sc_eff, int(m), k, b, l_row, t_m,
+                    max_iters=self.replan.sca_iters)
+            l[m] = l_row
+            t[m] = t_m
+        if affected.size and self._kkt_at_plan is not None:
+            r_new = kkt_residual(sc_eff, k, b, l, t)
+            if r_new - self._kkt_at_plan > self.replan.repair_tol:
+                self.repair_fallbacks += 1
+                return None
+        method = inc.method
+        if not method.endswith("+repair"):
+            method = method + "+repair"
+        return Plan(k=k, b=b, l=l, t_per_master=t, method=method)
 
     # -- the restricted static solve ----------------------------------------
 
@@ -213,8 +362,15 @@ class OnlinePlanner:
         cols = np.concatenate([[0], np.nonzero(online[1:])[0] + 1])
         if cols.size == 1:
             return self._local_only_plan(sc_eff)
-        sub = Scenario(a=sc_eff.a[:, cols], u=sc_eff.u[:, cols],
-                       gamma=sc_eff.gamma[:, cols], L=sc_eff.L)
+        # ascontiguousarray: fancy indexing on axis 1 yields Fortran-ordered
+        # copies, and axis=-1 reductions walk F-ordered memory in a different
+        # order than C rows — a 1-ulp divergence between the solver's loads
+        # and the repair path's row recomputation (scaled_row_loads works on
+        # C rows).  Forcing C order keeps repair ≡ re-solve bit-identical.
+        sub = Scenario(a=np.ascontiguousarray(sc_eff.a[:, cols]),
+                       u=np.ascontiguousarray(sc_eff.u[:, cols]),
+                       gamma=np.ascontiguousarray(sc_eff.gamma[:, cols]),
+                       L=sc_eff.L)
         if self.policy == "uncoded":
             sub_plan = uncoded_uniform(sub)
         elif self.policy == "dedicated":

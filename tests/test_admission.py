@@ -5,9 +5,9 @@ import pytest
 
 from repro.core.problem import Scenario
 from repro.stream import (AdmissionConfig, EDFAdmission, FairShareAdmission,
-                          FIFOAdmission, PoissonProcess, StreamingExecutor,
-                          TraceProcess, WorkerEvent, make_admission_policy,
-                          maxmin_share)
+                          FIFOAdmission, PoissonProcess, StreamConfig,
+                          StreamingExecutor, TraceProcess, WorkerEvent,
+                          make_admission_policy, maxmin_share)
 
 
 def _scenario(M=2, N=8, L=96.0, seed=3):
@@ -108,8 +108,10 @@ def _deadline_run(policy: str, seed: int):
     srcs = [TraceProcess(0, times, deadlines=list(times + slack))]
     churn = [WorkerEvent(80.0, 2, "degrade", 3.0)]
     ex = StreamingExecutor(
-        sc, srcs, policy="fractional", churn=churn, rng=seed,
-        admission=AdmissionConfig(min_fraction=0.9, policy=policy))
+        sc, srcs, config=StreamConfig(
+            policy="fractional", rng=seed,
+            admission=AdmissionConfig(min_fraction=0.9, policy=policy)),
+        churn=churn)
     s = ex.run(max_tasks=n).summary()
     assert s["tasks_completed"] == n, (policy, seed)
     return s["deadline_miss_rate"]
@@ -146,14 +148,15 @@ def test_deadline_metric_plumbing():
     sc = _scenario(M=2, N=8, L=48.0, seed=5)
     srcs = [PoissonProcess(m, rate=0.01, seed=1, deadline_slack=3.0)
             for m in range(sc.M)]
-    ex = StreamingExecutor(sc, srcs, rng=7)
+    ex = StreamingExecutor(sc, srcs, config=StreamConfig(rng=7))
     ms = ex.run(max_tasks=30)
     s = ms.summary()
     assert "deadline_miss_rate" in s
     for r in ms.to_records():
         assert np.isfinite(r["deadline"]) and r["deadline"] > r["t_arrive"]
     srcs2 = [PoissonProcess(m, rate=0.01, seed=1) for m in range(sc.M)]
-    s2 = StreamingExecutor(sc, srcs2, rng=7).run(max_tasks=30).summary()
+    s2 = StreamingExecutor(sc, srcs2, config=StreamConfig(rng=7)) \
+        .run(max_tasks=30).summary()
     assert "deadline_miss_rate" not in s2
 
 
@@ -167,8 +170,9 @@ def test_fair_policy_respects_share_ledger():
     never raised) and everything completes."""
     sc = _scenario(M=3, N=6, L=48.0, seed=8)
     srcs = [PoissonProcess(m, rate=0.05, seed=1) for m in range(sc.M)]
-    ex = StreamingExecutor(sc, srcs, policy="fractional", rng=2,
-                           admission=AdmissionConfig(policy="fair"))
+    ex = StreamingExecutor(sc, srcs, config=StreamConfig(
+        policy="fractional", rng=2,
+        admission=AdmissionConfig(policy="fair")))
     ms = ex.run(max_tasks=60)
     assert ms.summary()["tasks_completed"] == 60
     assert ms.utilization().max() <= 1.0 + 1e-6
@@ -184,8 +188,9 @@ def test_fair_policy_avoids_cross_master_blocking():
 
     def wait_of_master1(policy):
         ex = StreamingExecutor(
-            sc, srcs_for(policy), policy="fractional", rng=3,
-            admission=AdmissionConfig(min_fraction=0.9, policy=policy))
+            sc, srcs_for(policy), config=StreamConfig(
+                policy="fractional", rng=3,
+                admission=AdmissionConfig(min_fraction=0.9, policy=policy)))
         ms = ex.run(max_tasks=11)
         recs = [r for r in ms.to_records() if r["master"] == 1]
         assert len(recs) == 1
@@ -212,8 +217,10 @@ def test_speculation_triggers_and_never_double_counts():
              for t in (40.0, 80.0, 120.0) for w in (1, 2, 3)]
     srcs = [PoissonProcess(m, rate=0.02, seed=1) for m in range(sc.M)]
     ex = StreamingExecutor(
-        sc, srcs, policy="fractional", churn=churn, rng=5,
-        admission=AdmissionConfig(speculate_factor=1.2))
+        sc, srcs, config=StreamConfig(
+            policy="fractional", rng=5,
+            admission=AdmissionConfig(speculate_factor=1.2)),
+        churn=churn)
     ms = ex.run(max_tasks=30)
     s = ms.summary()
     assert s["tasks_completed"] == 30
@@ -237,8 +244,10 @@ def test_speculation_improves_p99_under_degradation():
     def p99(spec):
         srcs = [PoissonProcess(m, rate=0.02, seed=1) for m in range(sc.M)]
         ex = StreamingExecutor(
-            sc, srcs, policy="fractional", churn=churn, rng=5,
-            admission=AdmissionConfig(speculate_factor=spec))
+            sc, srcs, config=StreamConfig(
+                policy="fractional", rng=5,
+                admission=AdmissionConfig(speculate_factor=spec)),
+            churn=churn)
         return ex.run(max_tasks=30).summary()["sojourn_p99"]
 
     assert p99(1.2) <= p99(None) * 1.01
@@ -253,8 +262,10 @@ def test_speculation_with_leave_churn_survives():
              WorkerEvent(30.0, 2, "leave"),
              WorkerEvent(40.0, 1, "leave")]
     ex = StreamingExecutor(
-        sc, srcs, policy="fractional", churn=churn, rng=1,
-        admission=AdmissionConfig(speculate_factor=1.1))
+        sc, srcs, config=StreamConfig(
+            policy="fractional", rng=1,
+            admission=AdmissionConfig(speculate_factor=1.1)),
+        churn=churn)
     ms = ex.run(max_tasks=4)
     recs = ms.to_records()
     assert len(recs) == 4
@@ -271,8 +282,9 @@ def test_twin_losing_after_original_completion_never_double_counts():
     sc = _scenario(M=1, N=4, L=64.0, seed=20)
     srcs = [TraceProcess(0, [0.0], deadlines=[5000.0])]
     ex = StreamingExecutor(
-        sc, srcs, policy="fractional", rng=1,
-        admission=AdmissionConfig(speculate_factor=1.1))
+        sc, srcs, config=StreamConfig(
+            policy="fractional", rng=1,
+            admission=AdmissionConfig(speculate_factor=1.1)))
     ex._ran = True
     ex.max_tasks = 1
     ex._on_arrival(0, 0.0)
@@ -313,8 +325,11 @@ def test_policy_runs_replay_deterministically():
         srcs = [PoissonProcess(m, rate=0.02, seed=1, deadline_slack=2.0)
                 for m in range(sc.M)]
         ex = StreamingExecutor(
-            sc, srcs, policy="fractional", churn=churn, rng=11,
-            admission=AdmissionConfig(policy=policy, speculate_factor=1.3))
+            sc, srcs, config=StreamConfig(
+                policy="fractional", rng=11,
+                admission=AdmissionConfig(policy=policy,
+                                          speculate_factor=1.3)),
+            churn=churn)
         return ex.run(max_tasks=40)
 
     for policy in ("edf", "fair"):

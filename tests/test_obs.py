@@ -21,7 +21,8 @@ import pytest
 from repro.core.problem import Scenario
 from repro.obs import (STAGE_CATS, Tracer, check_trace, current_tracer,
                        device_span, use_tracer)
-from repro.stream import PoissonProcess, StreamingExecutor, WorkerEvent
+from repro.stream import (BackendConfig, PoissonProcess, StreamConfig,
+                          StreamingExecutor, WorkerEvent)
 from repro.stream.metrics import StreamMetrics, TaskRecord
 
 
@@ -36,8 +37,8 @@ def _scenario(M=2, N=8, L=96.0, seed=3):
 def _run_stream(tracer, max_tasks=40, churn=(), numerics="none"):
     sc = _scenario()
     srcs = [PoissonProcess(m, rate=0.05, seed=1) for m in range(sc.M)]
-    ex = StreamingExecutor(sc, srcs, rng=7, churn=churn, numerics=numerics,
-                           tracer=tracer)
+    cfg = StreamConfig(rng=7, backend=BackendConfig(numerics=numerics))
+    ex = StreamingExecutor(sc, srcs, config=cfg, churn=churn, tracer=tracer)
     return ex.run(max_tasks=max_tasks)
 
 

@@ -14,7 +14,7 @@ import pytest
 from repro.obs import Tracer
 from repro.serve_coded import (CodedServingBridge, StepPlan, StepPlanCache,
                                synthetic_requests)
-from repro.stream import AdmissionConfig, WorkerEvent
+from repro.stream import AdmissionConfig, ReplanPolicy, WorkerEvent
 
 CHURN = [WorkerEvent(400.0, 2, "degrade", 4.0),
          WorkerEvent(1500.0, 5, "leave"),
@@ -91,6 +91,21 @@ def test_drift_replan_invalidates_mid_generation():
     b2 = _bridge(plan_cache=False)
     want = b2.serve(_reqs(b2, n=6, gen=4), churn=DRIFT)
     assert rep.tokens == want.tokens
+
+
+def test_incremental_repair_serves_identical_tokens():
+    # MDS decode is exact for any covering prefix, so the planner's repair
+    # mode (incremental row repair vs full re-solve per pool change) must
+    # be invisible in the served tokens — on both execution engines,
+    # through a schedule with repairable events *and* a join
+    for execution in ("serial", "batched"):
+        inc = _bridge(execution=execution,
+                      replan=ReplanPolicy(mode="incremental"))
+        always = _bridge(execution=execution,
+                         replan=ReplanPolicy(mode="always"))
+        r_inc = inc.serve(_reqs(inc), churn=CHURN)
+        r_alw = always.serve(_reqs(always), churn=CHURN)
+        assert r_inc.tokens == r_alw.tokens
 
 
 def test_disabled_cache_reports_zero_counters_and_same_tokens():

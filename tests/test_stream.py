@@ -8,10 +8,10 @@ from repro.core import iterated_greedy, plan_from_assignment
 from repro.core.problem import Scenario
 from repro.runtime import CodedExecutor
 from repro.sim.montecarlo import _completion_times
-from repro.stream import (AdmissionConfig, OnlinePlanner, PoissonProcess,
-                          ReplanPolicy, SharePool, StreamingExecutor,
-                          TraceProcess, WorkerEvent, completion_times,
-                          decode_batch)
+from repro.stream import (AdmissionConfig, BackendConfig, OnlinePlanner,
+                          PoissonProcess, ReplanPolicy, SharePool,
+                          StreamConfig, StreamingExecutor, TraceProcess,
+                          WorkerEvent, completion_times, decode_batch)
 from repro.stream.backend import has_jax
 
 
@@ -136,8 +136,9 @@ def test_dead_worker_sweep_coded_executor():
 def _stream(sc, *, policy="fractional", churn=(), rng=7, n=40, rate=0.01,
             numerics="none", replan=None):
     srcs = [PoissonProcess(m, rate=rate, seed=1) for m in range(sc.M)]
-    ex = StreamingExecutor(sc, srcs, policy=policy, churn=churn,
-                           numerics=numerics, rng=rng, replan=replan)
+    cfg = StreamConfig(policy=policy, replan=replan, rng=rng,
+                       backend=BackendConfig(numerics=numerics))
+    ex = StreamingExecutor(sc, srcs, config=cfg, churn=churn)
     return ex.run(max_tasks=n)
 
 
@@ -215,8 +216,9 @@ def test_backpressure_queue_and_rejection():
     sc = _scenario(M=1, N=4, L=48.0, seed=9)
     srcs = [TraceProcess(0, [0.0] * 12)]
     ex = StreamingExecutor(
-        sc, srcs, policy="fractional", rng=3,
-        admission=AdmissionConfig(min_fraction=0.9, max_queue=4))
+        sc, srcs, config=StreamConfig(
+            policy="fractional", rng=3,
+            admission=AdmissionConfig(min_fraction=0.9, max_queue=4)))
     ms = ex.run(max_tasks=12)
     s = ms.summary()
     assert s["tasks_rejected"] > 0
@@ -233,9 +235,10 @@ def test_straggle_fault_sweep():
     p50 = {}
     for p in (0.0, 0.2, 0.5):
         srcs = [PoissonProcess(m, rate=0.01, seed=1) for m in range(sc.M)]
-        ex = StreamingExecutor(sc, srcs, policy="fractional", rng=9,
-                               numerics="verify", straggle_p=p,
-                               straggle_factor=8.0)
+        ex = StreamingExecutor(sc, srcs, config=StreamConfig(
+            policy="fractional", rng=9,
+            backend=BackendConfig(numerics="verify", straggle_p=p,
+                                  straggle_factor=8.0)))
         ms = ex.run(max_tasks=30)
         s = ms.summary()
         assert s["tasks_completed"] == 30, p
@@ -245,8 +248,9 @@ def test_straggle_fault_sweep():
     assert p50[0.0] < p50[0.2] < p50[0.5]
     # deterministic replay with throttling on
     srcs = [PoissonProcess(m, rate=0.01, seed=1) for m in range(sc.M)]
-    ex = StreamingExecutor(sc, srcs, policy="fractional", rng=9,
-                           straggle_p=0.2, straggle_factor=8.0)
+    ex = StreamingExecutor(sc, srcs, config=StreamConfig(
+        policy="fractional", rng=9,
+        backend=BackendConfig(straggle_p=0.2, straggle_factor=8.0)))
     assert ex.run(max_tasks=30).summary()["sojourn_p50"] == p50[0.2]
 
 
@@ -262,8 +266,10 @@ def test_streaming_verify_backend_equivalence(backend):
 
     def go(be):
         srcs = [PoissonProcess(m, rate=0.01, seed=1) for m in range(sc.M)]
-        ex = StreamingExecutor(sc, srcs, policy="fractional", churn=churn,
-                               numerics="verify", rng=11, backend=be)
+        ex = StreamingExecutor(sc, srcs, config=StreamConfig(
+            policy="fractional", rng=11,
+            backend=BackendConfig(backend=be, numerics="verify")),
+            churn=churn)
         return ex.run(max_tasks=30).summary()
 
     s_np, s_be = go("numpy"), go(backend)
@@ -338,7 +344,8 @@ def test_redispatch_never_finalized_by_stale_completion():
     sc = _scenario(M=1, N=3, L=64.0, seed=20)
     srcs = [TraceProcess(0, [0.0, 1.0, 2.0])]
     churn = [WorkerEvent(5.0, w, "leave") for w in (1, 2, 3)]
-    ex = StreamingExecutor(sc, srcs, policy="fractional", churn=churn, rng=1)
+    ex = StreamingExecutor(sc, srcs, config=StreamConfig(
+        policy="fractional", rng=1), churn=churn)
     ms = ex.run(max_tasks=3)
     recs = ms.to_records()
     assert len(recs) == 3
@@ -353,8 +360,10 @@ def test_periodic_replan_terminates_when_sources_exhaust():
     rescheduling itself forever."""
     sc = _scenario(M=1, N=4, L=48.0, seed=21)
     ex = StreamingExecutor(sc, [TraceProcess(0, [0.0, 1.0])],
-                           replan=ReplanPolicy(mode="periodic", period=10.0),
-                           rng=2)
+                           config=StreamConfig(
+                               replan=ReplanPolicy(mode="periodic",
+                                                   period=10.0),
+                               rng=2))
     ms = ex.run(max_tasks=10)       # only 2 arrivals will ever happen
     assert ms.summary()["tasks_completed"] == 2
 
@@ -365,8 +374,9 @@ def test_fifo_admission_order():
     sc = _scenario(M=1, N=4, L=48.0, seed=22)
     srcs = [TraceProcess(0, [float(i) for i in range(10)])]
     ex = StreamingExecutor(
-        sc, srcs, policy="fractional", rng=3,
-        admission=AdmissionConfig(min_fraction=0.9))
+        sc, srcs, config=StreamConfig(
+            policy="fractional", rng=3,
+            admission=AdmissionConfig(min_fraction=0.9)))
     ms = ex.run(max_tasks=10)
     recs = sorted(ms.to_records(), key=lambda r: r["tid"])
     assert len(recs) == 10
@@ -379,7 +389,7 @@ def test_streaming_deterministic_trace_metrics_shape():
     record fields."""
     sc = _scenario(M=2, N=6, L=48.0, seed=14)
     srcs = [TraceProcess(0, [1.0, 2.0, 3.0]), TraceProcess(1, [1.5, 2.5])]
-    ex = StreamingExecutor(sc, srcs, rng=6)
+    ex = StreamingExecutor(sc, srcs, config=StreamConfig(rng=6))
     ms = ex.run(max_tasks=5)
     recs = ms.to_records()
     assert len(recs) == 5
