@@ -19,6 +19,11 @@ REPRO_BENCH_BACKEND_JSON) so the perf trajectory is machine-readable:
     pass over a serving step's packed 128-aligned shard tiles vs the
     per-tile loop (numpy einsum reference, jax vmap fallback, Pallas
     one-launch path).
+(e) Virtual parity: the generated-parity kernel path (rows derived
+    in-kernel from packed threefry counters) vs the materialised gather,
+    plus the encoded-cache bytes each storage mode holds at redundancy 2.
+    CI floors generated throughput at 0.8x materialised and ceilings the
+    virtual/materialised byte ratio at 0.55.
 """
 from __future__ import annotations
 
@@ -172,6 +177,63 @@ def run_shard_matmul(tiles: int = 12, tile: int = 128, D: int = 128,
     return rec
 
 
+def run_generated_parity(L: int = 256, D: int = 128, cols: int = 4,
+                         seed: int = 0) -> dict:
+    """Virtual-parity serving cost: the generated-parity kernel path
+    (parity rows derived in-kernel from packed threefry counters,
+    contracted as ``R_gen @ (W @ x)``) vs the materialised path (parity
+    rows gathered from the host encoded cache into the tiles).  Also
+    records the encoded-cache footprint of each storage mode at
+    redundancy 2 — the memory the virtual mode exists to reclaim."""
+    if not has_jax():  # pragma: no cover
+        return {}
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.serve_coded import CodedLinear
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(L, D))
+    mat = CodedLinear(W, name="bench", seed=seed, parity_chunk=64)
+    virt = CodedLinear(W, name="bench", seed=seed, parity_chunk=64,
+                       parity_storage="virtual")
+    for lin in (mat, virt):
+        lin.ensure_parity(L)                   # redundancy 2
+    # one packed tile: a straggler prefix of systematic rows + parity tail
+    n_par = 64
+    rows = np.concatenate([np.arange(L - n_par), np.arange(L, L + n_par)])
+    tiles_mat = jnp.asarray(mat.gather_encoded(rows)[None], jnp.float32)
+    zeroed = virt.gather_encoded(rows).astype(np.float32)
+    par_pos = np.nonzero(rows >= L)[0]
+    zeroed[par_pos] = 0.0
+    spec = ops.GeneratedParity(lanes=par_pos,
+                               ctrs=virt.parity_ctrs(rows[par_pos] - L),
+                               key=virt.pkey, w=virt.device_W())
+    tiles_gen = jnp.asarray(zeroed[None])
+    x = jnp.asarray(rng.normal(size=(D, cols)), jnp.float32)
+    m = lambda: np.asarray(ops.coded_shard_matmul_batch(
+        tiles_mat, x, mode="vmap"))
+    g = lambda: np.asarray(ops.coded_shard_matmul_batch(
+        tiles_gen, x, mode="vmap", parity_mode="generated", parity=[spec]))
+    m(), g()                                   # compile outside the timing
+    t_m, t_g = _best(m), _best(g)
+    err = float(np.abs(g() - m()).max())
+    b_mat, b_virt = mat.encoded_cache_bytes(), virt.encoded_cache_bytes()
+    rec = {
+        "L": L, "D": D, "cols": cols, "parity_rows": n_par,
+        "materialized_seconds": round(t_m, 5),
+        "generated_seconds": round(t_g, 5),
+        "generated_vs_materialized": round(t_m / t_g, 3),
+        "encoded_bytes_materialized": int(b_mat),
+        "encoded_bytes_virtual": int(b_virt),
+        "encoded_bytes_ratio": round(b_virt / b_mat, 3),
+        "interpret_mode": bool(ops.default_interpret()),
+        "max_err": err,
+    }
+    emit("backend/generated_parity", t_g * 1e6,
+         f"L={L};D={D};gen_vs_mat={rec['generated_vs_materialized']}x;"
+         f"bytes_ratio={rec['encoded_bytes_ratio']};max_err={err:.2e}")
+    return rec
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--trials", type=int, default=100_000,
@@ -185,6 +247,7 @@ def main(argv=None):
         "decode": run_decode(),
         "pallas_encode": run_pallas_encode(),
         "shard_matmul": run_shard_matmul(),
+        "generated_parity": run_generated_parity(),
     }
     path = args.json or os.environ.get("REPRO_BENCH_BACKEND_JSON",
                                        "BENCH_backend.json")

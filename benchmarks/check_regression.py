@@ -30,6 +30,16 @@ copy:
         --key scopes.trunk.batched.tokens_per_wall_second \
         --min trunk_wall_vs_head=0.4 \
         --min batched_wall_speedup.trunk=1.0
+
+``--max KEY=VALUE`` is the mirror: an *absolute ceiling* on a fresh
+lower-is-better metric (again machine-independent, again no baseline
+comparison) — e.g. the virtual/materialised encoded-cache byte ratio,
+which the virtual-parity mode must keep at or below 0.55 at redundancy 2:
+
+    python -m benchmarks.check_regression \
+        --baseline BENCH_backend.json --fresh fresh_BENCH_backend.json \
+        --min generated_parity.generated_vs_materialized=0.8 \
+        --max generated_parity.encoded_bytes_ratio=0.55
 """
 from __future__ import annotations
 
@@ -61,13 +71,18 @@ def main(argv=None) -> int:
                    metavar="KEY=VALUE",
                    help="absolute floor on a fresh metric (dotted path "
                         "= number; repeatable; no baseline comparison)")
+    p.add_argument("--max", action="append", default=[], dest="maxs",
+                   metavar="KEY=VALUE",
+                   help="absolute ceiling on a fresh lower-is-better "
+                        "metric (dotted path = number; repeatable; no "
+                        "baseline comparison)")
     p.add_argument("--factor", type=float,
                    default=float(os.environ.get("REPRO_REGRESSION_FACTOR",
                                                 "2.0")),
                    help="maximum tolerated slowdown ratio (default 2.0)")
     args = p.parse_args(argv)
-    if not args.keys and not args.mins:
-        p.error("need at least one --key or --min")
+    if not args.keys and not args.mins and not args.maxs:
+        p.error("need at least one --key, --min or --max")
 
     with open(args.baseline) as f:
         base = json.load(f)
@@ -93,13 +108,24 @@ def main(argv=None) -> int:
         failed |= not ok
         print(f"{key:<44} {floor:>12.2f} {fval:12.2f} {'':>7}  "
               f"{'ok' if ok else 'BELOW FLOOR'}")
+    for spec in args.maxs:
+        key, _, ceil_s = spec.partition("=")
+        if not ceil_s:
+            p.error(f"--max needs KEY=VALUE, got {spec!r}")
+        ceiling = float(ceil_s)
+        fval = get_path(fresh, key)
+        ok = fval <= ceiling
+        failed |= not ok
+        print(f"{key:<44} {ceiling:>12.2f} {fval:12.2f} {'':>7}  "
+              f"{'ok' if ok else 'ABOVE CEILING'}")
     if failed:
         print(f"[check_regression] FAILED: fresh metrics regressed more "
-              f"than {args.factor}x vs {args.baseline} or fell below a "
-              f"--min floor", file=sys.stderr)
+              f"than {args.factor}x vs {args.baseline}, fell below a "
+              f"--min floor or exceeded a --max ceiling", file=sys.stderr)
         return 1
     print(f"[check_regression] ok (factor {args.factor}x, "
-          f"{len(args.keys)} ratio + {len(args.mins)} floor metrics)")
+          f"{len(args.keys)} ratio + {len(args.mins)} floor + "
+          f"{len(args.maxs)} ceiling metrics)")
     return 0
 
 

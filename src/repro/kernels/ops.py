@@ -6,21 +6,27 @@ conventions, systematic-generator fast paths, and the interpret switch
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
+from ..core import mds
 from ..obs import device_span
 from .coded_matvec import coded_matvec_pallas
 from .matmul import matmul_pallas
-from .mds_encode import mds_encode_pallas
+from .mds_encode import (counter_parity_rows_pallas, gen_parity_matvec_pallas,
+                         mds_encode_pallas)
 from .wkv6 import wkv6_pallas
 
 __all__ = ["matmul", "mds_encode", "mds_encode_batch", "coded_matvec",
-           "coded_matvec_batch", "coded_shard_matmul_batch", "wkv6",
-           "default_interpret"]
+           "coded_matvec_batch", "coded_shard_matmul_batch",
+           "counter_parity_rows", "gen_parity_products", "GeneratedParity",
+           "wkv6", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -92,9 +98,154 @@ def coded_matvec_batch(a_tilde: jnp.ndarray, x: jnp.ndarray, *,
     return jax.vmap(mv)(a_tilde, x)
 
 
+def _parity_key_arrays(key: Tuple[int, int],
+                       L: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Layer key / scale as the (1, 2) uint32 + (1, 1) f32 kernel operands
+    (array operands, so layers re-use one compiled kernel)."""
+    key_arr = jnp.asarray(np.asarray(key, dtype=np.uint32)[None, :])
+    scale = jnp.full((1, 1), np.float32(np.sqrt(3.0 / L)), jnp.float32)
+    return key_arr, scale
+
+
+def counter_parity_rows(key: Tuple[int, int], L: int, ctrs, *,
+                        block_rows: int = 128, block_cols: int = 128,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Counter-derived parity generator rows R[ctrs] (n, L) float32.
+
+    The standalone in-kernel generator for encode/verify paths — pads the
+    row counters up to the block grid and slices back; bit-identical to
+    :func:`repro.core.mds.counter_parity_rows` for the same ``(key,
+    ctrs)`` (the shared threefry tile arithmetic guarantees it).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    ctrs = jnp.asarray(np.asarray(ctrs, dtype=np.uint32))[:, None]
+    n = ctrs.shape[0]
+    key_arr, scale = _parity_key_arrays(key, L)
+    ctrs_p = _pad_to(ctrs, 0, block_rows)
+    cols = -(-L // block_cols) * block_cols
+    out = counter_parity_rows_pallas(key_arr, scale, ctrs_p, n_cols=cols,
+                                     block_rows=block_rows,
+                                     block_cols=block_cols,
+                                     interpret=interpret)
+    return out[:n, :L]
+
+
+@functools.lru_cache(maxsize=None)
+def _derive_rows_xla(L: int):
+    """Jitted XLA twin of the parity-row derivation for off-TPU runs.
+
+    Off-TPU the fused Pallas kernel only executes in interpret mode —
+    Python-level emulation, orders of magnitude slower than the compiled
+    materialised path it must keep pace with.  The counter tile
+    arithmetic is backend-generic, so the same derivation runs as
+    straight XLA ops (same threefry rounds, same fixed-order float32
+    adds) — bit-identical rows by construction."""
+    def f(key_arr, scale, ctrs):
+        cols = jax.lax.broadcasted_iota(jnp.uint32, (1, L), 1)
+        return mds.counter_gaussian_tile(key_arr[0, 0], key_arr[0, 1],
+                                         ctrs, cols, scale)
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=None)
+def _gen_contract():
+    return jax.jit(lambda r, w, x: r @ (w @ x))
+
+
+#: steady-state serving replays one frozen counter schedule per plan
+#: entry, so the derived R_gen coefficient rows (n, L) — NOT the encoded
+#: WR mirror — are memoised on device across steps.  Bounded LRU; only
+#: the off-TPU XLA path uses it (on TPU the fused kernel regenerates
+#: in-VMEM for free).
+GEN_ROWS_MEMO = 8
+_gen_rows_memo: "dict[tuple, jnp.ndarray]" = {}
+
+
+def _gen_rows_device(key: Tuple[int, int], ctrs: np.ndarray,
+                     L: int) -> jnp.ndarray:
+    mk = (int(key[0]), int(key[1]), int(L),
+          np.asarray(ctrs, np.uint32).tobytes())
+    r = _gen_rows_memo.pop(mk, None)
+    if r is None:
+        key_arr, scale = _parity_key_arrays(key, L)
+        cj = jnp.asarray(np.asarray(ctrs, dtype=np.uint32))[:, None]
+        r = _derive_rows_xla(L)(key_arr, scale, cj)
+    _gen_rows_memo[mk] = r                     # re-insert: LRU order
+    while len(_gen_rows_memo) > GEN_ROWS_MEMO:
+        _gen_rows_memo.pop(next(iter(_gen_rows_memo)))
+    return r
+
+
+@functools.lru_cache(maxsize=None)
+def _gen_vmap_step(n_specs: int):
+    """One compiled step for vmap-mode generated parity: base tile
+    matmul + every spec's ``R_gen @ (W @ x)`` + lane scatter, fused so
+    the virtual path costs one dispatch like the materialised one."""
+    def f(tiles, x, lanes, rs, ws):
+        T, R, _ = tiles.shape
+        flat = jax.vmap(lambda t: t @ x)(tiles).reshape(T * R, -1)
+        for i in range(n_specs):
+            flat = flat.at[lanes[i]].set(
+                (rs[i] @ (ws[i] @ x)).astype(flat.dtype))
+        return flat.reshape(T, R, -1)
+    return jax.jit(f)
+
+
+def gen_parity_products(key: Tuple[int, int], ctrs, w: jnp.ndarray,
+                        x: jnp.ndarray, *,
+                        block_rows: int = 128, block_k: int = 128,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Generated-parity shard products (n, C): ``R_gen[ctrs] @ (W @ x)``.
+
+    ``w`` (L, D) float32 systematic weights (device-resident), ``x``
+    (D, C).  The fused kernel derives each parity tile from the packed
+    row counters and contracts it against W tile-by-tile — the virtual
+    parity path's device execution, with no ``WR`` mirror in HBM.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    ctrs_host = np.asarray(ctrs, dtype=np.uint32)
+    ctrs = jnp.asarray(ctrs_host)[:, None]
+    n = ctrs.shape[0]
+    L, D = w.shape
+    key_arr, scale = _parity_key_arrays(key, L)
+    with device_span("gen_parity_products", cat="kernel",
+                     args={"rows": int(n), "L": int(L)}) as fence:
+        if interpret:
+            r = _gen_rows_device(key, ctrs_host, L)
+            out = fence(_gen_contract()(r, w, x))
+        else:
+            ctrs_p = _pad_to(ctrs, 0, block_rows)
+            wp = _pad_to(_pad_to(w, 0, block_k), 1, 128)
+            xp = _pad_to(x, 0, 128)[:wp.shape[1]]
+            out = fence(gen_parity_matvec_pallas(
+                key_arr, scale, ctrs_p, wp, xp, block_rows=block_rows,
+                block_k=block_k, interpret=False))
+    return out[:n]
+
+
+@dataclasses.dataclass
+class GeneratedParity:
+    """Virtual-parity lane spec for one packed problem.
+
+    ``lanes`` index into the flattened (T·R,) tile row space; their
+    products come from the generated kernel instead of the materialised
+    tiles (whose corresponding rows are zero-filled).  ``ctrs`` are the
+    packed (row | draw << 24) counters — the per-row seed schedule frozen
+    into the plan — and ``w`` the layer's device-resident systematic
+    weights.
+    """
+    lanes: np.ndarray           # (n,) flat lane indices in tile space
+    ctrs: np.ndarray            # (n,) packed parity-row counters (uint32)
+    key: Tuple[int, int]        # per-layer threefry key
+    w: jnp.ndarray              # (L, D) float32 systematic weights
+
+
 def coded_shard_matmul_batch(tiles: jnp.ndarray, x: jnp.ndarray, *,
                              block_rows: int = 128, block_k: int = 128,
                              mode: str = "pallas",
+                             parity_mode: str = "materialized",
+                             parity: Optional[Sequence[GeneratedParity]]
+                             = None,
                              interpret: bool | None = None) -> jnp.ndarray:
     """Every packed shard tile of a serving step against one operand, in
     one pass: ``tiles`` (T, R, K) 128-aligned encoded-row tiles (the
@@ -110,25 +261,60 @@ def coded_shard_matmul_batch(tiles: jnp.ndarray, x: jnp.ndarray, *,
     jnp fallback for the jax backend.  Per-row results are independent of
     the tile bucketing (each output row is one dot), which is what lets
     the packing layer re-bucket ragged shards freely.
+
+    ``parity_mode="generated"`` is the virtual-parity execution: parity
+    lanes are zero rows in ``tiles`` and each :class:`GeneratedParity`
+    entry of ``parity`` re-derives those lanes' products through the
+    fused :func:`gen_parity_products` kernel (threefry counters against
+    the layer's device-resident W) — the encoded parity rows never exist
+    in HBM.  ``"materialized"`` (default) reads every lane from the
+    tiles, exactly the historical behaviour.
     """
     interpret = default_interpret() if interpret is None else interpret
     T, R, K = tiles.shape
     if mode not in ("vmap", "pallas"):
         raise ValueError(f"unknown mode {mode!r}; expected pallas | vmap")
+    if parity_mode not in ("materialized", "generated"):
+        raise ValueError(f"unknown parity_mode {parity_mode!r}; expected "
+                         f"materialized | generated")
     if mode == "pallas" and (R % block_rows or K % block_k):
         raise ValueError(f"tiles must be block-aligned, got R={R} K={K} "
                          f"for block ({block_rows}, {block_k})")
+    gen = parity_mode == "generated" and parity
     # the exit fence (block_until_ready) only engages while a tracer is
     # recording; the untraced path keeps jax's async dispatch
     with device_span("coded_shard_matmul_batch", cat="kernel",
-                     args={"tiles": T, "rows": T * R, "k": K,
-                           "mode": mode}) as fence:
+                     args={"tiles": T, "rows": T * R, "k": K, "mode": mode,
+                           "parity_mode": parity_mode}) as fence:
+        if gen and mode == "vmap" and interpret:
+            # one compiled dispatch: base matmul + generated lanes, with
+            # the derived R_gen rows memoised across steps of the plan
+            specs = list(parity)
+            lanes = tuple(jnp.asarray(np.asarray(s.lanes, dtype=np.int64))
+                          for s in specs)
+            rs = tuple(_gen_rows_device(s.key, s.ctrs, s.w.shape[0])
+                       for s in specs)
+            ws = tuple(s.w for s in specs)
+            return fence(_gen_vmap_step(len(specs))(tiles, x, lanes,
+                                                    rs, ws))
         if mode == "vmap":
-            return fence(jax.vmap(lambda t: t @ x)(tiles))
-        flat = coded_matvec_pallas(tiles.reshape(T * R, K), x,
-                                   block_rows=block_rows, block_k=block_k,
-                                   interpret=interpret)
-        return fence(flat.reshape(T, R, -1))
+            out = fence(jax.vmap(lambda t: t @ x)(tiles))
+        else:
+            flat = coded_matvec_pallas(tiles.reshape(T * R, K), x,
+                                       block_rows=block_rows,
+                                       block_k=block_k, interpret=interpret)
+            out = fence(flat.reshape(T, R, -1))
+    if not gen:
+        return out
+    flat = out.reshape(T * R, -1)
+    for spec in parity:
+        yp = gen_parity_products(spec.key, spec.ctrs, spec.w, x,
+                                 block_rows=block_rows, block_k=block_k,
+                                 interpret=interpret)
+        flat = flat.at[jnp.asarray(np.asarray(spec.lanes,
+                                              dtype=np.int64))].set(
+            yp.astype(flat.dtype))
+    return flat.reshape(T, R, -1)
 
 
 def coded_matvec(a_tilde: jnp.ndarray, x: jnp.ndarray, *,

@@ -279,6 +279,12 @@ class ServeReport:
     solve_steps: int
     execution: str = "batched"           # shard-execution engine
     decode_backend: str = "numpy"        # effective decode-solve engine
+    backend: str = "numpy"               # backend as *requested*
+    # backend that actually ran: CodedLinear warns and falls back to
+    # numpy when jax is unavailable — the report records the truth
+    # instead of echoing the request
+    backend_effective: str = "numpy"
+    parity_storage: str = "materialized"  # "materialized" | "virtual"
     redispatches: int = 0                # in-flight steps re-timed off-plan
     sim_horizon_ms: float = 0.0          # last step/request completion
     # step-plan cache traffic for this serve (all zero when disabled):
@@ -361,6 +367,16 @@ class CodedServingBridge:
                — on-TPU serving flips this on and accepts float32
                verification tolerances.
     backend:   "numpy" | "jax" | "pallas" for the coded encode/decode.
+               When jax is missing the layers warn and fall back to
+               numpy; ``ServeReport.backend_effective`` records what ran.
+    parity_storage: "materialized" keeps each layer's packed ``[W; WR]``
+               encoded cache (and its float32 device mirror); "virtual"
+               derives parity rows from packed threefry counters on
+               demand — host gathers re-encode per block (bit-identical),
+               the device path runs the generated-parity kernel against
+               resident W, and encoded-weight memory drops to ≈ half at
+               redundancy 2.  Decoded values and greedy tokens are
+               identical across the modes.
     coded:     False serves the identical pipeline with every in-scope
                matmul computed locally (the *uncoded baseline*: same
                scheduling, same sim timing, no shard execution) — the
@@ -397,6 +413,7 @@ class CodedServingBridge:
                  execution: str = "batched",
                  device_products: bool = False,
                  backend: str = "numpy",
+                 parity_storage: str = "materialized",
                  coded: bool = True,
                  verify: bool = True, seed: int = 0,
                  tracer: Optional[Tracer] = None,
@@ -432,6 +449,10 @@ class CodedServingBridge:
         self.execution = execution
         self.device_products = bool(device_products)
         self.backend = backend
+        if parity_storage not in ("materialized", "virtual"):
+            raise ValueError(f"parity_storage must be 'materialized' or "
+                             f"'virtual', got {parity_storage!r}")
+        self.parity_storage = parity_storage
         self.coded = bool(coded)
         self.verify = bool(verify)
         self.seed = int(seed)
@@ -455,7 +476,8 @@ class CodedServingBridge:
             W = head_matrix(cfg, params)
             self._model = dict(cfg=cfg, params=params, W=W)
             self.sc = self.profile.scenario(self.M, L=float(W.shape[0]))
-            self.head = CodedLMHead(W, seed=self.seed, backend=self.backend)
+            self.head = CodedLMHead(W, seed=self.seed, backend=self.backend,
+                                    parity_storage=self.parity_storage)
             self._linears: Dict[str, CodedLinear] = {"head": self.head}
             self.runner: Optional[HostTrunk] = None
             if self.coding_scope == "head":
@@ -466,7 +488,8 @@ class CodedServingBridge:
                 for key in trunk_matmul_keys(cfg, self.coding_scope):
                     self._linears[key] = CodedLinear(
                         self.runner.weights[key], name=key, seed=self.seed,
-                        backend=self.backend)
+                        backend=self.backend,
+                        parity_storage=self.parity_storage)
             self._coded_keys = [k for k in self._linears if k != "head"] \
                 + ["head"]
         if max_len > self._max_len:
@@ -586,8 +609,9 @@ class CodedServingBridge:
                      redispatches=0)
         # the decode-solve engine this configuration actually runs: jax and
         # pallas both decode through the jitted solve, but CodedLinear
-        # silently falls back to numpy when jax is unavailable — the report
-        # and the per-step log must say what really ran, not what was asked
+        # warns and falls back to numpy when jax is unavailable — the
+        # report and the per-step log say what really ran, not what was
+        # asked (ServeReport.backend_effective carries the same truth)
         eff_decode = ("local" if not self.coded
                       else "numpy" if not bk.has_jax()
                       else DECODE_ENGINE[self.backend])
@@ -1025,6 +1049,8 @@ class CodedServingBridge:
                 "master": m, "scope": self.coding_scope,
                 "execution": self.execution,
                 "decode_backend": sp.decode_backend or eff_decode,
+                "backend": self.head.backend,   # effective, post-fallback
+                "parity_storage": self.parity_storage,
                 "t_start": sp.t_start, "t_done": t,
                 "batch": len(sp.tok_by_slot), "tokens": ntok,
                 "n_tasks": len(sp.barrier.tasks),
@@ -1193,6 +1219,9 @@ class CodedServingBridge:
             solve_steps=stats["solves"],
             execution=self.execution,
             decode_backend=eff_decode,
+            backend=self.backend,
+            backend_effective=self.head.backend,
+            parity_storage=self.parity_storage,
             redispatches=stats["redispatches"],
             sim_horizon_ms=max([metrics.t_end]
                                + [s["t_done"] for s in step_log]),

@@ -17,14 +17,40 @@ systematic rows — any L delivered coded rows recover the product, so
 picking identity rows first shrinks the parity solve to the coverage
 shortfall (see :meth:`CodedLinear.prefix_plan`).
 
-**Persistent encoded-weight cache.**  The encoded matrix ``[W; WR]`` lives
-in one packed row-major buffer per layer, grown *incrementally*: the
-systematic prefix is W itself (the identity-skipping trick the Pallas
-``mds_encode`` kernel uses), and each lazily-drawn parity chunk appends
-``R_chunk @ W`` without re-encoding anything already cached.  Shard
-execution in both the serial and the batched engine is a gather from this
-cache — ``device_rows`` maintains the float32 device-resident mirror the
-same incremental way for the jax/pallas batched kernel path.
+**Counter-derived parity.**  Every parity generator row is a pure
+function of ``(seed, name, row index)`` through the threefry counter
+derivation in :func:`repro.core.mds.counter_parity_rows`: rows are
+derived in fixed ``parity_chunk``-aligned blocks, each block's
+conditioning-guard redraw index is itself deterministic, and therefore
+row r carries identical bits no matter in what order or granularity the
+cache grew — across replans, serves, and processes.  (The historical
+implementation drew parity from one *sequential* ``default_rng`` stream,
+so a row's values depended on the growth history — a replay bug this
+module fixed when virtual storage made the contract load-bearing.)
+
+**Two parity storage modes.**
+
+``parity_storage="materialized"`` (default): the encoded matrix
+``[W; WR]`` lives in one packed row-major buffer per layer, grown
+*incrementally*: the systematic prefix is W itself (the
+identity-skipping trick the Pallas ``mds_encode`` kernel uses), and each
+lazily-derived parity block appends ``R_block @ W`` without re-encoding
+anything already cached.  Shard execution in both the serial and the
+batched engine is a gather from this cache — ``device_rows`` maintains
+the float32 device-resident mirror the same incremental way for the
+jax/pallas batched kernel path.
+
+``parity_storage="virtual"``: nothing is materialised beyond W itself
+plus the per-row seed schedule (packed threefry counters).  Host-side
+shard execution derives the few parity rows a covering prefix actually
+uses block-by-block on demand (a tiny LRU memo keeps the hot blocks of
+a frozen plan resident — bit-identical to the materialised encode, the
+same ``R_block @ W`` call on the same block); the device path hands the
+packed counters to the generated-parity Pallas kernel
+(:func:`repro.kernels.ops.gen_parity_products`), which re-derives each
+parity tile inside the grid and contracts it against the resident W —
+no ``[W; WR]`` mirror in HBM.  At redundancy 2 this halves
+encoded-weight memory (see :meth:`CodedLinear.encoded_cache_bytes`).
 
 **Prefix planning vs execution.**  :meth:`prefix_plan` derives the
 earliest covering prefix (which coded rows, from which workers, in
@@ -46,6 +72,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 import zlib
 from typing import List, Optional
 
@@ -139,9 +166,11 @@ def prefix_plan_batch(linears, barrier) -> dict:
             raise ValueError(f"shards cover {total} < L={lin.L} rows")
         lin.ensure_parity(total - lin.L)
         rows, slices, used = _assemble_prefix(lin.L, workers, starts, stops_)
+        par = rows[rows >= lin.L] - lin.L
         plans[task.name] = PrefixPlan(
             rows=rows, slices=slices, used=used, total=total,
-            used_solve=bool((rows >= lin.L).any()))
+            used_solve=bool(par.size),
+            parity_ctrs=lin.parity_ctrs(par) if par.size else None)
     return plans
 
 
@@ -171,6 +200,10 @@ class PrefixPlan:
     used: np.ndarray            # worker columns, delivery order
     total: int                  # Σ integer shard sizes dispatched
     used_solve: bool            # parity rows in the prefix → general solve
+    #: packed threefry counters of the prefix's parity rows (rows ≥ L, in
+    #: row order) — the seed/row-block metadata frozen plans carry so
+    #: virtual-parity execution needs no encoded-row cache to replay
+    parity_ctrs: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -189,6 +222,13 @@ class LinearStep:
         return self.out
 
 
+#: how many derived / encoded parity blocks the virtual mode keeps warm —
+#: a frozen steady-state plan touches a handful of parity blocks per step,
+#: so a small LRU makes virtual serving gather-speed without growing the
+#: footprint toward the materialised cache it exists to avoid
+PARITY_BLOCK_MEMO = 4
+
+
 class CodedLinear:
     """Systematic-MDS-encoded linear layer with a persistent encoded cache.
 
@@ -196,30 +236,57 @@ class CodedLinear:
     name: label used by the bridge's step log ("head", "blk0.wq", ...).
     seed: parity-generator seed (one layer = one generator stream).
     backend: "numpy" | "jax" | "pallas" for the parity encode + decode
-    solve.
+    solve.  If jax is unavailable the layer *warns* and falls back to
+    numpy — ``requested_backend`` keeps the ask, ``backend`` the truth.
+    parity_storage: "materialized" caches ``[W; WR]`` rows; "virtual"
+    derives parity from packed threefry counters on demand (module
+    docstring).
     """
 
     def __init__(self, W: np.ndarray, *, name: str = "linear",
                  seed: int = 0, backend: str = "numpy",
-                 parity_chunk: int = 256):
+                 parity_chunk: int = 256,
+                 parity_storage: str = "materialized"):
         bk.check_backend(backend)
+        self.requested_backend = backend
         if backend != "numpy" and not bk.has_jax():
+            warnings.warn(
+                f"CodedLinear({name!r}): backend {backend!r} requested but "
+                "jax is not importable — falling back to backend='numpy' "
+                "(float64 encode/decode; slower, tighter numerics)",
+                RuntimeWarning, stacklevel=2)
             backend = "numpy"
+        if parity_storage not in ("materialized", "virtual"):
+            raise ValueError(
+                f"parity_storage must be 'materialized' or 'virtual', "
+                f"got {parity_storage!r}")
         self.W = np.asarray(W, dtype=np.float64)
         self.L, self.D = self.W.shape
         self.name = name
         self.backend = backend
         self.decode_backend = DECODE_ENGINE[backend]
         self.parity_chunk = int(parity_chunk)
-        # crc32, not hash(): parity streams must replay across processes
-        self._rng = np.random.default_rng((int(seed), 0xC0DE,
-                                           zlib.crc32(name.encode())))
-        self.R = np.zeros((0, self.L))            # parity generator rows
-        # packed encoded cache [W; WR]: rows [0, L) are W itself (the
-        # systematic prefix needs no encode), parity rows append below
-        self._enc = np.empty((self.L, self.D))
-        self._enc[:] = self.W
-        self._n_enc = self.L
+        self.parity_storage = parity_storage
+        # crc32, not hash(): parity must replay across processes.  The
+        # threefry key is the only per-layer generator state — every
+        # parity row is a pure function of (key, packed row counter).
+        self.pkey = (zlib.crc32(name.encode()) & 0xFFFFFFFF,
+                     (int(seed) ^ 0x9E3779B9) & 0xFFFFFFFF)
+        self._block_draws = {}    # block id -> conditioning-guard redraw
+        self._block_memo = {}     # block id -> derived R block (LRU)
+        self._encb_memo = {}      # block id -> encoded R_b @ W block (LRU)
+        self._n_avail = 0         # virtual mode: logical parity rows grown
+        if parity_storage == "materialized":
+            self._R = np.zeros((0, self.L))       # parity generator rows
+            # packed encoded cache [W; WR]: rows [0, L) are W itself (the
+            # systematic prefix needs no encode), parity rows append below
+            self._enc = np.empty((self.L, self.D))
+            self._enc[:] = self.W
+            self._n_enc = self.L
+        else:
+            self._R = None
+            self._enc = self.W   # systematic prefix only — a *view*, no copy
+            self._n_enc = self.L
         self.parity_redraws = 0                   # conditioning-guard hits
         self._G_cache: Optional[np.ndarray] = None
         self._dplan_memo = None                   # (rows bytes, DecodePlan)
@@ -228,12 +295,28 @@ class CodedLinear:
         self._n_dev = 0
 
     @property
+    def R(self) -> np.ndarray:
+        """Materialised parity generator rows (use :meth:`parity_rows` for
+        storage-agnostic access)."""
+        if self._R is None:
+            raise RuntimeError(
+                f"CodedLinear({self.name!r}): parity_storage='virtual' keeps "
+                "no dense R — gather rows via parity_rows(ids)")
+        return self._R
+
+    @property
     def WR(self) -> np.ndarray:
         """Encoded parity rows — a view into the packed cache."""
+        if self.parity_storage != "materialized":
+            raise RuntimeError(
+                f"CodedLinear({self.name!r}): parity_storage='virtual' keeps "
+                "no [W; WR] cache — gather via gather_encoded(rows)")
         return self._enc[self.L:self._n_enc]
 
     @property
     def n_parity(self) -> int:
+        if self.parity_storage == "virtual":
+            return self._n_avail
         return self._n_enc - self.L
 
     # -- encoding ------------------------------------------------------------
@@ -260,27 +343,86 @@ class CodedLinear:
             grown[:self._n_enc] = self._enc[:self._n_enc]
             self._enc = grown
 
-    def ensure_parity(self, n_parity: int) -> None:
-        """Grow the encoded parity block to ≥ ``n_parity`` rows.
+    @staticmethod
+    def _memo_put(memo: dict, key: int, val: np.ndarray) -> None:
+        """Tiny insertion-order LRU (dicts iterate oldest-first)."""
+        memo.pop(key, None)
+        memo[key] = val
+        while len(memo) > PARITY_BLOCK_MEMO:
+            memo.pop(next(iter(memo)))
 
-        Each fresh chunk passes the :func:`repro.core.mds.parity_cond`
-        conditioning guard (a collapsed singular spectrum is the symptom
-        of every degenerate decode minor) — a degenerate draw is redrawn
-        from the same seeded stream, so replay stays deterministic."""
+    def _derive_block(self, b: int) -> np.ndarray:
+        """Derive parity block ``b`` (``parity_chunk`` rows) from counters.
+
+        Pure function of ``(pkey, b)``: the conditioning-guard redraw index
+        is found by bumping the counter's draw byte until the block passes
+        :func:`repro.core.mds.parity_cond` — the *same* deterministic walk
+        regardless of when, or in what growth order, the block is first
+        needed.  That growth-history independence is the replay bug fix:
+        the old sequential ``default_rng`` stream gave row r different
+        values depending on how the cache had grown before it."""
+        blk = self._block_memo.get(b)
+        if blk is not None:
+            self._memo_put(self._block_memo, b, blk)   # refresh LRU slot
+            return blk
+        ids = np.arange(b * self.parity_chunk, (b + 1) * self.parity_chunk)
+        draw = self._block_draws.get(b)
+        if draw is None:
+            draw = 0
+            blk = mds.counter_parity_rows(
+                self.pkey, mds.parity_counters(ids, draw), self.L)
+            while mds.parity_cond(blk) > mds.PARITY_COND_LIMIT:
+                draw += 1
+                self.parity_redraws += 1
+                blk = mds.counter_parity_rows(
+                    self.pkey, mds.parity_counters(ids, draw), self.L)
+            self._block_draws[b] = draw
+        else:
+            blk = mds.counter_parity_rows(
+                self.pkey, mds.parity_counters(ids, draw), self.L)
+        self._memo_put(self._block_memo, b, blk)
+        return blk
+
+    def _encoded_block(self, b: int) -> np.ndarray:
+        """Encoded parity block ``R_b @ W`` (virtual mode, memoised).
+
+        Always encodes the *full* aligned block in one ``_encode_parity``
+        call — the identical dgemm the materialised growth path issues for
+        the same block, so gathered rows are bit-equal across modes."""
+        enc = self._encb_memo.get(b)
+        if enc is None:
+            enc = self._encode_parity(self._derive_block(b))
+        self._memo_put(self._encb_memo, b, enc)
+        return enc
+
+    def ensure_parity(self, n_parity: int) -> None:
+        """Grow the available parity region to ≥ ``n_parity`` rows.
+
+        Materialised: derive + encode whole ``parity_chunk`` blocks and
+        append them to the packed ``[W; WR]`` cache.  Virtual: only the
+        logical row count grows — derivation happens lazily per gathered
+        block.  Either way each block passes the
+        :func:`repro.core.mds.parity_cond` conditioning guard (a collapsed
+        singular spectrum is the symptom of every degenerate decode minor)
+        via a deterministic redraw-index walk."""
         tr = current_tracer()
         if tr is not None:
-            # hit/miss of the persistent [W; WR] cache: a miss pays a
-            # parity draw + encode, a hit is a pure row gather
+            # hit/miss of the persistent encoded cache: a miss pays a
+            # parity derivation (+ encode when materialised), a hit is a
+            # pure row gather
             tr.count("encode_cache_hits" if self.n_parity >= n_parity
                      else "encode_cache_misses")
+        if self.parity_storage == "virtual":
+            if n_parity > self._n_avail:
+                if tr is not None:
+                    tr.count("encode_cache_miss_rows",
+                             n_parity - self._n_avail)
+                self._n_avail = n_parity
+                self._G_cache = None
+            return
         while self.n_parity < n_parity:
-            R_new = self._rng.normal(0.0, 1.0 / np.sqrt(self.L),
-                                     size=(self.parity_chunk, self.L))
-            while mds.parity_cond(R_new) > mds.PARITY_COND_LIMIT:
-                self.parity_redraws += 1
-                R_new = self._rng.normal(0.0, 1.0 / np.sqrt(self.L),
-                                         size=(self.parity_chunk, self.L))
-            self.R = np.concatenate([self.R, R_new])
+            R_new = self._derive_block(self.n_parity // self.parity_chunk)
+            self._R = np.concatenate([self._R, R_new])
             enc = self._encode_parity(R_new)
             self._grow_enc(enc.shape[0])
             self._enc[self._n_enc:self._n_enc + enc.shape[0]] = enc
@@ -289,23 +431,129 @@ class CodedLinear:
             if tr is not None:
                 tr.count("encode_cache_miss_rows", enc.shape[0])
 
+    # -- storage-agnostic parity access --------------------------------------
+
+    def parity_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Generator parity rows R[ids] (float64), either storage mode.
+
+        ``ids`` are 0-based indices into the parity region (absolute coded
+        row minus L).  Materialised mode slices the dense R; virtual mode
+        derives the covering blocks (memoised).  Bit-identical between the
+        modes — both ultimately come from the same counter derivation."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if self.parity_storage == "materialized":
+            self.ensure_parity(int(ids.max()) + 1 if ids.size else 0)
+            return self._R[ids]
+        out = np.empty((ids.size, self.L))
+        for b in np.unique(ids // self.parity_chunk):
+            m = (ids // self.parity_chunk) == b
+            out[m] = self._derive_block(int(b))[ids[m] % self.parity_chunk]
+        return out
+
+    def parity_ctrs(self, ids: np.ndarray) -> np.ndarray:
+        """Packed threefry counters for parity rows ``ids`` — the only
+        per-row metadata a frozen plan (or the generated-parity kernel)
+        needs.  Deriving them walks the covering blocks' conditioning
+        guards, so the redraw byte is already folded in."""
+        ids = np.asarray(ids, dtype=np.int64)
+        blocks = ids // self.parity_chunk
+        for b in np.unique(blocks):
+            if int(b) not in self._block_draws:
+                self._derive_block(int(b))
+        draws = np.asarray([self._block_draws[int(b)] for b in blocks],
+                           dtype=np.int64)
+        return mds.parity_counters(ids, draws)
+
+    def gather_encoded(self, rows: np.ndarray,
+                       out: Optional[np.ndarray] = None) -> np.ndarray:
+        """Encoded weight rows ``[W; WR][rows]`` (float64), either mode.
+
+        The one gather primitive both execution engines use.  Materialised:
+        a fancy-index into the packed cache.  Virtual: systematic rows come
+        straight from W and parity rows from memoised per-block encodes —
+        the same full-block dgemm the materialised path ran, so the bits
+        match across modes."""
+        rows = np.asarray(rows)
+        if self.parity_storage == "materialized":
+            if out is None:
+                return self._enc[:self._n_enc][rows]
+            np.take(self._enc[:self._n_enc], rows, axis=0, out=out)
+            return out
+        if out is None:
+            out = np.empty((rows.size, self.D))
+        sys_m = rows < self.L
+        if sys_m.any():
+            out[sys_m] = self.W[rows[sys_m]]
+        pids = rows[~sys_m] - self.L
+        if pids.size:
+            pout = np.empty((pids.size, self.D))
+            for b in np.unique(pids // self.parity_chunk):
+                m = (pids // self.parity_chunk) == b
+                pout[m] = self._encoded_block(int(b))[
+                    pids[m] % self.parity_chunk]
+            out[~sys_m] = pout
+        return out
+
+    def encoded_cache_bytes(self) -> int:
+        """Resident encoded-weight bytes (host + device) beyond the model.
+
+        Materialised counts the packed ``[W; WR]`` buffer (full capacity),
+        the dense R, and the float32 device mirrors; virtual counts only
+        the LRU block memos and the float32 device W — its host systematic
+        prefix is a *view* of W, not a copy.  The benchmark gate holds the
+        virtual/materialised ratio ≤ 0.55 at redundancy 2."""
+        n = 0
+        if self.parity_storage == "materialized":
+            n += self._enc.nbytes + self._R.nbytes
+            if self._enc_dev is not None:
+                n += self._n_dev * self.D * 4
+        else:
+            n += sum(b.nbytes for b in self._block_memo.values())
+            n += sum(b.nbytes for b in self._encb_memo.values())
+        if self._W_dev is not None:
+            n += self.L * self.D * 4
+        return n
+
+    def device_W(self):
+        """Float32 device-resident W — the operand the generated-parity
+        kernel contracts counter-derived tiles against (uploaded once)."""
+        import jax.numpy as jnp
+        if self._W_dev is None:
+            self._W_dev = jnp.asarray(self.W, jnp.float32)
+        return self._W_dev
+
     def generator(self, L_tilde: int) -> np.ndarray:
-        """The systematic generator [I; R] truncated to ``L_tilde`` rows."""
+        """The systematic generator [I; R] truncated to ``L_tilde`` rows.
+
+        Materialises the dense generator — virtual-mode decode planning
+        avoids this via :class:`repro.stream.backend.SystematicRows`, but
+        the dense form stays available for reference/verify paths."""
         self.ensure_parity(max(L_tilde - self.L, 0))
         if self._G_cache is None or self._G_cache.shape[0] < L_tilde:
-            self._G_cache = np.concatenate([np.eye(self.L), self.R])
+            n_par = max(L_tilde - self.L, 0)
+            R = (self._R if self.parity_storage == "materialized"
+                 else self.parity_rows(np.arange(n_par)))
+            self._G_cache = np.concatenate([np.eye(self.L), R])
         return self._G_cache[:L_tilde]
 
     def encoded_rows(self, rows: np.ndarray) -> np.ndarray:
         """Gather encoded weight rows from the packed cache."""
-        return self._enc[:self._n_enc][np.asarray(rows)]
+        return self.gather_encoded(rows)
 
     def device_rows(self, n_rows: int):
         """Float32 device-resident ``[W; WR]`` prefix of ``n_rows`` rows.
 
         Uploaded once and grown *incrementally*: only parity rows encoded
         since the last call transfer to the device — the persistent cache
-        the batched kernel path gathers its shard tiles from."""
+        the batched kernel path gathers its shard tiles from.  Virtual
+        storage keeps no such mirror (the generated-parity kernel derives
+        parity in-grid against :meth:`device_W`), so this raises there."""
+        if self.parity_storage != "materialized":
+            raise RuntimeError(
+                f"CodedLinear({self.name!r}): parity_storage='virtual' "
+                "keeps no device [W; WR] mirror — the batched device path "
+                "uses device_W() + parity_ctrs() with the generated-parity "
+                "kernel instead")
         import jax.numpy as jnp
         self.ensure_parity(max(n_rows - self.L, 0))
         tr = current_tracer()
@@ -398,8 +646,11 @@ class CodedLinear:
         stops_ = starts + l_act[picked]
         rows, slices, used = _assemble_prefix(self.L, active[picked],
                                               starts, stops_)
+        par = rows[rows >= self.L] - self.L
         return PrefixPlan(rows=rows, slices=slices, used=used, total=total,
-                          used_solve=bool((rows >= self.L).any()))
+                          used_solve=bool(par.size),
+                          parity_ctrs=self.parity_ctrs(par)
+                          if par.size else None)
 
     # -- decode --------------------------------------------------------------
 
@@ -413,8 +664,14 @@ class CodedLinear:
         if self._dplan_memo is not None and self._dplan_memo[0] == key:
             return self._dplan_memo[1]
         total = max(int(rows.max()) + 1, self.L)
-        plan = bk.plan_decode(self.generator(total), rows[None],
-                              identity_prefix=True)
+        if self.parity_storage == "virtual":
+            # lazy-row generator adapter: the planner gathers only the
+            # parity rows the mixed groups actually solve with — the dense
+            # (total, L) G is never formed
+            G = bk.SystematicRows(self.L, total, self.parity_rows)
+        else:
+            G = self.generator(total)
+        plan = bk.plan_decode(G, rows[None], identity_prefix=True)
         self._dplan_memo = (key, plan)
         return plan
 
@@ -441,14 +698,13 @@ class CodedLinear:
             with ctx:
                 plan = self.prefix_plan(l_int, finish, t_complete,
                                         assign=assign)
-        enc = self._enc[:self._n_enc]
         # the per-worker shard execution: each node's encoded rows × X
         ctx = tr.span(f"product:{self.name}", cat="kernel",
                       args={"rows": int(plan.rows.size),
                             "workers": int(plan.used.size)}) \
             if tr is not None else contextlib.nullcontext()
         with ctx:
-            y = np.concatenate([shard_products(enc[sl], X)
+            y = np.concatenate([shard_products(self.gather_encoded(sl), X)
                                 for sl in plan.slices])       # (L, B)
         # decode_plan / apply time themselves (repro.stream.backend spans)
         z = self.decode_plan(plan.rows).apply(
@@ -485,6 +741,8 @@ class CodedLMHead(CodedLinear):
     """
 
     def __init__(self, W: np.ndarray, *, seed: int = 0,
-                 backend: str = "numpy", parity_chunk: int = 256):
+                 backend: str = "numpy", parity_chunk: int = 256,
+                 parity_storage: str = "materialized"):
         super().__init__(W, name="head", seed=seed, backend=backend,
-                         parity_chunk=parity_chunk)
+                         parity_chunk=parity_chunk,
+                         parity_storage=parity_storage)

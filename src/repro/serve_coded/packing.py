@@ -84,13 +84,16 @@ class PackedShards:
         counts = np.array([p.rows.size for p in self.problems])
         self.offsets = np.concatenate([[0], np.cumsum(counts)])
         self.total = int(self.offsets[-1])
-        # the packed host buffer: one gather per problem's cache, X-free
+        # the packed host buffer: one storage-agnostic gather per problem
+        # (materialised: the packed [W; WR] cache; virtual: W rows + the
+        # memoised per-block counter-derived encodes — same bits)
         self.W_packed = np.empty((self.total, self.D))
         for i, p in enumerate(self.problems):
-            enc = p.linear._enc
-            np.take(enc[:p.linear._n_enc], p.rows, axis=0,
-                    out=self.W_packed[self.offsets[i]:self.offsets[i + 1]])
+            p.linear.gather_encoded(
+                p.rows,
+                out=self.W_packed[self.offsets[i]:self.offsets[i + 1]])
         self._tiles = None
+        self._gen_specs = None
 
     # -- host one-pass execution (float64, bit-identical to serial) ---------
 
@@ -124,12 +127,25 @@ class PackedShards:
     def device_tiles(self):
         """(T, tile, Dp) float32 device tiles of the packed rows, gathered
         from each layer's incremental device cache (zero rows pad the last
-        tile; Dp pads D to the 128-lane MXU width)."""
+        tile; Dp pads D to the 128-lane MXU width).
+
+        Virtual-parity problems gather only their *systematic* lanes from
+        the device-resident W; parity lanes are zeroed here and their
+        products written by the generated-parity kernel at execution time
+        (:meth:`products_device`) — no ``[W; WR]`` mirror ever exists."""
         import jax.numpy as jnp
         parts = []
         for p in self.problems:
-            n = max(int(p.rows.max()) + 1, p.linear.L)
-            parts.append(p.linear.device_rows(n)[np.asarray(p.rows)])
+            r = np.asarray(p.rows)
+            if p.linear.parity_storage == "virtual":
+                sys_m = r < p.linear.L
+                gat = jnp.asarray(np.where(sys_m, r, 0))
+                part = p.linear.device_W()[gat]
+                parts.append(part * jnp.asarray(
+                    sys_m[:, None].astype(np.float32)))
+            else:
+                n = max(int(r.max()) + 1, p.linear.L)
+                parts.append(p.linear.device_rows(n)[r])
         packed = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
         lanes = self.n_tiles * self.tile
         Dp = -(-self.D // 128) * 128
@@ -150,12 +166,31 @@ class PackedShards:
         from ..kernels import ops
         if self._tiles is None:
             self._tiles = self.device_tiles()
+        if self._gen_specs is None:
+            # virtual-parity lane specs, frozen once per pack: the flat
+            # tile-space lane, its packed threefry counter, and the layer
+            # key/W the generated kernel derives the row from
+            self._gen_specs = []
+            for i, p in enumerate(self.problems):
+                if p.linear.parity_storage != "virtual":
+                    continue
+                r = np.asarray(p.rows)
+                par_pos = np.nonzero(r >= p.linear.L)[0]
+                if not par_pos.size:
+                    continue
+                self._gen_specs.append(ops.GeneratedParity(
+                    lanes=self.offsets[i] + par_pos,
+                    ctrs=p.linear.parity_ctrs(r[par_pos] - p.linear.L),
+                    key=p.linear.pkey,
+                    w=p.linear.device_W()))
         X = np.asarray(X, dtype=np.float64)
         Dp = self._tiles.shape[-1]
         Xp = jnp.pad(jnp.asarray(X.T, jnp.float32), ((0, Dp - self.D),
                                                      (0, 0)))
         Y = ops.coded_shard_matmul_batch(
             self._tiles, Xp, mode="pallas" if backend == "pallas" else "vmap",
+            parity_mode="generated" if self._gen_specs else "materialized",
+            parity=self._gen_specs or None,
             interpret=interpret)
         flat = np.asarray(Y, dtype=np.float64).reshape(-1, X.shape[0])
         return [flat[self.offsets[i]:self.offsets[i + 1]]
@@ -175,8 +210,10 @@ class _DecodeGroup:
     .plan_decode` builds — received systematic rows pin coordinates, the
     (L−s)-sized parity block solves the rest — specialised to the serving
     layout: the systematic generator is ``[I; R]`` by construction, so the
-    parity sub-blocks gather straight from each layer's ``R`` (no dense
-    generator), and every index set is one fancy-index array.  Per-item
+    parity sub-blocks gather straight from each layer's parity rows
+    (:meth:`CodedLinear.parity_rows` — dense-R slice or counter
+    derivation, no dense generator), and every index set is one
+    fancy-index array.  Per-item
     solve inputs are value-identical to the serial engine's, and LAPACK's
     ``gesv`` is deterministic per matrix, so the decoded outputs match the
     serial path bit-for-bit on numpy regardless of how tasks are stacked.
@@ -207,12 +244,16 @@ class _DecodeGroup:
             known[sys_rows] = True
             unk = np.nonzero(~known)[0]
             self.unk = unk[None]
-            # parity generator sub-blocks, straight from the layer's R —
-            # no (n, L) intermediate, just the two needed column gathers
-            R = problems[sel[0]].linear.R
+            # parity generator sub-blocks via the storage-agnostic row
+            # gather (materialised: a dense-R slice; virtual: the counter
+            # derivation) — then the two needed column gathers
             pr = r[par_pos] - L
-            self.Gk = R[pr[:, None], sys_rows[None, :]][None]
-            self.lu = bk.StackedLU(R[pr[:, None], unk[None, :]][None])
+            Rr = problems[sel[0]].linear.parity_rows(pr)
+            # single-axis fancy column gathers come out F-ordered; the
+            # serial engine's blocks are C-ordered, and BLAS results are
+            # layout-sensitive at the last bit — copy to C for bit-parity
+            self.Gk = np.ascontiguousarray(Rr[:, sys_rows])[None]
+            self.lu = bk.StackedLU(np.ascontiguousarray(Rr[:, unk])[None])
             return
         m_sys = rows < L
         self.sys_pos = np.nonzero(m_sys)[1].reshape(gs, s)
@@ -222,14 +263,14 @@ class _DecodeGroup:
         known = np.zeros((gs, L), dtype=bool)
         known[np.arange(gs)[:, None], self.sys_rows] = True
         self.unk = np.nonzero(~known)[1].reshape(gs, L - s)
+        Rg = [problems[i].linear.parity_rows(par_rows[j] - L)
+              for j, i in enumerate(sel)]
         self.Gk = np.stack(
-            [problems[i].linear.R[(par_rows[j] - L)[:, None],
-                                  self.sys_rows[j][None, :]]
-             for j, i in enumerate(sel)])                   # (gs, L-s, s)
+            [Rg[j][:, self.sys_rows[j]]
+             for j in range(gs)])                           # (gs, L-s, s)
         self.lu = bk.StackedLU(np.stack(
-            [problems[i].linear.R[(par_rows[j] - L)[:, None],
-                                  self.unk[j][None, :]]
-             for j, i in enumerate(sel)]))                  # (gs, L-s, L-s)
+            [Rg[j][:, self.unk[j]]
+             for j in range(gs)]))                          # (gs, L-s, L-s)
 
     def apply(self, yg: np.ndarray, z: np.ndarray, solve) -> None:
         """Decode this group's slice of the stacked products into ``z``.

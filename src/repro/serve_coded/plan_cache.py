@@ -42,6 +42,15 @@ class StepPlan:
     never mutated afterwards — barrier tasks hold row *views* into them.
     ``plans``/``stages`` are filled lazily by whichever execution engine
     runs first and reused by every later step while the entry is current.
+
+    Parity metadata: each frozen ``PrefixPlan`` carries the packed
+    threefry counters (``parity_ctrs`` — row index | redraw << 24) of its
+    parity rows, stamped at plan time.  That is the *complete* seed
+    schedule virtual-parity execution needs — replaying a frozen plan
+    re-derives identical parity rows from the counters alone, with no
+    encoded-row cache and no dependence on the layer's growth history
+    (the counter derivation is what makes these entries safely
+    freezable).  :meth:`parity_ctrs` collects them per task.
     """
     keys: List[str]
     l_ints: np.ndarray                 # (T, N+1) int64 shard splits
@@ -50,6 +59,14 @@ class StepPlan:
     plans: Optional[Dict[str, Any]] = None      # name -> PrefixPlan
     stages: Dict[Tuple[str, ...], Any] = dataclasses.field(
         default_factory=dict)                   # stage key -> PackedStage
+
+    def parity_ctrs(self) -> Dict[str, np.ndarray]:
+        """Per-task packed parity-row counters frozen into this entry
+        (tasks whose covering prefix used no parity rows are omitted)."""
+        if not self.plans:
+            return {}
+        return {name: p.parity_ctrs for name, p in self.plans.items()
+                if getattr(p, "parity_ctrs", None) is not None}
 
 
 class StepPlanCache:

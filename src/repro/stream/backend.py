@@ -61,6 +61,10 @@ __all__ = [
     "decode_batch",
     "plan_decode",
     "DecodePlan",
+    "SystematicRows",
+    "plan_decode_ls",
+    "LSDecodePlan",
+    "decode_ls_batch",
     "solve_stacked",
     "solve_jax",
     "StackedLU",
@@ -589,6 +593,48 @@ def solve_stacked(A: np.ndarray, b: np.ndarray) -> np.ndarray:
     return np.linalg.solve(A, b)
 
 
+class SystematicRows:
+    """Lazy row-view of a systematic generator ``[I; R]`` — no dense G.
+
+    Virtual parity storage keeps no materialised generator; what decode
+    planning actually consumes is *rows* of G (the mixed groups' square
+    minors, the full-solve gathers).  This adapter satisfies exactly that:
+    ``take(rows)`` synthesises identity rows for indices < L and asks
+    ``parity_rows_fn(ids)`` (e.g. :meth:`CodedLinear.parity_rows`, the
+    counter derivation) for the rest.  ``plan_decode`` accepts it wherever
+    a shared 2-D generator is accepted; the identity prefix holds by
+    construction.
+    """
+
+    __slots__ = ("L", "total", "parity_rows_fn")
+    ndim = 2
+
+    def __init__(self, L: int, total: int, parity_rows_fn):
+        self.L = int(L)
+        self.total = int(total)
+        self.parity_rows_fn = parity_rows_fn
+
+    @property
+    def shape(self):
+        return (self.total, self.L)
+
+    def take(self, rows: np.ndarray) -> np.ndarray:
+        """Gather G[rows] (float64) for any integer index array — the
+        result has shape ``rows.shape + (L,)``."""
+        rows = np.asarray(rows)
+        flat = rows.ravel()
+        out = np.zeros((flat.size, self.L))
+        sys_m = flat < self.L
+        out[np.nonzero(sys_m)[0], flat[sys_m]] = 1.0
+        if (~sys_m).any():
+            out[~sys_m] = np.asarray(
+                self.parity_rows_fn(flat[~sys_m] - self.L), dtype=np.float64)
+        return out.reshape(rows.shape + (self.L,))
+
+    def __getitem__(self, rows):
+        return self.take(rows)
+
+
 def _identity_prefix(G: np.ndarray) -> bool:
     """True iff the generator's (shared) top L rows are exactly I_L."""
     L = G.shape[-1]
@@ -721,7 +767,7 @@ def plan_decode(G, rows: np.ndarray, *, systematic: str = "auto",
     t0 = tr.now() if tr is not None else 0.0
     rows = np.asarray(rows)
     glist = isinstance(G, (list, tuple))
-    if not glist:
+    if not glist and not isinstance(G, SystematicRows):
         G = np.asarray(G, dtype=np.float64)
     B, L = rows.shape
 
@@ -729,6 +775,8 @@ def plan_decode(G, rows: np.ndarray, *, systematic: str = "auto",
     if systematic != "never" and B:
         if identity_prefix is not None:
             sys_ok = bool(identity_prefix)
+        elif isinstance(G, SystematicRows):
+            sys_ok = True            # systematic by construction
         else:
             sys_ok = (all(_identity_prefix(np.asarray(g)) for g in G)
                       if glist else _identity_prefix(G))
@@ -815,3 +863,97 @@ def decode_batch(G: np.ndarray, rows: np.ndarray, y: np.ndarray,
     return plan_decode(G, rows, systematic=systematic,
                        identity_prefix=identity_prefix).apply(
                            y, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Batched least-squares decode (> L received rows)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _lstsq_jit():
+    import jax
+    import jax.numpy as jnp
+    return jax.jit(jax.vmap(lambda A, y: jnp.linalg.lstsq(A, y)[0]))
+
+
+class LSDecodePlan:
+    """X-independent structure of a stacked *least-squares* decode.
+
+    The exact :class:`DecodePlan` consumes exactly L rows per task; when a
+    prefix delivered R > L rows (extra parity arrived before the cut), the
+    overdetermined solve averages out the float32 encode noise of the
+    jax/pallas product path instead of discarding the surplus — the
+    streaming analogue of :func:`repro.core.mds.decode_ls`.  Gathered
+    generator blocks are frozen at plan time; ``apply`` re-solves per
+    right-hand side.  The numpy engine is *literally* a per-task
+    ``np.linalg.lstsq`` sweep, so it is bit-identical to the reference by
+    construction; jax runs a vmapped jitted ``jnp.linalg.lstsq``.
+    """
+
+    __slots__ = ("B", "L", "Gs")
+
+    def __init__(self, B: int, L: int, Gs: np.ndarray):
+        self.B = B
+        self.L = L
+        self.Gs = Gs                     # (B, R, L) gathered generator rows
+
+    def apply(self, y: np.ndarray, *, backend: str = "numpy") -> np.ndarray:
+        """Least-squares solve for stacked received results ``y`` of shape
+        (B, R) or (B, R, C) → (B, L[, C])."""
+        check_backend(backend)
+        tr = current_tracer()
+        t0 = tr.now() if tr is not None else 0.0
+        y = np.asarray(y, dtype=np.float64)
+        squeeze = y.ndim == 2
+        if squeeze:
+            y = y[..., None]
+        if _use_jax(backend):
+            import jax
+            try:
+                with jax.experimental.enable_x64():
+                    out = np.asarray(_lstsq_jit()(self.Gs, y),
+                                     dtype=np.float64)
+            except Exception:     # pragma: no cover - lstsq not vmappable
+                out = self._apply_np(y)
+        else:
+            out = self._apply_np(y)
+        if tr is not None:
+            tr.add_span("decode_ls_apply", t0, tr.now(), cat="decode",
+                        track="wall",
+                        args={"tasks": self.B, "L": self.L,
+                              "rows": int(self.Gs.shape[1]),
+                              "backend": backend})
+        return out[..., 0] if squeeze else out
+
+    def _apply_np(self, y: np.ndarray) -> np.ndarray:
+        out = np.empty((self.B, self.L, y.shape[-1]))
+        for b in range(self.B):
+            out[b], *_ = np.linalg.lstsq(self.Gs[b], y[b], rcond=None)
+        return out
+
+
+def plan_decode_ls(G, rows: np.ndarray) -> LSDecodePlan:
+    """Build the :class:`LSDecodePlan` for stacked received rows (B, R),
+    R ≥ L.  ``G`` accepts the same forms as :func:`plan_decode` —
+    including :class:`SystematicRows` for virtual parity."""
+    rows = np.asarray(rows)
+    glist = isinstance(G, (list, tuple))
+    B, R = rows.shape
+    if glist:
+        L = np.asarray(G[0]).shape[-1]
+    else:
+        L = G.shape[-1]
+    if R < L:
+        raise ValueError(f"least-squares decode needs >= L={L} rows per "
+                         f"task, got {R}")
+    if not glist and not isinstance(G, SystematicRows):
+        G = np.asarray(G, dtype=np.float64)
+    Gs = _gather_generator_rows(G, glist, np.arange(B), rows)
+    return LSDecodePlan(B, int(L), np.asarray(Gs, dtype=np.float64))
+
+
+def decode_ls_batch(G, rows: np.ndarray, y: np.ndarray,
+                    *, backend: str = "numpy") -> np.ndarray:
+    """Least-squares decode of B tasks from ≥ L received rows each —
+    the composition ``plan_decode_ls(G, rows).apply(y)``."""
+    return plan_decode_ls(G, rows).apply(y, backend=backend)

@@ -198,29 +198,35 @@ def test_parity_cond_flags_degenerate_blocks():
     assert mds.parity_cond(np.zeros((0, 8))) == 1.0
 
 
-def test_ensure_parity_redraws_degenerate_chunk():
+def test_ensure_parity_redraws_degenerate_chunk(monkeypatch):
+    # rig the counter derivation: draw 0 of every block is rank-1, so the
+    # conditioning guard must bump the redraw byte deterministically
+    real = mds.counter_parity_rows
+
+    def rigged(key, ctrs, L, **kw):
+        if not (np.asarray(ctrs, dtype=np.uint32) >> 24).any():
+            return np.ones((np.asarray(ctrs).size, L)) * 0.1   # draw 0
+        return real(key, ctrs, L, **kw)
+
+    monkeypatch.setattr(mds, "counter_parity_rows", rigged)
     lin = CodedLinear(np.eye(16), name="guard", seed=0, parity_chunk=16)
-
-    class RiggedRng:
-        def __init__(self, inner):
-            self.inner = inner
-            self.calls = 0
-
-        def normal(self, *a, **kw):
-            self.calls += 1
-            if self.calls == 1:                       # first chunk: rank-1
-                return np.ones(kw["size"])
-            return self.inner.normal(*a, **kw)
-
-    lin._rng = RiggedRng(np.random.default_rng(7))
     lin.ensure_parity(16)
     assert lin.parity_redraws >= 1
     assert mds.parity_cond(lin.R) < mds.PARITY_COND_LIMIT
+    # the redraw index is part of the packed counter (high byte), so the
+    # frozen plan metadata replays the *redrawn* rows
+    assert (lin.parity_ctrs(np.arange(16)) >> 24 >= 1).all()
     # decode through the redrawn parity block stays exact
     X = np.random.default_rng(8).normal(size=(2, 16))
     res = lin.step(X, np.array([8, 24]), np.array([5.0, 1.0]), 6.0)
     assert res.used_solve
     np.testing.assert_allclose(res.out, X @ lin.W.T, atol=1e-9)
+    # a virtual-mode twin walks the identical deterministic guard and
+    # derives bit-identical rows despite never materialising the cache
+    vlin = CodedLinear(np.eye(16), name="guard", seed=0, parity_chunk=16,
+                      parity_storage="virtual")
+    assert np.array_equal(vlin.parity_rows(np.arange(16)), lin.R)
+    assert vlin.parity_redraws >= 1
 
 
 def test_per_scope_decode_error_stays_bounded():
