@@ -31,10 +31,18 @@ attribution table and the disabled-tracer throughput ratio into the
 JSON's ``trace`` section (``--trace out.json`` additionally writes the
 Chrome/Perfetto trace itself).
 
+A seeded chaos pass (``--faults SPEC``) then serves the same workload on
+the trunk/batched cell under fault injection and records the ``faults``
+section: corruption detection / localisation rates, quarantine and
+readmission counts, the decode-mode histogram, the chaos token-match
+rate against the clean serve (asserted 1.0 unless steps explicitly
+degraded), plus the fault-free-schedule and LS-tail token-identity
+checks CI floors at 1.0.
+
     PYTHONPATH=src python -m benchmarks.serve_bench \
         [--requests 24] [--gen-len 8] [--slots 2] [--rate 0.02] \
         [--backend numpy] [--steps-per-dispatch 1] [--reps 3] [--seed 0] \
-        [--trace out.json]
+        [--trace out.json] [--faults corrupt=0.25,kind=sign_flip,...]
 """
 from __future__ import annotations
 
@@ -79,6 +87,8 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
                     backend: str = "numpy", steps_per_dispatch: int = 1,
                     reps: int = 3, seed: int = 0,
                     trace: str | None = None,
+                    faults: str = "corrupt=0.25,kind=sign_flip,crash=0.05,"
+                                  "retries=4,seed=5",
                     json_path: str | None = None) -> dict:
     churn = _default_churn()
     per_policy = {}
@@ -138,6 +148,8 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
         trep = tbridge.serve(reqs, churn=churn)       # warm the engine
         assert trep.tokens == vrep.tokens    # engines + verify agree
         timers[(scope, execution)] = tbridge
+        if (scope, execution) == ("trunk", "batched"):
+            clean_tokens = {r: list(t) for r, t in vrep.tokens.items()}
     # serving-configuration timing, reps round-robined across the cells
     # so a noise burst on a shared CI runner degrades every cell alike —
     # the cross-scope wall ratios stay comparable even when absolute
@@ -206,6 +218,62 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
         "trace_path": trace,
     }
 
+    # chaos pass: a seeded fault schedule on the trunk/batched cell must
+    # detect every applied corruption, quarantine the culprits and decode
+    # back to the fault-free token stream (or explicitly degrade — never
+    # silently wrong).  Three sub-checks feed the JSON's ``faults``
+    # section: the chaos serve itself, the fault-free-schedule identity
+    # (zero rates, detection armed) and the LS-tail decode parity.
+    from repro.faults import FaultConfig, parse_fault_spec
+
+    def _fault_bridge(**kw):
+        fb = CodedServingBridge(
+            masters=masters, backend=backend,
+            config=StreamConfig(admission=AdmissionConfig(policy="edf"),
+                                rng=seed),
+            slots_per_master=slots, coding_scope="trunk",
+            steps_per_dispatch=steps_per_dispatch, execution="batched",
+            **kw)
+        fb._setup_model(prompt_len + gen_len + 8)
+        return fb
+
+    def _tokens_match(rep) -> float:
+        got = {r: list(t) for r, t in rep.tokens.items()}
+        n = max(len(clean_tokens), 1)
+        return sum(1 for r, t in clean_tokens.items()
+                   if got.get(r) == t) / n
+
+    frep = _fault_bridge(faults=parse_fault_spec(faults)).serve(
+        reqs, churn=churn)
+    fstat = frep.faults or {}
+    fmodes = frep.decode_modes or {}
+    degraded = int(fmodes.get("degraded", 0))
+    chaos_match = _tokens_match(frep)
+    # never silently wrong: every token either matches the clean serve or
+    # came from a step explicitly reported as degraded
+    assert chaos_match == 1.0 or degraded > 0, (chaos_match, fmodes)
+    zrep = _fault_bridge(faults=FaultConfig(seed=seed)).serve(
+        reqs, churn=churn)
+    lrep = _fault_bridge(ls_tail=True).serve(reqs, churn=churn)
+    faults_row = {
+        "spec": faults,
+        "scope": "trunk", "execution": "batched",
+        "fault_free_token_identity": _tokens_match(zrep),
+        "ls_tail_token_identity": _tokens_match(lrep),
+        "token_match_rate": round(chaos_match, 4),
+        "detection_rate": round(fstat.get("detection_rate", 1.0), 4),
+        "localization_rate": round(fstat.get("localization_rate", 1.0), 4),
+        "injected": int(fstat.get("injected", 0)),
+        "corrupt_applied": int(fstat.get("corrupt_applied", 0)),
+        "quarantines": int(fstat.get("quarantines", 0)),
+        "readmissions": int(fstat.get("readmissions", 0)),
+        "retries": int(fstat.get("retries", 0)),
+        "rows_rejected": int(fstat.get("rows_rejected", 0)),
+        "false_flags": int(fstat.get("false_flags", 0)),
+        "degraded_steps": degraded,
+        "decode_modes": fmodes,
+    }
+
     base = per_policy["fifo"]
     head_b = per_scope["head"]["batched"]
     trunk_b = per_scope["trunk"]["batched"]
@@ -240,6 +308,7 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
                                ["tokens_per_wall_second"], 1e-12), 3)
             for scope in CODING_SCOPES},
         "trace": trace_row,
+        "faults": faults_row,
     }
     path = json_out
     with open(path, "w") as f:
@@ -257,6 +326,8 @@ def run_serve_bench(requests: int = 24, gen_len: int = 8, masters: int = 2,
          f"stage_coverage={trace_row['stage_coverage']};"
          f"tracing_off_ratio="
          f"{trace_row['tracing_off_throughput_ratio']};"
+         f"fault_detection={faults_row['detection_rate']};"
+         f"fault_token_match={faults_row['token_match_rate']};"
          f"json={path}")
     return record
 
@@ -277,12 +348,20 @@ def main(argv=None):
     p.add_argument("--trace", default=None, metavar="OUT.json",
                    help="write the traced trunk/batched pass's "
                         "Chrome/Perfetto trace here")
+    p.add_argument("--faults",
+                   default="corrupt=0.25,kind=sign_flip,crash=0.05,"
+                           "retries=4,seed=5",
+                   metavar="SPEC",
+                   help="chaos-pass fault spec (repro.faults."
+                        "parse_fault_spec syntax; 'none' = zero rates "
+                        "with detection armed)")
     args = p.parse_args(argv)
     run_serve_bench(requests=args.requests, gen_len=args.gen_len,
                     masters=args.masters, slots=args.slots, rate=args.rate,
                     backend=args.backend,
                     steps_per_dispatch=args.steps_per_dispatch,
-                    reps=args.reps, seed=args.seed, trace=args.trace)
+                    reps=args.reps, seed=args.seed, trace=args.trace,
+                    faults=args.faults)
 
 
 if __name__ == "__main__":

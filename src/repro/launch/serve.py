@@ -131,6 +131,17 @@ def main(argv=None) -> int:
                          "stages, sim deliveries, cache counters) and "
                          "write a Chrome/Perfetto trace here "
                          "(--coded serving)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="arm the chaos layer: comma-separated fault "
+                         "spec, e.g. 'corrupt=0.25,kind=sign_flip,"
+                         "crash=0.05,retries=4,seed=5' — injected faults "
+                         "are detected, localised and recovered during "
+                         "the serve; 'none' = zero rates with detection "
+                         "armed (--coded serving)")
+    ap.add_argument("--ls-tail", action="store_true",
+                    help="route every coded decode through the "
+                         "stacked-LS tail (bit-identical at exactly L "
+                         "rows) (--coded serving)")
     args = ap.parse_args(argv)
 
     if args.coded:
@@ -143,7 +154,8 @@ def main(argv=None) -> int:
                                coding_scope=args.coding_scope,
                                steps_per_dispatch=args.steps_per_dispatch,
                                execution=args.execution,
-                               trace=args.trace)
+                               trace=args.trace, faults=args.faults,
+                               ls_tail=args.ls_tail)
 
     import jax
     import jax.numpy as jnp

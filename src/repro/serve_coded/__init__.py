@@ -103,14 +103,23 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
                     steps_per_dispatch: int = 1,
                     execution: str = "batched",
                     backend: str = "numpy", seed: int = 0,
-                    trace=None, verbose: bool = True):
+                    trace=None, faults=None, ls_tail: bool = False,
+                    verbose: bool = True):
     """Serve one synthetic workload under each admission policy.
 
     Returns 0 on success (CLI-friendly); asserts that every decoded coded
     matmul matched the uncoded product (numpy backend).  ``trace`` writes
     a Chrome/Perfetto trace of the whole sweep (every policy's serve, as
-    sibling "serve" spans) to that path.
+    sibling "serve" spans) to that path.  ``faults`` (a fault spec string
+    or :class:`repro.faults.FaultConfig`) arms the chaos layer —
+    injected crash/drop/stale/corrupt faults are detected, localised and
+    recovered during the serve, and a per-policy fault summary prints
+    after the table.  ``ls_tail`` routes every decode through the
+    stacked-LS tail (bit-identical at exactly L rows).
     """
+    if isinstance(faults, str):
+        from ..faults import parse_fault_spec
+        faults = parse_fault_spec(faults)
     tracer = None
     if trace:
         from ..obs import Tracer
@@ -124,7 +133,7 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
                             rng=seed),
         slots_per_master=slots_per_master, coding_scope=coding_scope,
         steps_per_dispatch=steps_per_dispatch, execution=execution,
-        tracer=tracer)
+        faults=faults, ls_tail=ls_tail, tracer=tracer)
     bridge._setup_model(prompt_len + gen_len + 8)
     reqs = synthetic_requests(
         n_requests, masters=masters, vocab=bridge._model["cfg"].vocab,
@@ -137,6 +146,16 @@ def run_coded_smoke(*, arch: str = "llama3.2-1b", smoke: bool = True,
               f"steps/dispatch={steps_per_dispatch} "
               f"execution={execution} backend={backend}")
         print_policy_table(reports)
+        if faults is not None:
+            for policy, rep in reports.items():
+                f = rep.faults or {}
+                print(f"[faults] {policy}: injected={f.get('injected', 0):.0f} "
+                      f"detection={f.get('detection_rate', 1.0):.3f} "
+                      f"localization={f.get('localization_rate', 1.0):.3f} "
+                      f"quarantines={f.get('quarantines', 0):.0f} "
+                      f"readmissions={f.get('readmissions', 0):.0f} "
+                      f"retries={f.get('retries', 0):.0f} "
+                      f"modes={rep.decode_modes}")
         print("[serve_coded] all decoded coded matmuls matched the uncoded "
               "pipeline")
     if tracer is not None:

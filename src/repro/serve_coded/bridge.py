@@ -66,6 +66,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..faults import FaultConfig, QuarantineLedger, corrupt_products
 from ..obs import STAGE_CATS, Tracer, current_tracer, use_tracer
 from ..parallel.hetero import coded_row_shards, rescaled_row_shards
 from ..sim.cluster import ClusterProfile, ec2_cluster
@@ -78,7 +79,8 @@ from ..stream.queueing import (AdmissionConfig, SharePool, fair_demand_rows,
 from ..stream.config import StreamConfig
 from ..stream.replan import OnlinePlanner, ReplanPolicy, scaled_row_loads
 from .coded_linear import CodedLMHead
-from .coded_linear import DECODE_ENGINE, CodedLinear, prefix_plan_batch
+from .coded_linear import (DECODE_ENGINE, CodedLinear, prefix_plan_batch,
+                           shard_products, surplus_plan)
 from .packing import PackedStage, ShardProblem
 from .plan_cache import StepPlan, StepPlanCache
 from .requests import ServeRequest
@@ -87,7 +89,7 @@ from .trunk import HostTrunk, trunk_matmul_keys
 __all__ = ["CodedServingBridge", "ServeReport", "default_pool",
            "CODING_SCOPES", "EXECUTION_MODES"]
 
-_ARRIVE, _CHURN, _STEP = "arrive", "churn", "step"
+_ARRIVE, _CHURN, _STEP, _RETRY = "arrive", "churn", "step", "retry"
 
 
 def _scenario_ctx(sc) -> bytes:
@@ -194,14 +196,34 @@ class _BarrierExecutor:
             self._stages[kt] = memo
         return memo
 
-    def execute(self, items) -> Dict[str, np.ndarray]:
+    def _corruptor(self, stg, marks: Dict[int, str], eps: float):
+        """Byzantine-worker hook for :meth:`PackedStage.execute`: corrupt
+        the marked workers' delivered rows inside the packed product
+        buffer, attributed through the frozen prefix plans (the packed
+        row ranges are ``stg.pack.offsets`` in ``stg.problems`` order)."""
+        plans = self.plans
+
+        def mutate(Y: np.ndarray) -> None:
+            off = stg.pack.offsets
+            for i, p in enumerate(stg.problems):
+                rw = plans[p.key].row_workers()
+                blk = Y[off[i]:off[i] + rw.size]
+                for w, kind in marks.items():
+                    msk = rw == w
+                    if msk.any():
+                        blk[msk] = corrupt_products(blk[msk], kind, eps=eps)
+        return mutate
+
+    def execute(self, items, *, marks=None,
+                eps: float = 1e-3) -> Dict[str, np.ndarray]:
         """One stage: ``[(key, X), ...]`` sharing X → ``{key: out}``."""
         keys = [k for k, _ in items]
         assert all(X is items[0][1] for _, X in items), \
             "a stage's matmuls must share one right-hand operand"
         stg, solve_flag = self.stage(keys)
         outs = stg.execute(
-            items[0][1], device_products=self.device_products)
+            items[0][1], device_products=self.device_products,
+            mutate=self._corruptor(stg, marks, eps) if marks else None)
         self.solve_backends.add(stg.solve_backend)
         self.used_solve |= solve_flag
         return outs
@@ -253,6 +275,16 @@ class _Step:
     # cache disabled); execution checks it is still current before
     # trusting its frozen prefixes/stages
     entry: Optional[StepPlan] = None
+    # -- fault layer ---------------------------------------------------------
+    # Byzantine corruption drawn for this dispatch: worker → corruption
+    # kind, applied to every product block the worker's rows feed
+    fault_marks: Dict[int, str] = dataclasses.field(default_factory=dict)
+    decode_mode: str = "exact"    # worst per-task mode: exact < ls < degraded
+    faults_detected: int = 0      # tasks whose surplus residuals flagged
+    rows_rejected: int = 0        # delivered rows excluded from decodes
+    retries: int = 0              # leave-one-worker-out recovery attempts
+    corrupt_hit: bool = False     # a marked worker's rows reached a decode
+    culprits: List[int] = dataclasses.field(default_factory=list)
 
 
 class _MasterState:
@@ -298,6 +330,12 @@ class ServeReport:
     # the Chrome/Perfetto trace was written to (when serve(trace_path=...))
     per_stage_wall: Optional[Dict[str, float]] = None
     trace_path: Optional[str] = None
+    # fault layer (None unless the bridge was built with faults/ls_tail):
+    # per-step decode-mode counts and the chaos/detection/recovery totals
+    # — "degraded" steps are the explicitly-reported LS fallbacks, never
+    # silently wrong logits
+    decode_modes: Optional[Dict[str, int]] = None
+    faults: Optional[Dict[str, float]] = None
 
     def summary(self) -> Dict[str, float]:
         out = self.metrics.summary()
@@ -398,6 +436,26 @@ class CodedServingBridge:
                it.  MDS decode is exact for any covering prefix, so the
                frozen structures change no decoded value; ``False`` runs
                the historical re-plan-every-step path.
+    faults:    a :class:`repro.faults.FaultConfig` — deterministic chaos
+               (crash/drop/duplicate/stale delivery faults, Byzantine
+               product corruption) injected per (dispatch, worker), plus
+               the detect/quarantine/retry knobs.  Detection spends
+               delivered-beyond-the-prefix rows as parity residual
+               checks; a confirmed corrupt or crashed worker is
+               quarantined through the churn path (plan-cache epoch bump,
+               planner re-solve, backoff readmission) and the step
+               recovers by re-decoding from the verified row subset —
+               exactly when coverage allows, degraded least-squares
+               otherwise, never silently wrong.  The fault draws never
+               touch the delay stream: a schedule that fires no fault
+               serves bit-identically to ``faults=None``.
+    ls_tail:   decode every coded matmul by stacked least squares over
+               the covering prefix *plus* the delivered surplus rows
+               (``faults.surplus_rows`` cap) instead of discarding them —
+               the over-determined solve damps the float32 parity-encode
+               noise of the jax/pallas tails.  With no surplus (cap 0)
+               the LS plan routes through the same cached LU as the
+               square decode, so tokens are identical to ``ls_tail=False``.
     """
 
     def __init__(self, profile: Optional[ClusterProfile] = None, *,
@@ -417,7 +475,9 @@ class CodedServingBridge:
                  coded: bool = True,
                  verify: bool = True, seed: int = 0,
                  tracer: Optional[Tracer] = None,
-                 plan_cache: bool = True):
+                 plan_cache: bool = True,
+                 faults: Optional[FaultConfig] = None,
+                 ls_tail: bool = False):
         if coding_scope not in CODING_SCOPES:
             raise ValueError(f"unknown coding_scope {coding_scope!r}; "
                              f"expected one of {CODING_SCOPES}")
@@ -458,6 +518,11 @@ class CodedServingBridge:
         self.seed = int(seed)
         self.tracer = tracer if (tracer is not None and tracer.enabled) \
             else None
+        self.faults = faults
+        self.ls_tail = bool(ls_tail)
+        # the last serve's quarantine ledger (None before any faulted
+        # serve) — tests and the bench introspect offenses/readmissions
+        self.ledger: Optional[QuarantineLedger] = None
         self._plan_cache = StepPlanCache() if plan_cache else None
         self._model = None
         self._max_len = 0
@@ -616,6 +681,41 @@ class CodedServingBridge:
                       else "numpy" if not bk.has_jax()
                       else DECODE_ENGINE[self.backend])
 
+        # ---- fault layer (chaos + detect/quarantine/retry) ---------------
+        faults = self.faults if self.coded else None
+        fsched = faults.schedule() \
+            if faults is not None and faults.active else None
+        fdetect = faults is not None and faults.detect
+        faulting = fdetect or self.ls_tail \
+            or (faults is not None and faults.active)
+        ledger = QuarantineLedger(backoff_base=faults.backoff_base,
+                                  backoff_factor=faults.backoff_factor) \
+            if faults is not None else None
+        self.ledger = ledger
+        dispatch_seq = itertools.count()
+        surplus_cap = faults.surplus_rows if faults is not None else 0
+        eps = faults.corrupt_eps if faults is not None else 1e-3
+        # flag threshold: the float32 parity-encode noise of the jax/
+        # pallas product tails sits far above the float64 honest-residual
+        # floor — detection must not flag its own backend's roundoff
+        dtol = faults.residual_tol if faults is not None else 1e-4
+        if self.backend != "numpy":
+            dtol = max(dtol, 5e-4 if self.coding_scope == "head" else 2e-2)
+        decode_modes: Dict[str, int] = {}
+        _MODE_RANK = {"exact": 0, "ls": 1, "degraded": 2}
+        fstats = dict(injected=0, crashes=0, drops=0, stales=0,
+                      duplicates=0, corrupt_steps=0, corrupt_applied=0,
+                      detected_steps=0, detected=0, localized=0, retries=0,
+                      rows_rejected=0, false_flags=0)
+
+        def _gen(lin, total: int):
+            """Generator rows view (``total`` coded rows) for the verify/
+            recovery decodes — lazy for virtual parity (no dense G)."""
+            if lin.parity_storage == "virtual":
+                return bk.SystematicRows(lin.L, max(total, lin.L),
+                                         lin.parity_rows)
+            return lin.generator(max(total, lin.L))
+
         # ---- helpers bound to this serve run -----------------------------
 
         def online() -> np.ndarray:
@@ -658,6 +758,22 @@ class CodedServingBridge:
                                              waiting, held_rows)
             return queue.fair_fraction(m, k_req, b_req, held=held,
                                        demands=demands)
+
+        def quarantine_worker(w: int, t: float) -> None:
+            """Confirmed-fault response: flag the worker in the ledger and
+            take it offline through the churn path (synthetic ``crash``
+            event — in-flight steps re-time, the plan cache epoch bumps,
+            the planner re-solves), with a backoff ``join`` scheduled for
+            readmission.  Idempotent while already quarantined."""
+            if ledger is None or w <= 0 or not pool.online[w]:
+                return
+            t_back = ledger.flag(w, t)
+            heapq.heappush(heap, (t, next(seq), _CHURN,
+                                  WorkerEvent(time=t, worker=w,
+                                              kind="crash")))
+            heapq.heappush(heap, (t_back, next(seq), _CHURN,
+                                  WorkerEvent(time=t_back, worker=w,
+                                              kind="join")))
 
         # ---- hidden-state computation (scope-aware) ----------------------
 
@@ -771,6 +887,36 @@ class CodedServingBridge:
             d = bk.sample_delays(e[:, 0], e[:, 1], l_ints, k_row, b_row,
                                  sc_eff.a[m], sc_eff.u[m], sc_eff.gamma[m])
             finish = np.where(l_ints > 0, t + d, np.inf)
+            # fault injection: resolved per (dispatch, loaded worker) from
+            # the stateless hash-seeded schedule — the ExponentialBlock
+            # stream above is already drawn, so a schedule that fires
+            # nothing leaves the timing bit-identical to faults=None
+            marks: Dict[int, str] = {}
+            if fsched is not None:
+                disp = next(dispatch_seq)
+                loaded = np.nonzero(l_ints.sum(axis=0)[1:] > 0)[0] + 1
+                for w, kind in sorted(
+                        fsched.faults_at(disp, loaded).items()):
+                    fstats["injected"] += 1
+                    if kind == "crash":
+                        # dies mid-task: every undelivered shard of this
+                        # dispatch is lost and the worker leaves the pool
+                        # until its backoff readmission
+                        finish[:, w] = np.inf
+                        fstats["crashes"] += 1
+                        quarantine_worker(w, t)
+                    elif kind == "drop":
+                        finish[:, w] = np.inf
+                        fstats["drops"] += 1
+                    elif kind == "stale":
+                        finish[:, w] = t + (finish[:, w] - t) \
+                            * faults.stale_factor
+                        fstats["stales"] += 1
+                    elif kind == "duplicate":
+                        # receiver-side dedupe: numerically inert
+                        fstats["duplicates"] += 1
+                    else:                       # Byzantine corruption
+                        marks[w] = kind
             tasks = [BarrierTask(name=key, l_int=l_ints[i],
                                  finish=finish[i],
                                  need=needs[i],
@@ -780,7 +926,7 @@ class CodedServingBridge:
                                   l=l_ints.astype(np.float64), need=needs)
             if not np.isfinite(barrier.completion):
                 return None
-            return k_row, b_row, barrier, entry
+            return k_row, b_row, barrier, entry, marks
 
         def plan_timing(m: int, t: float, relax: bool):
             """``make_timing`` under a dispatch-step span: plan lookup,
@@ -849,6 +995,232 @@ class CodedServingBridge:
                             self._linears, sp.barrier)
                 frozen = sp.entry.plans
 
+            # ---- fault verification / recovery ---------------------------
+            # one diagnosis per task per step (the fix replays for every
+            # token batch of a multi-token dispatch); injection applies to
+            # every product block a marked worker's rows feed
+            marks = sp.fault_marks
+            active_faults = faulting and self.coded
+            fixes: Dict[str, tuple] = {}
+            plans_memo: Dict[str, Any] = {}
+
+            def corrupt_rows(y: np.ndarray, rw: np.ndarray) -> None:
+                """In-place Byzantine injection on one task's product
+                block (rows aligned with worker attribution ``rw``)."""
+                for w, kind in marks.items():
+                    msk = rw == w
+                    if msk.any():
+                        y[msk] = corrupt_products(y[msk], kind, eps=eps)
+
+            def serial_mutate(y, plan):
+                corrupt_rows(y, plan.row_workers())
+
+            def plan_for(key: str):
+                if ex is not None:
+                    return ex.plans[key]
+                if frozen is not None and frozen.get(key) is not None:
+                    return frozen[key]
+                p = plans_memo.get(key)
+                if p is None:
+                    task = task_map[key]
+                    p = self._linears[key].prefix_plan(
+                        task.l_int, task.finish, task.completion,
+                        assign=task.assign)
+                    plans_memo[key] = p
+                return p
+
+            def _diagnose(key, lin, task, plan, out, X):
+                """First-token verification of one coded task.
+
+                Residual-check up to ``surplus_cap`` delivered-beyond-the-
+                prefix rows against the decoded estimate; on a flag,
+                localise by leave-one-worker-out exclusion (retry budget)
+                and pick the verified recovery row subset.  Returns the
+                per-step fix ``(mode, rows, row_workers, decode_plan)``."""
+                sur = swk = np.empty(0, dtype=np.int64)
+                if surplus_cap > 0:
+                    sur, swk = surplus_plan(task.l_int, task.finish,
+                                            task.completion, plan,
+                                            cap=surplus_cap,
+                                            assign=task.assign)
+                g_rows = int(plan.total)
+                if fdetect and surplus_cap > 0:
+                    # two master-encoded audit rows (worker 0: honest by
+                    # construction) always ride along with the delivered
+                    # surplus: a *consistent* corruption of every delivered
+                    # row — e.g. a sign-flip hitting all used workers —
+                    # satisfies its own wrong decode and is undetectable
+                    # from worker deliveries alone
+                    lin.ensure_parity(g_rows + 2 - lin.L)
+                    sur = np.concatenate(
+                        [sur, np.arange(g_rows, g_rows + 2, dtype=np.int64)])
+                    swk = np.concatenate([swk, np.zeros(2, np.int64)])
+                    g_rows += 2
+                pw = plan.row_workers()
+                if marks and any(
+                        w in marks for w in set(plan.used.tolist())
+                        | set(swk.tolist())):
+                    sp.corrupt_hit = True
+                flagged = y_sur = G = None
+                if fdetect and sur.size:
+                    y_sur = shard_products(lin.gather_encoded(sur), X)
+                    if marks:
+                        corrupt_rows(y_sur, swk)
+                    G = _gen(lin, g_rows)
+                    resid = bk.plan_verify(G, sur[None]).residuals(
+                        out.T[None], y_sur[None])[0]
+                    flagged = resid > dtol
+                if flagged is None or not flagged.any():
+                    if self.ls_tail:
+                        rows_all = np.concatenate([plan.rows, sur])
+                        wk_all = np.concatenate([pw, swk])
+                        dp = bk.plan_decode_ls(_gen(lin, g_rows),
+                                               rows_all[None])
+                        return ("ls", rows_all, wk_all, dp)
+                    return ("pass", None, None, None)
+                # detection: the stacked system is inconsistent — either a
+                # flagged surplus row or a row inside the decoded prefix
+                sp.faults_detected += 1
+                fstats["detected"] += 1
+                if not marks:
+                    fstats["false_flags"] += 1
+                rows_all = np.concatenate([plan.rows, sur])
+                wk_all = np.concatenate([pw, swk])
+                y_pref = shard_products(lin.gather_encoded(plan.rows), X)
+                if marks:
+                    corrupt_rows(y_pref, pw)
+                y_all = np.concatenate([y_pref, y_sur])
+                # candidate order: workers whose surplus rows flagged
+                # first, prior offenders next, the rest after.  Each
+                # attempt spends one unit of the retry budget and models a
+                # *re-dispatch*: the candidate's rows are recomputed
+                # honestly (as if shipped to another worker), the decode
+                # re-runs on [everyone else's rows; re-dispatched rows]
+                # and the remaining deliveries re-check it — the first
+                # candidate whose exclusion restores consistency is the
+                # culprit and the re-decoded estimate is verified-exact
+                flag_wk = list(dict.fromkeys(int(w) for w in swk[flagged]))
+                rest = [w for w in dict.fromkeys(int(v) for v in wk_all)
+                        if w not in flag_wk]
+                if ledger is not None:
+                    rest = ledger.suspects_first(rest)
+                def attempt(excl: np.ndarray):
+                    """Re-dispatch the excluded rows (honest recompute —
+                    worker 0, the master's own column, never marked) and
+                    re-decode; the remaining deliveries re-check it."""
+                    rows_rd = rows_all[excl]
+                    y_rd = shard_products(lin.gather_encoded(rows_rd), X)
+                    rows_c = np.concatenate([rows_all[~excl], rows_rd])
+                    y_c = np.concatenate([y_all[~excl], y_rd])
+                    wk_c = np.concatenate(
+                        [wk_all[~excl], np.zeros(rows_rd.size, np.int64)])
+                    sp.rows_dispatched += int(rows_rd.size)
+                    x_hat = bk.plan_decode(G, rows_c[:lin.L][None]).apply(
+                        y_c[:lin.L][None], backend=self.backend)[0]
+                    resid = bk.plan_verify(
+                        G, rows_c[lin.L:][None]).residuals(
+                            x_hat[None], y_c[lin.L:][None])[0]
+                    return (not (resid > dtol).any()), rows_c, wk_c, x_hat
+
+                budget = max(faults.retry_budget, 0)
+                hit, tried = None, 0
+                for w in flag_wk + rest:
+                    # the final budget unit is reserved for the full
+                    # re-dispatch below — it is the one attempt that is
+                    # guaranteed to restore consistency
+                    if tried >= budget - 1:
+                        break
+                    tried += 1
+                    ok, rows_c, wk_c, x_hat = attempt(wk_all == w)
+                    if ok:
+                        hit = (rows_c, wk_c, x_hat)
+                        break
+                if hit is None and flag_wk:
+                    # several workers implicated at once (multiple faults,
+                    # or a prefix corruption flagging every honest surplus
+                    # row): re-dispatch all of them together, then widen
+                    # by one extra candidate at a time while budget lasts
+                    base = np.isin(wk_all, flag_wk)
+                    widen = ([None] + rest) if len(flag_wk) > 1 else rest
+                    for w in widen:
+                        if tried >= budget - 1:
+                            break
+                        tried += 1
+                        ok, rows_c, wk_c, x_hat = attempt(
+                            base if w is None else base | (wk_all == w))
+                        if ok:
+                            hit = (rows_c, wk_c, x_hat)
+                            break
+                if hit is None and tried < budget:
+                    # last unit of budget: full timeout re-dispatch — the
+                    # whole task re-executes on fresh workers (every row
+                    # honest by construction), which both recovers exactly
+                    # and lets the attribution below name every culprit
+                    tried += 1
+                    ok, rows_c, wk_c, x_hat = attempt(
+                        np.ones(rows_all.size, dtype=bool))
+                    if ok:
+                        hit = (rows_c, wk_c, x_hat)
+                sp.retries += tried
+                fstats["retries"] += tried
+                if hit is not None:
+                    rows_c, wk_c, x_hat = hit
+                    # a *verified* estimate in hand, corruption attributes
+                    # per delivered row: every worker owning a row whose
+                    # residual against x̂ flags is a confirmed culprit
+                    row_res = bk.plan_verify(G, rows_all[None]).residuals(
+                        x_hat[None], y_all[None])[0]
+                    bad_rows = row_res > dtol
+                    fstats["localized"] += 1
+                    nrej = int(bad_rows.sum())
+                    sp.rows_rejected += nrej
+                    fstats["rows_rejected"] += nrej
+                    for w in sorted(set(int(v)
+                                        for v in wk_all[bad_rows])):
+                        if w not in sp.culprits:
+                            sp.culprits.append(w)
+                    sel_r, sel_w = rows_c[:lin.L], wk_c[:lin.L]
+                    dp = bk.plan_decode(G, sel_r[None])
+                    return ("exact", sel_r, sel_w, dp)
+                # no consistent exclusion within budget: reject every row
+                # a flagged worker delivered and LS-decode the remainder —
+                # explicitly degraded (decode_mode), never silently wrong.
+                # Worker 0's audit rows are honest by construction; if they
+                # flagged, the fault is elsewhere — always keep them
+                bad = np.isin(wk_all, flag_wk) & (wk_all != 0)
+                nrej = int(bad.sum())
+                sp.rows_rejected += nrej
+                fstats["rows_rejected"] += nrej
+                sel_r, sel_w = rows_all[~bad], wk_all[~bad]
+                dp = bk.plan_decode_ls(G, sel_r[None],
+                                       allow_underdetermined=True)
+                return ("degraded", sel_r, sel_w, dp)
+
+            def fault_check(key: str, out: np.ndarray,
+                            X: np.ndarray) -> np.ndarray:
+                """Verify/recover one decoded product (called per token
+                batch; the diagnosis is made once and replayed)."""
+                lin = self._linears[key]
+                fix = fixes.get(key)
+                if fix is None:
+                    fix = _diagnose(key, lin, task_map[key], plan_for(key),
+                                    out, X)
+                    fixes[key] = fix
+                    mode = fix[0] if fix[0] != "pass" else "exact"
+                    if _MODE_RANK[mode] > _MODE_RANK[sp.decode_mode]:
+                        sp.decode_mode = mode
+                mode, sel_r, sel_w, dp = fix
+                if mode == "pass":
+                    return out
+                y = shard_products(lin.gather_encoded(sel_r), X)
+                if marks:
+                    corrupt_rows(y, sel_w)
+                if mode == "exact":
+                    z = dp.apply(y[:lin.L][None], backend=self.backend)[0]
+                else:
+                    z = dp.apply(y[None], backend=self.backend)[0]
+                return z.T
+
             def verify_coded(key: str, out: np.ndarray, X: np.ndarray):
                 lin = self._linears[key]
                 ref = lin.local(X) if self.coded else out
@@ -870,12 +1242,16 @@ class CodedServingBridge:
                 if self.coded:
                     res = lin.step(X, task.l_int, task.finish,
                                    task.completion, assign=task.assign,
-                                   plan=None if frozen is None
-                                   else frozen.get(key))
+                                   plan=plan_for(key) if active_faults
+                                   else (None if frozen is None
+                                         else frozen.get(key)),
+                                   mutate=serial_mutate if marks else None)
                     out = res.out
                     step_stats["used_solve"] |= res.used_solve
                     sp.task_solve[key] = bool(res.used_solve)
                     sp.decode_backend = res.decode_backend
+                    if active_faults:
+                        out = fault_check(key, out, X)
                 else:
                     out = lin.local(X)
                 if self.verify:
@@ -891,8 +1267,13 @@ class CodedServingBridge:
                         outs[k] = self.runner.local_matmul(k, X)
                 if coded_items:
                     if self.coded:
-                        outs.update(ex.execute(coded_items))
+                        outs.update(ex.execute(coded_items,
+                                               marks=marks or None,
+                                               eps=eps))
                         step_stats["used_solve"] |= ex.used_solve
+                        if active_faults:
+                            for k, X in coded_items:
+                                outs[k] = fault_check(k, outs[k], X)
                     else:
                         for k, X in coded_items:
                             outs[k] = self._linears[k].local(X)
@@ -953,8 +1334,16 @@ class CodedServingBridge:
                 return False
             timing = plan_timing(m, t, relax)
             if timing is None:
+                if fsched is not None:
+                    # an injected crash/drop can kill this dispatch's
+                    # coverage outright; retry on a fresh dispatch id (a
+                    # fresh fault draw) instead of deadlocking the master
+                    t_tok = float(planner.plan.t_per_master[m])
+                    dt = t_tok if math.isfinite(t_tok) and t_tok > 0 \
+                        else 1.0
+                    heapq.heappush(heap, (t + dt, next(seq), _RETRY, m))
                 return False
-            k_row, b_row, barrier, entry = timing
+            k_row, b_row, barrier, entry, marks = timing
             pool.acquire(k_row, b_row)
             sp = _Step(
                 k_row=k_row, b_row=b_row, barrier=barrier, t_start=t,
@@ -963,7 +1352,8 @@ class CodedServingBridge:
                 rows_dispatched=barrier.rows_dispatched(),
                 rows_needed=float(sum(task.need for task in barrier.tasks)),
                 used_solve=False, max_err=0.0, argmax_ok=0,
-                planned_slots=frozenset(st.slots), entry=entry)
+                planned_slots=frozenset(st.slots), entry=entry,
+                fault_marks=marks)
             st.step = sp
             if self.execution == "serial":
                 execute_step(m, sp)
@@ -987,11 +1377,17 @@ class CodedServingBridge:
             sp.version = next(version_seq)
             if timing is None:
                 sp.stalled = True
+                if fsched is not None:
+                    t_tok = float(planner.plan.t_per_master[m])
+                    dt = t_tok if math.isfinite(t_tok) and t_tok > 0 \
+                        else 1.0
+                    heapq.heappush(heap, (t + dt, next(seq), _RETRY, m))
                 return False
-            k_row, b_row, barrier, entry = timing
+            k_row, b_row, barrier, entry, marks = timing
             pool.acquire(k_row, b_row)
             sp.k_row, sp.b_row, sp.barrier = k_row, b_row, barrier
             sp.entry = entry
+            sp.fault_marks = marks
             sp.t_acquire = t
             sp.t_done = barrier.completion
             sp.rows_dispatched += barrier.rows_dispatched()
@@ -1045,6 +1441,26 @@ class CodedServingBridge:
                                     <= eps))[0]
                 if hit.size:
                     crit_worker = int(hit[0])
+            if crit_worker > 0:
+                # repeated-straggler feedback: the planner's suspect
+                # signal (shifts load off the worker at suspect_after
+                # hits) and the ledger's localisation prior
+                planner.note_critical(crit_worker)
+                if ledger is not None:
+                    ledger.note_critical(crit_worker)
+            # confirmed Byzantine culprits: quarantine through the churn
+            # path at completion time (same sim behavior for both engines
+            # — the serial engine diagnosed eagerly at dispatch)
+            for w in sp.culprits:
+                quarantine_worker(w, t)
+            decode_modes[sp.decode_mode] = \
+                decode_modes.get(sp.decode_mode, 0) + 1
+            if sp.fault_marks:
+                fstats["corrupt_steps"] += 1
+                if sp.corrupt_hit:
+                    fstats["corrupt_applied"] += 1
+                    if sp.faults_detected:
+                        fstats["detected_steps"] += 1
             step_log.append({
                 "master": m, "scope": self.coding_scope,
                 "execution": self.execution,
@@ -1058,6 +1474,9 @@ class CodedServingBridge:
                 "rows_delivered": delivered, "used_solve": sp.used_solve,
                 "redispatches": sp.redispatches, "max_err": sp.max_err,
                 "critical_task": crit_task, "critical_worker": crit_worker,
+                "decode_mode": sp.decode_mode,
+                "faults_detected": sp.faults_detected,
+                "rows_rejected": sp.rows_rejected, "retries": sp.retries,
             })
             tr = current_tracer()
             if tr is not None:
@@ -1123,9 +1542,17 @@ class CodedServingBridge:
         def on_churn(ev: WorkerEvent, t: float) -> None:
             nonlocal sc_eff
             undo = scale[ev.worker]
-            if ev.kind == "leave":
+            reason = "churn"
+            if ev.kind in ("leave", "crash"):
                 pool.set_online(ev.worker, False)
+                if ev.kind == "crash" and ledger is not None \
+                        and ev.worker in ledger.readmit_at:
+                    reason = "quarantine"
             elif ev.kind == "join":
+                if ledger is not None and ev.worker in ledger.readmit_at:
+                    # backoff readmission of a quarantined worker
+                    ledger.readmit(ev.worker)
+                    reason = "readmit"
                 pool.set_online(ev.worker, True)
             elif ev.kind == "degrade":
                 scale[ev.worker] *= ev.factor
@@ -1136,11 +1563,11 @@ class CodedServingBridge:
                 # frozen splits/prefixes derive from the pre-churn pool;
                 # in-flight steps detect their entry went stale via the
                 # epoch bump and rebuild from their retimed barriers
-                cache.invalidate("churn")
+                cache.invalidate(reason)
                 cache.set_context(_scenario_ctx(sc_eff))
             planner.ensure_plan(online(), scale, event=True)
             # re-time in-flight steps' per-layer tasks (the engine's path)
-            if ev.kind in ("leave", "degrade", "restore"):
+            if ev.kind in ("leave", "crash", "degrade", "restore"):
                 for m2 in range(self.M):
                     sp = states[m2].step
                     if sp is None or sp.stalled:
@@ -1178,6 +1605,11 @@ class CodedServingBridge:
                 on_arrive(payload, now)
             elif kind == _CHURN:
                 on_churn(payload, now)
+            elif kind == _RETRY:
+                # fault-killed dispatch: try again (no-op if the master
+                # started a step through some other event meanwhile)
+                admit(now)
+                pump(now)
             else:
                 step_done(payload, now)
 
@@ -1204,6 +1636,24 @@ class CodedServingBridge:
             tol = 5e-4 if self.coding_scope == "head" else 2e-2
         match_rate = stats["match"] / max(stats["total"], 1)
         verifying = self.verify and self.coded
+        fault_report = None
+        if faults is not None:
+            # headline rates: a corruption "applies" when the marked
+            # worker's rows actually reached some decode or surplus check
+            # (an unused worker corrupts nothing — nothing to detect)
+            fault_report = {k: float(v) for k, v in fstats.items()}
+            fault_report.update(
+                detection_rate=(fstats["detected_steps"]
+                                / fstats["corrupt_applied"])
+                if fstats["corrupt_applied"] else 1.0,
+                localization_rate=(fstats["localized"]
+                                   / fstats["detected"])
+                if fstats["detected"] else 1.0,
+                quarantines=float(ledger.quarantines),
+                readmissions=float(ledger.readmissions),
+                degraded_steps=float(decode_modes.get("degraded", 0)),
+                suspect_replans=float(planner.suspect_replans),
+            )
         return ServeReport(
             metrics=metrics,
             tokens=tokens_out,
@@ -1229,4 +1679,7 @@ class CodedServingBridge:
             plan_cache_misses=cache.misses - cache0[1] if cache else 0,
             plan_cache_invalidations=cache.invalidations - cache0[2]
             if cache else 0,
+            decode_modes=dict(decode_modes)
+            if (faults is not None or self.ls_tail) else None,
+            faults=fault_report,
         )

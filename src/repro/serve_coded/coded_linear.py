@@ -83,7 +83,8 @@ from ..obs import current_tracer
 from ..stream import backend as bk
 
 __all__ = ["CodedLinear", "CodedLMHead", "LinearStep", "HeadStep",
-           "PrefixPlan", "shard_products", "prefix_plan_batch"]
+           "PrefixPlan", "shard_products", "prefix_plan_batch",
+           "surplus_plan"]
 
 #: the decode solve engine each backend actually runs ("pallas" has encode
 #: and product kernels but no solve kernel — its decode runs the jitted
@@ -174,6 +175,58 @@ def prefix_plan_batch(linears, barrier) -> dict:
     return plans
 
 
+def surplus_plan(l_int: np.ndarray, finish: np.ndarray, t_complete: float,
+                 plan: PrefixPlan, *, cap: int = 8,
+                 assign: Optional[np.ndarray] = None):
+    """Delivered coded rows *beyond* a covering prefix — verification fuel.
+
+    MDS redundancy means a dispatch usually delivers more than L rows by
+    the barrier completion; the decode uses exactly L of them
+    (``plan.rows``) and historically discarded the rest.  The fault
+    detector instead spends up to ``cap`` of those surplus rows as parity
+    residual checks (each surplus row's product must agree with the
+    decoded estimate — see :func:`repro.stream.backend.verify_decode`),
+    and the LS tail consumes them for an over-determined solve.
+
+    Same selection math as :meth:`CodedLinear.prefix_plan` (row-range
+    layout under ``assign``, delivery cutoff ``t_complete``), earliest
+    deliveries first.  Returns ``(rows, row_workers)`` — absolute coded
+    row ids and the worker column each came from, aligned.
+    """
+    l_int = np.asarray(l_int, dtype=np.int64)
+    total = int(l_int.sum())
+    active = np.nonzero(l_int > 0)[0]
+    l_act = l_int[active]
+    if assign is None:
+        starts_act = np.concatenate([[0], np.cumsum(l_act)[:-1]]).astype(
+            np.int64)
+    else:
+        aorder = np.argsort(np.asarray(assign)[active], kind="stable")
+        starts_act = np.empty(active.size, dtype=np.int64)
+        starts_act[aorder] = np.concatenate(
+            [[0], np.cumsum(l_act[aorder])[:-1]])
+    f_act = np.asarray(finish, dtype=np.float64)[active]
+    ok = np.isfinite(f_act) & (f_act <= t_complete + 1e-9)
+    order = np.argsort(np.where(ok, f_act, np.inf), kind="stable")
+    in_prefix = np.zeros(total, dtype=bool)
+    in_prefix[plan.rows] = True
+    rows_out: List[np.ndarray] = []
+    wk_out: List[np.ndarray] = []
+    n = 0
+    for i in order:
+        if not ok[i] or n >= cap:
+            break
+        r = np.arange(starts_act[i], starts_act[i] + l_act[i])
+        keep = r[~in_prefix[r]][:cap - n]
+        if keep.size:
+            rows_out.append(keep)
+            wk_out.append(np.full(keep.size, active[i], dtype=np.int64))
+            n += keep.size
+    if not rows_out:
+        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+    return np.concatenate(rows_out), np.concatenate(wk_out)
+
+
 def shard_products(W_rows: np.ndarray, X: np.ndarray) -> np.ndarray:
     """Per-shard products ``W_rows @ X.T`` (rows, B) in float64.
 
@@ -204,6 +257,12 @@ class PrefixPlan:
     #: row order) — the seed/row-block metadata frozen plans carry so
     #: virtual-parity execution needs no encoded-row cache to replay
     parity_ctrs: Optional[np.ndarray] = None
+
+    def row_workers(self) -> np.ndarray:
+        """Worker column of every row in ``rows``, aligned — the
+        attribution the fault detector localises residual flags with."""
+        return np.repeat(self.used,
+                         [len(sl) for sl in self.slices]).astype(np.int64)
 
 
 @dataclasses.dataclass
@@ -680,7 +739,8 @@ class CodedLinear:
     def step(self, X: np.ndarray, l_int: np.ndarray, finish: np.ndarray,
              t_complete: float,
              assign: Optional[np.ndarray] = None,
-             plan: Optional[PrefixPlan] = None) -> LinearStep:
+             plan: Optional[PrefixPlan] = None,
+             mutate=None) -> LinearStep:
         """Execute one coded product for an activation batch, shard by
         shard — the serial reference the batched engine is bit-checked
         against.
@@ -689,6 +749,9 @@ class CodedLinear:
         position of the step's batch.  See :meth:`prefix_plan` for the
         timing arguments.  ``plan`` supplies a pre-computed (possibly
         cached) covering prefix; planning is skipped entirely then.
+        ``mutate(y, plan)`` is the fault injector's hook, called on the
+        freshly assembled (L, B) product block before the decode — the
+        serial twin of :meth:`PackedStage.execute`'s ``mutate``.
         """
         X = np.asarray(X, dtype=np.float64)
         tr = current_tracer()
@@ -706,6 +769,8 @@ class CodedLinear:
         with ctx:
             y = np.concatenate([shard_products(self.gather_encoded(sl), X)
                                 for sl in plan.slices])       # (L, B)
+        if mutate is not None:
+            mutate(y, plan)
         # decode_plan / apply time themselves (repro.stream.backend spans)
         z = self.decode_plan(plan.rows).apply(
             y[None], backend=self.backend)[0]

@@ -362,9 +362,18 @@ class PackedStage:
             i = j
 
     def execute(self, X: np.ndarray, *,
-                device_products: bool = False) -> Dict[str, np.ndarray]:
+                device_products: bool = False,
+                mutate=None) -> Dict[str, np.ndarray]:
         """Decode every problem of the stage for one activation batch →
-        ``{key: (B, L) exact product}``."""
+        ``{key: (B, L) exact product}``.
+
+        ``mutate``, when given, is called with the packed product buffer
+        ``Y`` (total_rows, B) after the products and before the decode —
+        the fault injector's hook for corrupting a worker's returned
+        rows exactly where a real Byzantine worker would (the per-problem
+        row ranges are ``self.pack.offsets`` / ``self.problems``).  The
+        buffer is freshly materialised here, so in-place edits never
+        touch the packed weight cache."""
         tr = current_tracer()
         if device_products and self.backend != "numpy":
             # the kernel launch inside products_device times itself
@@ -380,6 +389,8 @@ class PackedStage:
             with ctx:
                 Y = shard_products(self.pack.W_packed,
                                    np.asarray(X, dtype=np.float64))
+        if mutate is not None:
+            mutate(Y)
         use_jax = self.solve_backend == "jax"
         solve = bk.solve_jax if use_jax else None
         out: Dict[str, np.ndarray] = {}

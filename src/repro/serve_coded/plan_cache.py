@@ -87,6 +87,7 @@ class StepPlanCache:
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
+        self.invalidations_by_reason: Dict[str, int] = {}
 
     def set_context(self, ctx: bytes) -> None:
         """Fold scenario-dependent bytes into every subsequent key."""
@@ -123,6 +124,9 @@ class StepPlanCache:
         self._entries.clear()
         self.epoch += 1
         self.invalidations += 1
+        r = reason or "manual"
+        self.invalidations_by_reason[r] = \
+            self.invalidations_by_reason.get(r, 0) + 1
         tr = current_tracer()
         if tr is not None:
             tr.count("plan_cache_invalidations")

@@ -65,6 +65,10 @@ __all__ = [
     "plan_decode_ls",
     "LSDecodePlan",
     "decode_ls_batch",
+    "plan_verify",
+    "VerifyPlan",
+    "verify_decode",
+    "localize_faulty_worker",
     "solve_stacked",
     "solve_jax",
     "StackedLU",
@@ -890,12 +894,17 @@ class LSDecodePlan:
     construction; jax runs a vmapped jitted ``jnp.linalg.lstsq``.
     """
 
-    __slots__ = ("B", "L", "Gs")
+    __slots__ = ("B", "L", "Gs", "_lu")
 
     def __init__(self, B: int, L: int, Gs: np.ndarray):
         self.B = B
         self.L = L
         self.Gs = Gs                     # (B, R, L) gathered generator rows
+        # R == L is a square system: route it through the same cached-LU
+        # solve the exact decode uses, so "least squares with no surplus"
+        # is bit-identical to the square decode (tested) instead of
+        # merely close via the QR in lstsq
+        self._lu = StackedLU(Gs) if Gs.shape[1] == L else None
 
     def apply(self, y: np.ndarray, *, backend: str = "numpy") -> np.ndarray:
         """Least-squares solve for stacked received results ``y`` of shape
@@ -907,7 +916,9 @@ class LSDecodePlan:
         squeeze = y.ndim == 2
         if squeeze:
             y = y[..., None]
-        if _use_jax(backend):
+        if self._lu is not None:
+            out = self._lu.solve(y)
+        elif _use_jax(backend):
             import jax
             try:
                 with jax.experimental.enable_x64():
@@ -932,10 +943,16 @@ class LSDecodePlan:
         return out
 
 
-def plan_decode_ls(G, rows: np.ndarray) -> LSDecodePlan:
+def plan_decode_ls(G, rows: np.ndarray, *,
+                   allow_underdetermined: bool = False) -> LSDecodePlan:
     """Build the :class:`LSDecodePlan` for stacked received rows (B, R),
     R ≥ L.  ``G`` accepts the same forms as :func:`plan_decode` —
-    including :class:`SystematicRows` for virtual parity."""
+    including :class:`SystematicRows` for virtual parity.
+
+    ``allow_underdetermined`` admits R < L for the *degraded* recovery
+    path (fault verification rejected rows below coverage): ``lstsq``
+    then returns the minimum-norm solution — explicitly reported as
+    degraded by the caller, never silently exact."""
     rows = np.asarray(rows)
     glist = isinstance(G, (list, tuple))
     B, R = rows.shape
@@ -943,7 +960,7 @@ def plan_decode_ls(G, rows: np.ndarray) -> LSDecodePlan:
         L = np.asarray(G[0]).shape[-1]
     else:
         L = G.shape[-1]
-    if R < L:
+    if R < L and not allow_underdetermined:
         raise ValueError(f"least-squares decode needs >= L={L} rows per "
                          f"task, got {R}")
     if not glist and not isinstance(G, SystematicRows):
@@ -957,3 +974,124 @@ def decode_ls_batch(G, rows: np.ndarray, y: np.ndarray,
     """Least-squares decode of B tasks from ≥ L received rows each —
     the composition ``plan_decode_ls(G, rows).apply(y)``."""
     return plan_decode_ls(G, rows).apply(y, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Parity-residual verification (fault detection over surplus rows)
+# ---------------------------------------------------------------------------
+
+class VerifyPlan:
+    """X-independent structure of a batched parity-residual check.
+
+    A decode consumes exactly L delivered rows; every row delivered
+    *beyond* the covering prefix is a free integrity check on the result:
+    for surplus row r with generator row G[r],
+
+        resid_r = | y_r − G[r] · x̂ | / (1 + |y_r|)
+
+    is ≈ 0 (float noise) when worker deliveries are honest and O(1) when
+    any consumed or surplus row was corrupted.  The gathered surplus
+    generator block is frozen at plan time (cached alongside the decode's
+    :class:`StackedLU` in the serving step-plan cache); ``residuals``
+    re-checks per right-hand side.
+    """
+
+    __slots__ = ("B", "L", "Gs")
+
+    def __init__(self, B: int, L: int, Gs: np.ndarray):
+        self.B = B
+        self.L = L
+        self.Gs = Gs                     # (B, S, L) surplus generator rows
+
+    def residuals(self, x_hat: np.ndarray,
+                  y_surplus: np.ndarray) -> np.ndarray:
+        """Relative parity residual per surplus row.
+
+        ``x_hat`` (B, L) or (B, L, C); ``y_surplus`` (B, S) or (B, S, C)
+        → (B, S), the max over C of the relative residuals."""
+        x_hat = np.asarray(x_hat, dtype=np.float64)
+        y_surplus = np.asarray(y_surplus, dtype=np.float64)
+        pred = np.einsum("bsl,bl...->bs...", self.Gs, x_hat)
+        r = np.abs(y_surplus - pred) / (1.0 + np.abs(y_surplus))
+        if r.ndim == 3:
+            r = r.max(axis=-1)
+        return r
+
+
+def plan_verify(G, surplus_rows: np.ndarray) -> VerifyPlan:
+    """Build the :class:`VerifyPlan` for stacked surplus rows (B, S).
+    ``G`` accepts the same forms as :func:`plan_decode`."""
+    surplus_rows = np.asarray(surplus_rows)
+    glist = isinstance(G, (list, tuple))
+    B = surplus_rows.shape[0]
+    if glist:
+        L = np.asarray(G[0]).shape[-1]
+    else:
+        L = G.shape[-1]
+    if not glist and not isinstance(G, SystematicRows):
+        G = np.asarray(G, dtype=np.float64)
+    Gs = _gather_generator_rows(G, glist, np.arange(B), surplus_rows)
+    return VerifyPlan(B, int(L), np.asarray(Gs, dtype=np.float64))
+
+
+def verify_decode(G, rows: np.ndarray, y: np.ndarray,
+                  surplus_rows: np.ndarray, y_surplus: np.ndarray, *,
+                  tol: float = 1e-6, backend: str = "numpy"):
+    """Decode from the earliest covering prefix and parity-check every
+    surplus delivered row.
+
+    ``rows`` (B, L) and ``y`` (B, L[, C]) feed the exact decode;
+    ``surplus_rows`` (B, S) and ``y_surplus`` (B, S[, C]) are the extra
+    deliveries to check.  Returns ``(x_hat, resid, bad)``: the decoded
+    (B, L[, C]) result, the (B, S) relative residuals, and the boolean
+    flag mask ``resid > tol``.  A flagged row means the system is
+    inconsistent — either that surplus row or a row *inside* the decoded
+    prefix is corrupt; :func:`localize_faulty_worker` disambiguates.
+    """
+    x_hat = plan_decode(G, np.asarray(rows)).apply(y, backend=backend)
+    resid = plan_verify(G, surplus_rows).residuals(x_hat, y_surplus)
+    return x_hat, resid, resid > tol
+
+
+def localize_faulty_worker(G, rows: np.ndarray, y: np.ndarray,
+                           row_workers: np.ndarray, *, tol: float = 1e-6,
+                           candidates=None, backend: str = "numpy"):
+    """Leave-one-worker-out sweep over ONE task's delivered rows.
+
+    ``rows`` (R,) delivered coded-row ids (prefix + surplus, R > L),
+    ``y`` (R,) or (R, C) their products, ``row_workers`` (R,) the worker
+    that delivered each row.  For each candidate worker w (most-suspect
+    first when ``candidates`` orders them): exclude w's rows; if ≥ L
+    remain, decode from the earliest L and residual-check the rest — the
+    first exclusion that restores consistency names the culprit.
+
+    Returns ``(worker, x_hat, keep)``: the localised worker (or None
+    when no exclusion is consistent), the clean decode over the kept
+    rows, and the boolean keep-mask.  Guaranteed to localise when the
+    corrupt worker's rows number ≤ R − L − 1 (enough surplus remains to
+    re-check after exclusion); with exactly R − L the sweep still
+    localises unless the corruption hides in an uncheckable exact-L
+    remainder, which candidate ordering makes vanishingly rare.
+    """
+    rows = np.asarray(rows)
+    y = np.asarray(y, dtype=np.float64)
+    row_workers = np.asarray(row_workers)
+    L = G.shape[-1] if not isinstance(G, (list, tuple)) \
+        else np.asarray(G[0]).shape[-1]
+    if candidates is None:
+        candidates = sorted(set(int(w) for w in row_workers))
+    for w in candidates:
+        keep = row_workers != w
+        if not (~keep).any() or int(keep.sum()) < L:
+            continue
+        kept_rows = rows[keep]
+        kept_y = y[keep]
+        x_hat = plan_decode(G, kept_rows[:L][None]).apply(
+            kept_y[:L][None], backend=backend)[0]
+        if kept_rows.size > L:
+            resid = plan_verify(G, kept_rows[L:][None]).residuals(
+                x_hat[None], kept_y[L:][None])[0]
+            if (resid > tol).any():
+                continue
+        return int(w), x_hat, keep
+    return None, None, None

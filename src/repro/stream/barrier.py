@@ -16,6 +16,10 @@ Two consumers share this module so their delivery semantics cannot drift:
 Semantics (identical to the engine's historical in-line behaviour):
 
 * ``leave``    — undelivered rows on that worker are lost (delivery → ∞);
+* ``crash``    — identical delivery arithmetic to ``leave`` (a shard is
+  delivered whole or not at all, so an unscheduled death loses exactly the
+  pending deliveries); the *scheduling* difference — quarantine, backoff
+  readmission, twin promotion — lives in the engine/bridge churn handlers;
 * ``degrade``  — the *remaining* time of undelivered rows stretches by the
   event factor (work already under way is slowed, not restarted);
 * ``restore``  — the remaining time shrinks by the accumulated slowdown
@@ -49,7 +53,7 @@ def churn_finish_update(finish: np.ndarray, loads: np.ndarray, worker: int,
     w = int(worker)
     if loads[w] <= 0 or finish[w] <= t:
         return False
-    if kind == "leave":
+    if kind == "leave" or kind == "crash":
         if not np.isfinite(finish[w]):
             return False
         finish[w] = np.inf

@@ -32,6 +32,7 @@ import numpy as np
 
 from ..core import mds
 from ..core.problem import Scenario
+from ..faults import FaultConfig, corrupt_products
 from ..obs import Tracer, use_tracer
 from . import backend as bk
 from .barrier import churn_finish_update
@@ -119,6 +120,7 @@ class StreamingExecutor:
                  config: Optional[StreamConfig] = None, *,
                  churn: Sequence[WorkerEvent] = (),
                  tracer: Optional[Tracer] = None,
+                 faults: Optional[FaultConfig] = None,
                  **legacy):
         if legacy:
             if config is not None:
@@ -162,6 +164,18 @@ class StreamingExecutor:
         # no-tracer path (the < 2% disabled-overhead contract).
         self.tracer = tracer if (tracer is not None
                                  and tracer.enabled) else None
+        # fault injection: draws come from stateless hash-seeded
+        # generators (repro.faults), never the delay block — a zero-rate
+        # schedule leaves every delay bit identical to faults=None
+        self.faults = faults
+        self._fault_sched = faults.schedule() \
+            if faults is not None and faults.active else None
+        self._dispatch_seq = itertools.count()
+        self._corrupt_marks: Dict[int, Tuple[int, str]] = {}
+        self.fault_stats = {"crashes": 0, "drops": 0, "stales": 0,
+                            "duplicates": 0, "corruptions": 0,
+                            "corruptions_applied": 0, "detected": 0,
+                            "false_flags": 0}
 
         self.planner = OnlinePlanner(sc, policy=policy,
                                      replan=config.replan, rng=self.seed)
@@ -226,6 +240,18 @@ class StreamingExecutor:
                 self.loop.push(t0, ARRIVAL, i)
         for ev in self.churn:
             self.loop.push(ev.time, CHURN, ev)
+        if self._fault_sched is not None and self.faults.crash_rate > 0:
+            horizon = until
+            if not np.isfinite(horizon):
+                # arrival-driven runs have no wall clock: bound the chaos
+                # window by the expected span of max_tasks arrivals
+                rate = sum(getattr(s, "rate", 0.0) for s in self.sources)
+                horizon = 4.0 * self.max_tasks / rate if rate > 0 else 0.0
+            plan = self.planner.ensure_plan(self.online, self.scale)
+            mean_iv = float(np.mean(plan.t_per_master))
+            for ev in self._fault_sched.crash_events(
+                    range(1, self.sc.N + 1), horizon, mean_iv):
+                self.loop.push(ev.time, CHURN, ev)
         pol = self.planner.replan
         if pol.mode == "periodic":
             self.loop.push(pol.period, REPLAN, None)
@@ -350,8 +376,10 @@ class StreamingExecutor:
                                 track=f"sim:worker{w}",
                                 args={"worker": w, "kind": ev.kind,
                                       "factor": ev.factor})
-        if ev.kind == "leave":
+        if ev.kind == "leave" or ev.kind == "crash":
             self.pool.set_online(w, False)
+            if ev.kind == "crash":
+                self.fault_stats["crashes"] += 1
         elif ev.kind == "join":
             self.pool.set_online(w, True)
         elif ev.kind == "degrade":
@@ -367,7 +395,7 @@ class StreamingExecutor:
         # the planner) must drop it even when the replan policy decides
         # the drift is too small to re-solve
         self.planner.notify_pool_change()
-        if ev.kind in ("leave", "degrade", "restore"):
+        if ev.kind in ("leave", "crash", "degrade", "restore"):
             for fl in self._attempts():
                 if self._alive(fl) and churn_finish_update(
                         fl.finish, fl.l_row, w, ev.kind, t,
@@ -404,6 +432,7 @@ class StreamingExecutor:
     def _drain_run(self, until: float) -> None:
         fast = (len(self.queue) == 0 and not self.twins
                 and self.tracer is None
+                and self._fault_sched is None
                 and self.numerics != "verify"
                 and not self.planner.needs_all
                 and not self.queue.uses_fairness
@@ -657,6 +686,27 @@ class StreamingExecutor:
                              straggle_factor=self.straggle_factor,
                              straggle_u=e[2] if self.straggle_p > 0 else None)
         finish = np.where(l_row > 0, t + d, np.inf)
+        if self._fault_sched is not None:
+            disp = next(self._dispatch_seq)
+            loaded = np.nonzero(l_row[1:] > 0)[0] + 1
+            for w, kind in self._fault_sched.faults_at(disp, loaded).items():
+                if kind == "drop" or kind == "crash":
+                    # a crash drawn at dispatch granularity loses this
+                    # shard; the worker-level death/readmission process is
+                    # the pre-generated crash churn stream in _run_loop
+                    finish[w] = np.inf
+                    self.fault_stats[
+                        "crashes" if kind == "crash" else "drops"] += 1
+                elif kind == "stale":
+                    finish[w] = t + (finish[w] - t) * self.faults.stale_factor
+                    self.fault_stats["stales"] += 1
+                elif kind == "duplicate":
+                    # the receiver keys deliveries by (task, worker): a
+                    # replayed shard overwrites itself — counted, inert
+                    self.fault_stats["duplicates"] += 1
+                else:                                # corruption kinds
+                    self._corrupt_marks[tid] = (int(w), kind)
+                    self.fault_stats["corruptions"] += 1
         comp = float(bk.completion_times(
             finish[None], l_row[None], np.array([self.sc.L[m]]),
             needs_all=self.planner.needs_all, backend="numpy")[0])
@@ -763,6 +813,9 @@ class StreamingExecutor:
         tw = self.twins.pop(fl.tid, None)
         if tw is not None:
             self.inflight[fl.tid] = tw        # promote the surviving twin
+            # it is the task's primary attempt now — a later straggle may
+            # legitimately speculate a fresh twin against it
+            tw.speculative = False
             return
         rec = self.tasks[fl.tid]
         rec.retries += 1
@@ -869,8 +922,13 @@ class StreamingExecutor:
                 if tr is not None else contextlib.nullcontext()
             with ctx:
                 Z, y_full = self._verify_products(G, A, x)  # (B, L), (B, Lt)
+            detect = self.faults is not None and self.faults.detect
+            cap = int(self.faults.surplus_rows) if detect else 0
             rows = np.empty((B, L), dtype=np.int64)
             valid = np.ones(B, dtype=bool)
+            # per-task delivered rows beyond the prefix + row→worker
+            # attribution: the fault detector's parity-check budget
+            extras: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
             for i, (fl, lint) in enumerate(zip(fls, li)):
                 active = np.nonzero(lint > 0)[0]
                 slices = mds.split_loads(int(lint[active].sum()), lint[active])
@@ -878,22 +936,39 @@ class StreamingExecutor:
                                             fl.finish[active], np.inf),
                                    kind="stable")
                 got: List[np.ndarray] = []
+                gotw: List[np.ndarray] = []
                 acc = 0
                 for j in order:
                     if not np.isfinite(fl.finish[active[j]]) or \
                             fl.finish[active[j]] > fl.completion + 1e-9:
                         continue
                     got.append(slices[j])
+                    gotw.append(np.full(slices[j].size, active[j],
+                                        dtype=np.int64))
                     acc += slices[j].size
-                    if acc >= L:
+                    if acc >= L + cap:
                         break
                 if acc < L:
                     valid[i] = False
                     continue
-                rows[i] = np.concatenate(got)[:L]
+                allr = np.concatenate(got)[:L + cap]
+                rows[i] = allr[:L]
+                if self.faults is not None:
+                    extras[i] = (allr, np.concatenate(gotw)[:L + cap])
             idx = np.nonzero(valid)[0]
             if idx.size:
                 y_rows = np.take_along_axis(y_full[idx], rows[idx], axis=1)
+                if self._corrupt_marks:
+                    for pos, i in enumerate(idx):
+                        mark = self._corrupt_marks.get(fls[i].tid)
+                        if mark is None:
+                            continue
+                        w, kind = mark
+                        msk = extras[i][1][:L] == w
+                        if msk.any():
+                            y_rows[pos, msk] = corrupt_products(
+                                y_rows[pos, msk], kind,
+                                eps=self.faults.corrupt_eps)
                 ctx = tr.span(f"verify:m{m}:decode", cat="verify",
                               args={"tasks": int(idx.size)}) \
                     if tr is not None else contextlib.nullcontext()
@@ -908,5 +983,44 @@ class StreamingExecutor:
                     rec = self.tasks[fls[i].tid]
                     rec.max_err = float(err[j])
                     rec.decode_ok = bool(err[j] <= tol[j])
+                if detect:
+                    self._detect_corruptions(G, fls, idx, extras, y_full,
+                                             y_hat, L)
             for i in np.nonzero(~valid)[0]:
                 self.tasks[fls[i].tid].decode_ok = False
+
+    def _detect_corruptions(self, G: np.ndarray, fls: List[_InFlight],
+                            idx: np.ndarray, extras: Dict, y_full: np.ndarray,
+                            y_hat: np.ndarray, L: int) -> None:
+        """Residual-check each task's surplus deliveries against its decode.
+
+        A corrupted delivery either fed the decode (honest surplus rows
+        then disagree with the skewed x̂) or sits in the surplus itself
+        (its own residual blows up) — either way the task flags without
+        ever consulting the ground truth.  Tasks whose marked worker
+        delivered nothing in the covering window injected nothing; a flag
+        there (or on an unmarked task) counts as a false positive."""
+        tolr = float(self.faults.residual_tol)
+        for pos, i in enumerate(idx):
+            allr, allw = extras[i]
+            sr, sw = allr[L:], allw[L:]
+            if sr.size == 0:
+                continue
+            mark = self._corrupt_marks.get(fls[i].tid)
+            y_sur = y_full[i, sr].copy()
+            applied = False
+            if mark is not None:
+                w, kind = mark
+                applied = bool((allw == w).any())
+                msk = sw == w
+                if msk.any():
+                    y_sur[msk] = corrupt_products(
+                        y_sur[msk], kind, eps=self.faults.corrupt_eps)
+            resid = np.abs(y_sur - G[sr] @ y_hat[pos]) / (1.0 + np.abs(y_sur))
+            flagged = bool((resid > tolr).any())
+            if mark is not None and applied:
+                self.fault_stats["corruptions_applied"] += 1
+                if flagged:
+                    self.fault_stats["detected"] += 1
+            elif flagged:
+                self.fault_stats["false_flags"] += 1

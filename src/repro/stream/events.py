@@ -227,8 +227,13 @@ class WorkerEvent:
     """A scheduled change to worker ``worker`` (1-based column) at ``time``.
 
     kind:
-      ``leave``    worker goes offline; undelivered in-flight rows are lost
-                   (redundancy or re-dispatch covers them).
+      ``leave``    worker goes offline *gracefully* (scheduled departure);
+                   undelivered in-flight rows are lost (redundancy or
+                   re-dispatch covers them).
+      ``crash``    worker dies mid-task: same delivery loss as ``leave``
+                   but unscheduled — typically produced by a fault
+                   schedule (:mod:`repro.faults`), paired with a later
+                   backoff ``join`` for recovery, and counted separately.
       ``join``     worker (re)joins the pool for new tasks.
       ``degrade``  worker slows down by ``factor`` (a×f, u/f, γ/f), applied
                    to new tasks and to the *remaining* time of in-flight
@@ -241,7 +246,7 @@ class WorkerEvent:
     factor: float = 2.0
 
     def __post_init__(self):
-        if self.kind not in ("leave", "join", "degrade", "restore"):
+        if self.kind not in ("leave", "crash", "join", "degrade", "restore"):
             raise ValueError(f"unknown churn kind {self.kind!r}")
         if self.kind == "degrade" and self.factor <= 0:
             raise ValueError("degrade factor must be > 0")

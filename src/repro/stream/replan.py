@@ -74,6 +74,15 @@ class ReplanPolicy:
                      kept while kkt_residual(repaired) - kkt_residual(last
                      full solve) <= repair_tol.  Set to -1.0 to force the
                      fallback on every repair attempt (testing hook).
+    suspect_after:   online straggler signal — once a worker has been the
+                     *critical* delivery (tracer attribution: its shard
+                     closed the covering prefix) this many times, the
+                     planner treats it as slowed by ``suspect_penalty``
+                     when solving (load shifts off the binding worker)
+                     and counts a ``suspect_replans``.  0 disables.
+    suspect_penalty: pessimism factor applied to a suspected worker's
+                     effective speed inside the solve (planning belief
+                     only — the simulated delays are untouched).
     """
     mode: ReplanMode = ReplanMode.INCREMENTAL
     period: float = 50.0
@@ -81,6 +90,8 @@ class ReplanPolicy:
     use_sca: bool = False
     sca_iters: int = 6
     repair_tol: float = 0.25
+    suspect_after: int = 0
+    suspect_penalty: float = 1.5
 
     def __post_init__(self):
         try:
@@ -145,6 +156,11 @@ class OnlinePlanner:
         self.solve_wall: list = []  # seconds per full solve (perf_counter)
         self.repair_wall: list = []  # seconds per accepted repair
         self._subscribers: list = []
+        # online suspect/straggler signal (critical-worker attribution)
+        self.crit_counts: dict = {}        # worker -> critical attributions
+        self.suspect_replans = 0           # plan replacements it caused
+        self._suspect_scale: Optional[np.ndarray] = None
+        self._suspect_pending = False
 
     # -- invalidation hooks --------------------------------------------------
 
@@ -176,6 +192,29 @@ class OnlinePlanner:
         drift below threshold)."""
         for fn in self._subscribers:
             fn()
+
+    # -- online suspect signal (critical-worker attribution) -----------------
+
+    def note_critical(self, worker: int) -> None:
+        """Feed one critical-delivery attribution (the tracer's per-task /
+        per-step ``critical_worker``): the shard that closed the covering
+        prefix came from ``worker``.  A repeatedly-critical worker is the
+        binding constraint of the paper's min-max objective; once it has
+        been critical ``ReplanPolicy.suspect_after`` times, the next
+        ``ensure_plan`` treats it as ``suspect_penalty``× slower — a pure
+        planning belief that shifts load off it — and the resulting plan
+        replacement is counted in ``suspect_replans``."""
+        w = int(worker)
+        after = int(self.replan.suspect_after)
+        if w <= 0 or after <= 0:
+            return
+        self.crit_counts[w] = self.crit_counts.get(w, 0) + 1
+        if self.crit_counts[w] != after:
+            return                       # fires once per worker per run
+        if self._suspect_scale is None:
+            self._suspect_scale = np.ones(self.base.N + 1)
+        self._suspect_scale[w] = self.replan.suspect_penalty
+        self._suspect_pending = True
 
     # -- pool state → effective scenario ------------------------------------
 
@@ -219,6 +258,10 @@ class OnlinePlanner:
         """
         online = np.asarray(online, dtype=bool)
         scale = np.asarray(scale, dtype=np.float64)
+        if self._suspect_scale is not None:
+            # the suspect belief changes the key too, so crossing the
+            # threshold naturally invalidates the short-circuit below
+            scale = scale * self._suspect_scale
         key = online.tobytes() + scale.tobytes()
         if self._plan is not None and key == self._key:
             return self._plan
@@ -288,6 +331,9 @@ class OnlinePlanner:
         else:
             self.repairs += 1
         self.replans += 1
+        if self._suspect_pending:
+            self.suspect_replans += 1
+            self._suspect_pending = False
         if had_plan:
             for fn in self._subscribers:
                 fn()

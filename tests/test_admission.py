@@ -336,3 +336,43 @@ def test_policy_runs_replay_deterministically():
         a, b = run(policy), run(policy)
         assert a.summary() == b.summary()
         assert a.to_records() == b.to_records()
+
+
+def test_crashed_original_promotes_twin_as_primary():
+    """Regression pin for twin promotion: when the original attempt dies
+    (a crash fault or churn drives its completion to +inf) while a
+    speculative twin races, the twin is promoted to the task's primary
+    attempt — ``speculative`` must flip back to False so a *later*
+    straggle can legitimately race a fresh twin against it — and the
+    dropped attempt's shares are released without touching the twin's."""
+    sc = _scenario(M=1, N=4, L=64.0, seed=20)
+    srcs = [TraceProcess(0, [0.0])]
+    ex = StreamingExecutor(
+        sc, srcs, config=StreamConfig(
+            policy="fractional", rng=1,
+            admission=AdmissionConfig(speculate_factor=1.1)))
+    ex._ran = True
+    ex.max_tasks = 1
+    ex._on_arrival(0, 0.0)
+    fl = ex.inflight[0]
+    tw = ex._dispatch(0, 1.0, min_fraction=1e-3)
+    assert tw is not None
+    tw.speculative = True
+    ex.twins[0] = tw
+    held = ex.pool.k_used.copy()
+    # every delivery of the original is lost (what a crash fault does to
+    # its finish times): the retime must drop it and promote the twin
+    fl.finish[:] = np.inf
+    ex._retime(fl, 2.0)
+    assert ex.inflight[0] is tw and 0 not in ex.twins
+    assert tw.speculative is False            # promoted = primary again
+    # the original's worker shares are released; only the twin's remain
+    # (column 0 is the master's own compute and is never ledgered)
+    np.testing.assert_allclose(ex.pool.k_used[1:], tw.k_row[1:], atol=1e-12)
+    # the survivor completes the task exactly once, ledger drains to zero
+    ex._on_completion((0, tw.version), tw.completion)
+    assert ex.metrics.summary()["tasks_completed"] == 1
+    assert (ex.pool.k_used == 0).all() and (ex.pool.b_used == 0).all()
+    recs = ex.metrics.to_records()
+    assert [r["tid"] for r in recs] == [0]
+    assert recs[0]["rows_delivered"] >= recs[0]["rows_needed"] - 1e-6

@@ -1,0 +1,289 @@
+"""Fault injection + parity-verified recovery: the chaos layer.
+
+The contract under test, end to end: a seeded :class:`FaultConfig`
+schedule injects crashes / drops / stales / duplicates (delivery faults)
+and bit-flip / sign-flip / scaled corruptions (Byzantine faults) into
+the serving bridge and the streaming engine.  Delivery faults only
+change *which rows arrive when* — MDS decode is exact from any covering
+prefix, so greedy tokens must stay bit-identical to the fault-free
+serve.  Corruptions are detected by residual-checking surplus deliveries
+(plus two master-encoded audit rows) against the decoded estimate,
+localised by retry-as-re-dispatch exclusion, the culprits quarantined
+with exponential backoff, and the step decoded back to the exact
+product — or, when the retry budget is exhausted, explicitly degraded
+to a stacked-LS decode on the verified row subset.  Never silently
+wrong.
+"""
+import numpy as np
+import pytest
+
+from repro.faults import (CORRUPTION_FAULTS, DELIVERY_FAULTS, FaultConfig,
+                          FaultEvent, FaultSchedule, QuarantineLedger,
+                          corrupt_products, parse_fault_spec)
+from repro.serve_coded import CodedServingBridge, synthetic_requests
+from repro.stream import (AdmissionConfig, PoissonProcess, StreamConfig,
+                          StreamingExecutor)
+from repro.core.problem import Scenario
+
+
+# ---------------------------------------------------------------------------
+# Schedule / ledger / spec units
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_is_deterministic_and_stateless():
+    cfg = FaultConfig(seed=7, crash_rate=0.1, corrupt_rate=0.2,
+                      corrupt_kind="sign_flip")
+    a, b = cfg.schedule(), cfg.schedule()
+    workers = [1, 2, 3, 4, 5]
+    draws = [a.faults_at(d, workers) for d in range(50)]
+    # same config -> same draws, in any evaluation order
+    assert [b.faults_at(d, workers) for d in reversed(range(50))] \
+        == list(reversed(draws))
+    assert any(draws), "rates this high must fire somewhere in 50 dispatches"
+
+
+def test_zero_rate_schedule_is_inactive():
+    cfg = FaultConfig(seed=0)
+    assert not cfg.active
+    sched = FaultSchedule(cfg)
+    assert all(sched.faults_at(d, [1, 2, 3]) == {} for d in range(20))
+
+
+def test_trace_events_override_draws():
+    cfg = FaultConfig(seed=0, trace=(FaultEvent(3, 2, "crash"),
+                                     FaultEvent(5, 1, "bit_flip")))
+    sched = cfg.schedule()
+    assert sched.faults_at(3, [1, 2]) == {2: "crash"}
+    assert sched.faults_at(5, [1, 2]) == {1: "bit_flip"}
+    assert sched.faults_at(4, [1, 2]) == {}
+
+
+def test_quarantine_ledger_backoff_and_readmission():
+    led = QuarantineLedger(backoff_base=100.0, backoff_factor=2.0)
+    t1 = led.flag(3, 10.0)
+    assert t1 == pytest.approx(110.0)
+    assert led.quarantines == 1 and 3 in led.readmit_at
+    led.readmit(3)
+    assert led.readmissions == 1 and 3 not in led.readmit_at
+    # a repeat offender backs off exponentially
+    t2 = led.flag(3, 200.0)
+    assert t2 == pytest.approx(400.0)
+    # critical-path attribution feeds the suspect ordering
+    led.note_critical(5)
+    led.note_critical(5)
+    led.note_critical(2)
+    order = led.suspects_first([1, 2, 5])
+    assert order.index(5) < order.index(2) < order.index(1)
+
+
+def test_parse_fault_spec_round_trip():
+    cfg = parse_fault_spec("corrupt=0.3,kind=sign_flip,crash=0.05,"
+                           "retries=3,seed=11,surplus=6,tol=1e-5")
+    assert cfg.corrupt_rate == 0.3 and cfg.corrupt_kind == "sign_flip"
+    assert cfg.crash_rate == 0.05 and cfg.retry_budget == 3
+    assert cfg.seed == 11 and cfg.surplus_rows == 6
+    assert cfg.residual_tol == 1e-5
+    assert not parse_fault_spec("none").active
+    with pytest.raises(ValueError):
+        parse_fault_spec("bogus=1")
+
+
+def test_corrupt_products_kinds_are_deterministic_and_nontrivial():
+    y = np.arange(1.0, 13.0).reshape(3, 4)
+    for kind in CORRUPTION_FAULTS:
+        a = corrupt_products(y.copy(), kind, eps=1e-3)
+        b = corrupt_products(y.copy(), kind, eps=1e-3)
+        assert np.array_equal(a, b), kind
+        assert not np.array_equal(a, y), kind
+
+
+# ---------------------------------------------------------------------------
+# Streaming engine under faults
+# ---------------------------------------------------------------------------
+
+def _scenario(M=2, N=8, L=96.0, seed=3):
+    rng = np.random.default_rng(seed)
+    a = np.zeros((M, N + 1))
+    a[:, 0] = 0.5
+    a[:, 1:] = rng.uniform(0.2, 0.4, size=(M, N))
+    return Scenario(a=a, u=1 / a, gamma=2 / a, L=np.full(M, L))
+
+
+def _run_stream(faults, max_tasks=24, seed=5):
+    sc = _scenario()
+    srcs = [PoissonProcess(m, rate=0.02, seed=1) for m in range(sc.M)]
+    ex = StreamingExecutor(sc, srcs,
+                           config=StreamConfig(policy="fractional", rng=seed),
+                           faults=faults)
+    ms = ex.run(max_tasks=max_tasks)
+    return ex, ms
+
+
+def test_engine_zero_rate_faults_is_bit_identical():
+    _, base = _run_stream(None)
+    _, armed = _run_stream(FaultConfig(seed=0))
+    rb, ra = base.to_records(), armed.to_records()
+    assert len(rb) == len(ra)
+    for x, y in zip(rb, ra):
+        assert x == y
+
+
+def test_engine_survives_crash_and_drop_chaos():
+    ex, ms = _run_stream(FaultConfig(seed=9, crash_rate=0.05, drop_rate=0.1,
+                                     stale_rate=0.1))
+    recs = ms.to_records()
+    assert len(recs) == 24                       # every task still completes
+    for r in recs:
+        assert np.isfinite(r["t_complete"])
+        assert r["rows_delivered"] >= r["rows_needed"] - 1e-6
+    stats = ex.fault_stats
+    assert sum(stats.values()) > 0
+    assert ms.utilization().max() <= 1.0 + 1e-6  # ledger survives the churn
+
+
+# ---------------------------------------------------------------------------
+# Serving bridge: chaos matrix
+# ---------------------------------------------------------------------------
+
+def _bridge(*, execution="batched", backend="numpy", **kw):
+    b = CodedServingBridge(
+        masters=2, slots_per_master=2, coding_scope="trunk",
+        backend=backend, execution=execution,
+        admission=AdmissionConfig(policy="edf"), **kw)
+    b._setup_model(16 + 3 + 8)
+    return b
+
+
+def _reqs(b, n=4, gen=3, seed=0):
+    return synthetic_requests(n, masters=2, vocab=b._model["cfg"].vocab,
+                              prompt_len=16, gen_len=gen, rate=0.02,
+                              seed=seed)
+
+
+_CLEAN = {}
+
+
+def _clean_tokens(execution, backend="numpy"):
+    key = (execution, backend)
+    if key not in _CLEAN:
+        b = _bridge(execution=execution, backend=backend)
+        rep = b.serve(_reqs(b))
+        _CLEAN[key] = {r: list(t) for r, t in rep.tokens.items()}
+    return _CLEAN[key]
+
+
+def _serve_faulted(fc, *, execution="batched", backend="numpy", **kw):
+    b = _bridge(execution=execution, backend=backend, faults=fc, **kw)
+    rep = b.serve(_reqs(b))
+    got = {r: list(t) for r, t in rep.tokens.items()}
+    return rep, got == _clean_tokens(execution, backend)
+
+
+@pytest.mark.parametrize("execution", ["serial", "batched"])
+@pytest.mark.parametrize("kind", DELIVERY_FAULTS)
+def test_delivery_faults_keep_tokens_bit_identical(kind, execution):
+    """Crash / drop / stale / duplicate only change which rows arrive
+    when; the decode is exact from whatever covers, so tokens match."""
+    rates = {"crash": dict(crash_rate=0.1), "drop": dict(drop_rate=0.2),
+             "stale": dict(stale_rate=0.3),
+             "duplicate": dict(duplicate_rate=0.3)}[kind]
+    rep, same = _serve_faulted(FaultConfig(seed=3, **rates),
+                               execution=execution)
+    assert same and rep.decode_ok
+    assert (rep.decode_modes or {}).get("degraded", 0) == 0
+    assert rep.faults["injected"] > 0
+
+
+@pytest.mark.parametrize("execution", ["serial", "batched"])
+@pytest.mark.parametrize("kind", CORRUPTION_FAULTS)
+def test_corruption_detected_localised_and_recovered(kind, execution):
+    """The chaos matrix headline: every applied corruption is detected
+    (rate >= 0.99), localised to the marked worker, the culprit
+    quarantined, and the decode recovered bit-identically — or the step
+    is explicitly degraded.  Never silently wrong."""
+    fc = FaultConfig(seed=5, corrupt_rate=0.3, corrupt_kind=kind,
+                     retry_budget=4)
+    rep, same = _serve_faulted(fc, execution=execution)
+    f = rep.faults
+    degraded = (rep.decode_modes or {}).get("degraded", 0)
+    assert same or degraded > 0                 # never silently wrong
+    if f["corrupt_applied"] > 0:
+        assert f["detection_rate"] >= 0.99
+        assert f["localization_rate"] >= 0.99
+        assert f["quarantines"] > 0
+        # workers flagged near the end may still be serving their backoff
+        assert f["readmissions"] <= f["quarantines"]
+    assert f["false_flags"] == 0
+
+
+def test_corruption_recovers_on_jax_backend():
+    fc = FaultConfig(seed=5, corrupt_rate=0.3, corrupt_kind="sign_flip",
+                     retry_budget=4)
+    rep, same = _serve_faulted(fc, backend="jax")
+    assert same and rep.decode_ok
+    assert rep.faults["detection_rate"] >= 0.99
+
+
+def test_fault_free_schedule_with_detection_armed_is_identity():
+    """Zero rates + detection on: the residual checks all pass, nothing
+    is rejected, tokens stay bit-identical, and the fault report says
+    so (rates 1.0 by convention when nothing was applied)."""
+    for execution in ("serial", "batched"):
+        rep, same = _serve_faulted(FaultConfig(seed=0), execution=execution)
+        assert same and rep.decode_ok
+        f = rep.faults
+        assert f["injected"] == 0 and f["false_flags"] == 0
+        assert f["detection_rate"] == 1.0 and f["localization_rate"] == 1.0
+        assert set(rep.decode_modes) == {"exact"}
+
+
+def test_exhausted_retry_budget_degrades_explicitly():
+    """retry_budget=0 disables re-dispatch: corrupt steps must be
+    *reported* as degraded (LS on the verified row subset), with the
+    rejected rows counted — the never-silently-wrong escape hatch."""
+    fc = FaultConfig(seed=5, corrupt_rate=0.3, corrupt_kind="sign_flip",
+                     retry_budget=0)
+    rep, same = _serve_faulted(fc)
+    if not same:
+        assert (rep.decode_modes or {}).get("degraded", 0) > 0
+        assert rep.faults["rows_rejected"] > 0
+    assert rep.faults["detection_rate"] >= 0.99
+
+
+def test_quarantine_and_backoff_readmission_cycle():
+    """Crash faults quarantine the worker (synthetic leave churn), the
+    backoff timer readmits it, and the serve still matches clean."""
+    rep, same = _serve_faulted(FaultConfig(seed=3, crash_rate=0.1,
+                                           backoff_base=500.0))
+    f = rep.faults
+    assert same and f["quarantines"] > 0
+    assert f["readmissions"] == f["quarantines"]
+
+
+def test_ls_tail_is_bit_identical_at_exact_rows():
+    """plan_decode_ls at rows == L routes through the same stacked LU as
+    plan_decode — forcing every decode down the LS tail must not move a
+    single token."""
+    for execution in ("serial", "batched"):
+        b = _bridge(execution=execution, ls_tail=True)
+        rep = b.serve(_reqs(b))
+        got = {r: list(t) for r, t in rep.tokens.items()}
+        assert got == _clean_tokens(execution)
+        assert rep.decode_ok
+        assert set(rep.decode_modes) == {"ls"}
+
+
+def test_fault_report_schema():
+    rep, _ = _serve_faulted(FaultConfig(seed=5, corrupt_rate=0.2,
+                                        corrupt_kind="bit_flip",
+                                        retry_budget=4))
+    f = rep.faults
+    for key in ("injected", "crashes", "drops", "stales", "duplicates",
+                "corrupt_steps", "corrupt_applied", "detected", "localized",
+                "retries", "rows_rejected", "false_flags", "detection_rate",
+                "localization_rate", "quarantines", "readmissions",
+                "degraded_steps", "suspect_replans"):
+        assert key in f, key
+    per_step = [s for s in rep.steps if "decode_mode" in s]
+    assert per_step and all(s["decode_mode"] in ("exact", "ls", "degraded")
+                            for s in per_step)

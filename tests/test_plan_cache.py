@@ -166,3 +166,40 @@ def test_pool_k_used_gauge_peak_is_wired():
     # final release the pool is empty again
     assert s["counters"]["pool_k_used"] == 0.0
     assert s["counters"]["plan_cache_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Quarantine / readmission epoch invalidation
+# ---------------------------------------------------------------------------
+
+def _chaos():
+    from repro.faults import FaultConfig
+    return FaultConfig(seed=5, corrupt_rate=0.3, corrupt_kind="sign_flip",
+                       retry_budget=4)
+
+
+def test_quarantine_and_readmission_invalidate_cache_epoch():
+    """A localised corruption quarantines the culprit (synthetic crash
+    churn) and later readmits it — both events must bump the cache epoch
+    under their own reason so in-flight steps rebuild from the retimed
+    barrier instead of trusting plans frozen for the old pool."""
+    b = _bridge(faults=_chaos())
+    rep = b.serve(_reqs(b))
+    assert rep.faults["quarantines"] > 0
+    by_reason = b._plan_cache.invalidations_by_reason
+    assert by_reason.get("quarantine", 0) > 0
+    assert by_reason.get("readmit", 0) > 0
+    assert rep.plan_cache_invalidations == sum(by_reason.values())
+
+
+def test_cached_serve_matches_uncached_through_quarantine():
+    """Epoch invalidation keeps the cache exact under chaos: greedy
+    tokens through a quarantine/readmission cycle are bit-identical with
+    and without the StepPlanCache, on both engines."""
+    for execution in ("batched", "serial"):
+        bc = _bridge(execution=execution, faults=_chaos())
+        bu = _bridge(execution=execution, faults=_chaos(), plan_cache=False)
+        tc = bc.serve(_reqs(bc)).tokens
+        tu = bu.serve(_reqs(bu)).tokens
+        assert {r: list(t) for r, t in tc.items()} \
+            == {r: list(t) for r, t in tu.items()}
